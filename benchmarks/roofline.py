@@ -1,0 +1,74 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads results/dryrun/*.json, emits a per-(arch, shape, mesh) table of the
+three roofline terms, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs and
+the headline roofline fraction.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+_DEFAULT = ("results/dryrun_opt"
+            if os.path.isdir("results/dryrun_opt") else "results/dryrun")
+RESULTS = os.environ.get("DRYRUN_DIR", _DEFAULT)
+
+
+def load_records(mesh_tag: str = "pod16x16") -> List[Dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(RESULTS, f"*{mesh_tag}.json"))):
+        r = json.load(open(p))
+        r.setdefault("mesh_tag", mesh_tag)
+        out.append(r)
+    return out
+
+
+def table_rows(mesh_tag: str = "pod16x16") -> List[Dict]:
+    rows = []
+    for r in load_records(mesh_tag):
+        if r.get("status") == "skipped":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": "skipped", "reason": r["reason"]})
+            continue
+        if r.get("status") != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": r.get("status")})
+            continue
+        rl = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "status": "ok",
+            "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+            "collective_s": rl["collective_s"],
+            "dominant": rl["dominant"], "bound_s": rl["bound_s"],
+            "useful_fraction": rl["useful_fraction"],
+            "roofline_fraction": rl["achievable_mfu"],
+            "fits_16g": r.get("fits_v5e_16g"),
+            "collective_GB": round(r["collective_total_bytes"] / 1e9, 2),
+        })
+    return rows
+
+
+def print_table(mesh_tag: str = "pod16x16"):
+    rows = table_rows(mesh_tag)
+    hdr = (f"{'arch':26s} {'shape':12s} {'comp_s':>8s} {'mem_s':>9s} "
+           f"{'coll_s':>8s} {'dominant':>12s} {'useful':>7s} "
+           f"{'roofl%':>7s} {'fits':>5s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if r["status"] != "ok":
+            print(f"{r['arch']:26s} {r['shape']:12s} "
+                  f"[{r['status']}] {r.get('reason','')[:60]}")
+            continue
+        print(f"{r['arch']:26s} {r['shape']:12s} {r['compute_s']:8.4f} "
+              f"{r['memory_s']:9.4f} {r['collective_s']:8.4f} "
+              f"{r['dominant']:>12s} {r['useful_fraction']:7.3f} "
+              f"{100*r['roofline_fraction']:6.2f}% "
+              f"{str(r['fits_16g']):>5s}")
+
+
+if __name__ == "__main__":
+    import sys
+    print_table(sys.argv[1] if len(sys.argv) > 1 else "pod16x16")

@@ -1,0 +1,199 @@
+"""Benchmark harness — one benchmark per paper table/figure + kernel
+micro-benches. Prints ``name,us_per_call,derived`` CSV rows.
+
+  table1_*    : the paper's Table 1 (time-to-train & accuracy) as a
+                reduced-scale proxy — recipe vs momentum-SGD at scaled
+                batch on the synthetic classification task.
+  figure1_*   : the paper's Figure 1 (iteration & all-reduce time vs
+                worker count), reproduced from the measured dry-run
+                compute term + the ring-all-reduce wire model, fp32 vs
+                the paper's fp16 compression.
+  kernel_*    : Pallas kernels (interpret-mode wall time on CPU; the
+                'derived' column is the modeled v5e time from HBM bytes).
+  step_*      : end-to-end reduced train/decode steps on CPU.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROWS: List[Tuple[str, float, str]] = []
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+
+def emit(name: str, us: float, derived: str = ""):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def timeit(fn: Callable, n: int = 5, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+# ---------------------------------------------------------------------------
+
+
+def bench_kernels():
+    from repro.core.optimizer import HybridHyper, hybrid_update
+    from repro.kernels import ops
+    from repro.kernels import ref as kref
+
+    n = 1 << 20  # 1M params
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    g, p = jax.random.normal(ks[0], (n,)), jax.random.normal(ks[1], (n,))
+    d, m = jnp.zeros(n), jnp.ones(n)
+    h = HybridHyper(eta=jnp.float32(0.1), alpha_sgd=jnp.float32(0.5))
+
+    ref_fn = jax.jit(lambda g, p, d, m: hybrid_update(g, p, d, m, h))
+    us = timeit(lambda: ref_fn(g, p, d, m))
+    t_model = 7 * n * 4 / HBM * 1e6  # 4 reads + 3 writes fp32, one pass
+    emit("kernel_hybrid_update_xla_1M", us, f"v5e_model_us={t_model:.1f}")
+
+    fused = jax.jit(
+        lambda g, p, d, m: ops.fused_hybrid_update(g, p, d, m, h))
+    us = timeit(lambda: fused(g, p, d, m), n=2, warmup=1)
+    emit("kernel_hybrid_update_pallas_interp_1M", us,
+         f"v5e_model_us={t_model:.1f}")
+
+    b, s, hh, dh = 1, 1024, 4, 64
+    q = jax.random.normal(ks[0], (b, s, hh, dh), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (b, s, 2, dh), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (b, s, 2, dh), jnp.bfloat16)
+    naive = jax.jit(lambda q, k, v: kref.attention(q, k, v, causal=True))
+    us = timeit(lambda: naive(q, k, v))
+    flops = 4 * b * hh * s * s * dh
+    emit("kernel_attention_naive_1k", us,
+         f"v5e_compute_us={flops/PEAK*1e6:.2f}")
+    us = timeit(lambda: ops.attention(q, k, v, causal=True), n=1, warmup=1)
+    emit("kernel_attention_flash_interp_1k", us,
+         f"v5e_compute_us={flops/PEAK*1e6:.2f}")
+
+    x = jax.random.normal(ks[0], (4096, 1024), jnp.bfloat16)
+    scale = jnp.ones((1024,))
+    norm_ref = jax.jit(lambda x, s: kref.rmsnorm(x, s))
+    us = timeit(lambda: norm_ref(x, scale))
+    t_model = 2 * x.size * 2 / HBM * 1e6  # 1 bf16 read + 1 bf16 write
+    emit("kernel_rmsnorm_xla_4M", us, f"v5e_model_us={t_model:.1f}")
+    us = timeit(lambda: ops.rmsnorm(x, scale), n=1, warmup=1)
+    emit("kernel_rmsnorm_pallas_interp_4M", us,
+         f"v5e_model_us={t_model:.1f}")
+
+
+def bench_steps():
+    from repro.configs import OptimizerConfig, get_config, reduced_config
+    from repro.launch.train import build_train_setup
+
+    for arch in ("resnet50", "llama3.2-1b", "mixtral-8x7b"):
+        cfg = reduced_config(get_config(arch))
+        model, state, step_fn, data, _, _ = build_train_setup(
+            cfg, global_batch=8, seq_len=64,
+            opt_cfg=OptimizerConfig(), steps_per_epoch=10)
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+        holder = {"state": state}
+
+        def run():
+            s, m = step_fn(holder["state"], dict(batch))
+            holder["state"] = s  # step donates its input state
+            return m["loss"]
+
+        us = timeit(run, n=3, warmup=2)
+        tokens = 8 * (64 if cfg.family != "conv" else 1)
+        emit(f"step_train_reduced_{arch}", us,
+             f"items_per_s={tokens/(us/1e6):.0f}")
+
+    from repro.launch.serve import serve
+    cfg = reduced_config(get_config("llama3.2-1b"))
+    res = serve(cfg, batch=2, prompt_len=32, decode_steps=8)
+    emit("step_decode_reduced_llama3.2-1b", res["decode_s"] / 7 * 1e6,
+         f"tok_per_s={res['decode_tok_per_s']:.1f}")
+
+
+def bench_figure1():
+    """Paper Figure 1: iteration & all-reduce time vs #workers (weak
+    scaling, 32 images/worker), from the measured dry-run per-image
+    compute term + ring all-reduce wire model; fp32 vs paper's fp16."""
+    import json
+    import os
+    rec_path = "results/dryrun/resnet50__train_32k__pod16x16.json"
+    if not os.path.exists(rec_path):
+        print("figure1: dry-run record missing; run launch/dryrun first")
+        return
+    r = json.load(open(rec_path))
+    per_img_flops = r["hlo_flops_per_device"] * 256 / 32768
+    p_bytes = 25.6e6 * 4  # fp32 gradient bytes
+    compute_s = per_img_flops * 32 / PEAK
+    for workers in (8, 16, 32, 64, 128, 256, 512, 1024):
+        for wire, wbytes in (("f32", 4), ("f16", 2)):
+            wire_bytes = p_bytes * wbytes / 4
+            ar = 2 * wire_bytes * (workers - 1) / workers / ICI
+            emit(f"figure1_iter_{workers}w_{wire}",
+                 (compute_s + ar) * 1e6,
+                 f"comm_us={ar*1e6:.0f};comm_frac={ar/(compute_s+ar):.2f}")
+
+
+def bench_table1_proxy():
+    """Paper Table 1 proxy: steps-to-loss-threshold, recipe vs baseline,
+    batch scaled 16x (512) with linear-scaled LR."""
+    from repro.configs import OptimizerConfig, get_config, reduced_config
+    from repro.launch.train import build_train_setup
+
+    cfg = reduced_config(get_config("resnet50"))
+    for name, kind, schedule in (
+            ("recipe_rmsprop_warmup", "rmsprop_warmup", "slow_start"),
+            ("baseline_momentum_sgd", "momentum_sgd", "goyal")):
+        opt_cfg = OptimizerConfig(kind=kind, schedule=schedule,
+                                  beta_center=1.0, beta_period=1.0,
+                                  warmup_epochs=1.0)
+        model, state, step_fn, data, _, _ = build_train_setup(
+            cfg, global_batch=512, seq_len=16, opt_cfg=opt_cfg,
+            steps_per_epoch=10)
+        t0 = time.perf_counter()
+        steps_to_target = None
+        final = None
+        for s in range(40):
+            batch = {k: jnp.asarray(v) for k, v in data.batch_at(s).items()}
+            state, metrics = step_fn(state, batch)
+            final = float(metrics["loss"])
+            if steps_to_target is None and final < 0.7:
+                steps_to_target = s
+        wall = time.perf_counter() - t0
+        emit(f"table1_{name}_b512", wall / 40 * 1e6,
+             f"steps_to_0.7={steps_to_target};final_loss={final:.3f}")
+
+
+def bench_roofline_summary():
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.roofline import table_rows
+    rows = [r for r in table_rows("pod16x16") if r["status"] == "ok"]
+    for r in rows:
+        emit(f"roofline_{r['arch']}_{r['shape']}", r["bound_s"] * 1e6,
+             f"dom={r['dominant']};roofl={100*r['roofline_fraction']:.2f}%")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_kernels()
+    bench_steps()
+    bench_figure1()
+    bench_table1_proxy()
+    bench_roofline_summary()
+
+
+if __name__ == "__main__":
+    main()

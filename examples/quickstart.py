@@ -1,0 +1,49 @@
+"""Quickstart: train a reduced ResNet-50 with the paper's full recipe
+(RMSprop warm-up + slow-start LR + BN without moving averages) on the
+synthetic ImageNet-like task, checkpoint, and evaluate.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import OptimizerConfig, get_config, reduced_config  # noqa: E402
+from repro.launch.train import build_train_setup  # noqa: E402
+from repro.training import LoopConfig, run_training  # noqa: E402
+
+
+def main():
+    cfg = reduced_config(get_config("resnet50"))
+    opt_cfg = OptimizerConfig(
+        kind="rmsprop_warmup",  # the paper's hybrid optimizer (A.1)
+        schedule="slow_start",  # the paper's LR schedule (A.2)
+        beta_center=2.0, beta_period=1.0,  # scaled to this tiny run
+    )
+    model, state, train_step, data, _, _ = build_train_setup(
+        cfg, global_batch=64, seq_len=16, opt_cfg=opt_cfg,
+        steps_per_epoch=10)
+
+    ckpt_dir = tempfile.mkdtemp(prefix="quickstart_ckpt_")
+    result = run_training(
+        train_step, state, data,
+        LoopConfig(total_steps=60, checkpoint_every=30,
+                   checkpoint_dir=ckpt_dir, log_every=10))
+    print("loss curve:")
+    for h in result.history:
+        print(f"  step {h['step']:3d}  loss {h['loss']:.4f}")
+
+    # validation uses the last-minibatch BN stats (paper §2)
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(999).items()}
+    acc = model.eval_fn(result.state["params"],
+                        result.state["model_state"], batch)
+    print(f"eval accuracy on a fresh batch: {float(acc):.3f}")
+    print(f"checkpoints in {ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

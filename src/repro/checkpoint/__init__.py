@@ -1,0 +1,6 @@
+from repro.checkpoint.checkpointer import (  # noqa: F401
+    AsyncCheckpointer,
+    list_checkpoints,
+    restore,
+    save,
+)

@@ -1,0 +1,171 @@
+"""Fault-tolerant checkpointer: atomic, async, topology-elastic.
+
+Layout:  <dir>/step_<n>/
+            arrays.npz        flattened state tree (keystr -> array)
+            manifest.json     step, tree structure hash, metadata
+Manifest is written LAST and fsync'd; restore ignores directories without
+a valid manifest, so a crash mid-save can never corrupt resume (tested).
+
+Elasticity: arrays are saved as *full logical* arrays (gathered from the
+addressable shards), so a restore may re-shard onto any mesh/DP degree —
+the elastic-restart path of DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+MANIFEST = "manifest.json"
+ARRAYS = "arrays.npz"
+
+
+def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        out[jax.tree_util.keystr(path)] = np.asarray(jax.device_get(leaf))
+    return out
+
+
+def save(directory: str, step: int, state: PyTree,
+         metadata: Optional[Dict] = None) -> str:
+    """Atomic synchronous save. Returns the checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = tempfile.mkdtemp(prefix=".tmp_ckpt_", dir=directory)
+    try:
+        arrays = _flatten(state)
+        np.savez(os.path.join(tmp, ARRAYS), **arrays)
+        manifest = {
+            "step": int(step),
+            "keys": sorted(arrays.keys()),
+            "metadata": metadata or {},
+        }
+        mpath = os.path.join(tmp, MANIFEST)
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpointing; at most one save in flight.
+
+    The state is snapshotted (device_get) on the caller thread so the
+    training loop can donate/overwrite buffers immediately; serialization
+    and fsync happen off-thread.
+    """
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, state: PyTree, metadata=None,
+             block: bool = False):
+        self.wait()
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                  state)
+
+        def _worker():
+            try:
+                save(self.directory, step, host_state, metadata)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_worker, daemon=True)
+        self._thread.start()
+        if block:
+            self.wait()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self):
+        steps = list_checkpoints(self.directory)
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory,
+                                       f"step_{s:010d}"),
+                          ignore_errors=True)
+
+
+def list_checkpoints(directory: str):
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if not m:
+            continue
+        if os.path.exists(os.path.join(directory, name, MANIFEST)):
+            try:
+                with open(os.path.join(directory, name, MANIFEST)) as f:
+                    json.load(f)
+            except (json.JSONDecodeError, OSError):
+                continue  # partial/corrupt save: skip
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def restore(directory: str, step: Optional[int] = None,
+            target: Optional[PyTree] = None,
+            shardings: Optional[PyTree] = None) -> Tuple[PyTree, Dict]:
+    """Restore ``step`` (default: newest valid). If ``target`` is given,
+    arrays are unflattened into its structure; with ``shardings`` each
+    leaf is device_put with its (possibly new-topology) sharding —
+    the elastic-restart path."""
+    steps = list_checkpoints(directory)
+    if not steps:
+        raise FileNotFoundError(f"no valid checkpoint under {directory}")
+    step = steps[-1] if step is None else step
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, MANIFEST)) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(path, ARRAYS)) as z:
+        arrays = {k: z[k] for k in z.files}
+    if target is None:
+        return arrays, manifest
+    flat, treedef = jax.tree_util.tree_flatten_with_path(target)
+    leaves = []
+    shard_leaves = (jax.tree.leaves(shardings,
+                                    is_leaf=lambda x: hasattr(x, "spec"))
+                    if shardings is not None else [None] * len(flat))
+    for (path_k, leaf), shard in zip(flat, shard_leaves):
+        key = jax.tree_util.keystr(path_k)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                f"target {leaf.shape}")
+        arr = arr.astype(leaf.dtype)
+        leaves.append(jax.device_put(arr, shard) if shard is not None
+                      else jax.device_put(arr))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(target), leaves)
+    return tree, manifest

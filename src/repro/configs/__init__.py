@@ -1,0 +1,40 @@
+"""Arch config registry. Importing this package registers every config."""
+from repro.configs.base import (  # noqa: F401
+    ModelConfig,
+    OptimizerConfig,
+    ParallelConfig,
+    ShapeConfig,
+    TrainConfig,
+    get_config,
+    list_archs,
+    reduced_config,
+    shapes_for,
+)
+
+# Register all architectures (10 assigned + the paper's own ResNet-50).
+from repro.configs import (  # noqa: F401,E402
+    granite_34b,
+    llama3_2_1b,
+    llama4_maverick_400b,
+    mixtral_8x7b,
+    phi_3_vision_4_2b,
+    qwen2_72b,
+    resnet50,
+    whisper_tiny,
+    xlstm_350m,
+    yi_9b,
+    zamba2_7b,
+)
+
+ASSIGNED_ARCHS = (
+    "qwen2-72b",
+    "yi-9b",
+    "llama3.2-1b",
+    "granite-34b",
+    "phi-3-vision-4.2b",
+    "zamba2-7b",
+    "whisper-tiny",
+    "llama4-maverick-400b-a17b",
+    "mixtral-8x7b",
+    "xlstm-350m",
+)

@@ -1,0 +1,25 @@
+"""The paper's contribution: extremely-large-minibatch training recipe.
+
+  optimizer.py    hybrid RMSprop-warm-up update rule (Appendix A.1)
+  schedules.py    ELU transition + slow-start LR + linear scaling (A.1/A.2)
+  batchnorm.py    BN without moving averages + pre-validation all-reduce
+  compression.py  half-precision gradient all-reduce (+ error feedback)
+  recipe.py       LargeBatchRecipe bundling the above per TrainConfig
+"""
+from repro.core.batchnorm import (  # noqa: F401
+    bn_apply_stats,
+    bn_batch_stats,
+    finalize_bn_stats,
+)
+from repro.core.compression import (  # noqa: F401
+    compressed_psum,
+    simulate_wire_cast,
+)
+from repro.core.optimizer import HybridHyper, hybrid_update  # noqa: F401
+from repro.core.schedules import (  # noqa: F401
+    alpha_sgd_schedule,
+    goyal_lr,
+    linear_scaling_lr,
+    make_lr_schedule,
+    slow_start_lr,
+)

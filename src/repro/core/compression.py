@@ -1,0 +1,111 @@
+"""Half-precision gradient communication (paper §3) + error feedback.
+
+The paper casts gradients to fp16 for the NCCL all-reduce and observed a
+negligible accuracy effect. TPU adaptation (DESIGN.md §2): bf16 is the
+default wire format (fp32 exponent range => no loss scaling), fp16 is
+available for paper-faithfulness.
+
+Two integration points:
+  * ``compressed_psum`` — explicit shard_map DP mode: cast -> psum -> cast,
+    exactly the paper's mechanism.
+  * ``simulate_wire_cast`` — GSPMD mode: gradients are cast to the wire
+    dtype and back *at the sync boundary*, so the numerics match the
+    compressed collective even when XLA chooses where the all-reduce
+    lives. The dry-run HLO parse reports actual collective dtypes.
+
+Beyond paper: error feedback (residual accumulation) removes the bias of
+repeated rounding at very large scale.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+WIRE_DTYPES = {"bf16": jnp.bfloat16, "f16": jnp.float16, None: None,
+               "none": None}
+
+
+def _wire(dtype_name: Optional[str]):
+    if dtype_name not in WIRE_DTYPES:
+        raise ValueError(f"unknown wire dtype {dtype_name}")
+    return WIRE_DTYPES[dtype_name]
+
+
+def compressed_psum(grads: PyTree, axis_names: Sequence[str],
+                    wire: Optional[str] = "bf16",
+                    mean: bool = True) -> PyTree:
+    """Paper-faithful compressed all-reduce (shard_map mode).
+
+    Cast each gradient leaf to the wire dtype, psum over the data axes,
+    cast back to the accumulation dtype. ``mean=True`` divides by the
+    number of workers (the paper averages per-worker gradients).
+    """
+    wdt = _wire(wire)
+    n = 1
+    for a in axis_names:
+        n *= jax.lax.axis_size(a)
+
+    def sync(g):
+        acc_dtype = g.dtype
+        if wdt is not None:
+            g = g.astype(wdt)
+        g = jax.lax.psum(g, tuple(axis_names))
+        g = g.astype(acc_dtype)
+        return g / n if mean else g
+
+    return jax.tree.map(sync, grads)
+
+
+def simulate_wire_cast(grads: PyTree, wire: Optional[str] = "bf16") -> PyTree:
+    """GSPMD mode: round-trip gradients through the wire dtype so the
+    numerics of compressed communication are applied; XLA's collective
+    then carries the low-precision value when it can sink the cast."""
+    wdt = _wire(wire)
+    if wdt is None:
+        return grads
+    return jax.tree.map(lambda g: g.astype(wdt).astype(g.dtype), grads)
+
+
+# ---------------------------------------------------------------------------
+# Error feedback (beyond paper)
+# ---------------------------------------------------------------------------
+
+
+def init_error_feedback(grads: PyTree) -> PyTree:
+    return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+
+def apply_error_feedback(grads: PyTree, residual: PyTree,
+                         wire: str = "bf16") -> Tuple[PyTree, PyTree]:
+    """q = Q(g + r);  r' = (g + r) - q.  Returns (quantized, new_residual)."""
+    wdt = _wire(wire)
+
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q = corrected.astype(wdt).astype(jnp.float32)
+        return q.astype(g.dtype), corrected - q
+
+    pairs = jax.tree.map(one, grads, residual)
+    quant = jax.tree.map(lambda t: t[0], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    resid = jax.tree.map(lambda t: t[1], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return quant, resid
+
+
+def compression_error(grads: PyTree, wire: str = "bf16") -> jax.Array:
+    """Relative L2 rounding error of the wire cast — logged as a training
+    metric so the paper's 'effect ... was relatively small' claim is
+    checkable per run."""
+    def err(g):
+        g32 = g.astype(jnp.float32)
+        q = g32.astype(_wire(wire)).astype(jnp.float32)
+        return jnp.sum(jnp.square(q - g32)), jnp.sum(jnp.square(g32))
+
+    num = sum(jax.tree.leaves(jax.tree.map(lambda g: err(g)[0], grads)))
+    den = sum(jax.tree.leaves(jax.tree.map(lambda g: err(g)[1], grads)))
+    return jnp.sqrt(num / jnp.maximum(den, 1e-30))

@@ -1,0 +1,81 @@
+"""Paper schedules (Appendix A): ELU-shaped RMSprop->SGD transition,
+slow-start LR, linear scaling; plus the Goyal et al. baseline schedule.
+
+All functions take a (possibly traced) float ``epoch`` and return scalars,
+so they can live inside the jitted train step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def alpha_sgd_schedule(epoch, beta_center: float = 10.0,
+                       beta_period: float = 5.0, kind: str = "elu"):
+    """Paper A.1: exponential rise to 1/2 at beta_center, linear to 1 at
+    beta_center + beta_period/2, then 1.
+
+    ``kind`` also provides the transition shapes the paper *rejected*
+    (A.1: "sudden transition severely impacts training", "linear
+    functions have a similar problem at the beginning") for the ablation
+    suite: "sudden" (step at beta_center), "linear" (ramp over the same
+    span), "sigmoid" (reported comparable to ELU).
+    """
+    epoch = jnp.asarray(epoch, jnp.float32)
+    if kind == "elu":
+        exp_part = 0.5 * jnp.exp(2.0 * (epoch - beta_center) / beta_period)
+        lin_part = 0.5 + 2.0 * (epoch - beta_center) / beta_period
+        out = jnp.where(epoch < beta_center, exp_part, lin_part)
+        return jnp.minimum(out, 1.0)
+    if kind == "sudden":
+        return jnp.where(epoch < beta_center, 0.0, 1.0)
+    if kind == "linear":
+        start = beta_center - beta_period
+        return jnp.clip((epoch - start) / (1.5 * beta_period), 0.0, 1.0)
+    if kind == "sigmoid":
+        return jax.nn.sigmoid(4.0 * (epoch - beta_center) / beta_period)
+    raise ValueError(kind)
+
+
+def linear_scaling_lr(global_batch: int, base_lr_per_256: float = 0.1):
+    """Goyal linear-scaling rule: eta_base = 0.1 * B / 256."""
+    return base_lr_per_256 * global_batch / 256.0
+
+
+def slow_start_lr(epoch, eta_base: float):
+    """Paper A.2: 0.5x for 40 epochs, 0.075x for 30, 0.01x for 15,
+    0.001x for the last 5."""
+    epoch = jnp.asarray(epoch, jnp.float32)
+    return eta_base * jnp.where(
+        epoch < 40.0, 0.5,
+        jnp.where(epoch < 70.0, 0.075,
+                  jnp.where(epoch < 85.0, 0.01, 0.001)))
+
+
+def goyal_lr(epoch, eta_base: float, warmup_epochs: float = 5.0,
+             base_lr_per_256: float = 0.1):
+    """Goyal et al. baseline: gradual warmup from the single-worker LR to
+    eta_base over ``warmup_epochs``, then steps at 30/60/80 epochs."""
+    epoch = jnp.asarray(epoch, jnp.float32)
+    start = base_lr_per_256  # = 0.1, the B=256 reference LR
+    frac = jnp.clip(epoch / warmup_epochs, 0.0, 1.0)
+    warm = start + (eta_base - start) * frac
+    stepped = eta_base * jnp.where(
+        epoch < 30.0, 1.0,
+        jnp.where(epoch < 60.0, 0.1,
+                  jnp.where(epoch < 80.0, 0.01, 0.001)))
+    return jnp.where(epoch < warmup_epochs, warm, stepped)
+
+
+def make_lr_schedule(kind: str, global_batch: int, *,
+                     base_lr_per_256: float = 0.1,
+                     warmup_epochs: float = 5.0):
+    eta_base = linear_scaling_lr(global_batch, base_lr_per_256)
+    if kind == "slow_start":
+        return lambda epoch: slow_start_lr(epoch, eta_base)
+    if kind == "goyal":
+        return lambda epoch: goyal_lr(epoch, eta_base, warmup_epochs,
+                                      base_lr_per_256)
+    if kind == "constant":
+        return lambda epoch: jnp.asarray(eta_base, jnp.float32)
+    raise ValueError(kind)

@@ -1,0 +1,6 @@
+from repro.data.synthetic import (  # noqa: F401
+    Prefetcher,
+    SyntheticImageData,
+    SyntheticLMData,
+    make_data,
+)

@@ -1,0 +1,10 @@
+"""Distribution: logical-axis sharding rules, compressed collectives,
+fault tolerance orchestration."""
+from repro.distributed.sharding import (  # noqa: F401
+    activation_sharding,
+    constrain,
+    make_rules,
+    spec_for,
+    tree_shardings,
+    tree_specs,
+)

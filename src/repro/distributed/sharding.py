@@ -1,0 +1,235 @@
+"""Logical-axis sharding rules (MaxText-style) + activation constraints.
+
+Models tag every parameter dim and activation with *logical* axis names
+("embed", "heads", "ffn", "experts", "vocab", "batch", "seq", ...). This
+module maps logical names onto physical mesh axes with divisibility-aware
+fallbacks, producing NamedShardings for params and
+``with_sharding_constraint`` hooks for activations.
+
+The mapping is where the parallelism design lives:
+  DP   : "batch"  -> ("pod", "data")
+  TP   : "heads"/"ffn"/"vocab" -> "model" (Megatron-style)
+  EP   : "experts" -> "model" when n_experts % model == 0, else experts
+         stay local and "ffn" carries the model axis (TP inside experts)
+  FSDP : "embed" -> "data" (ZeRO-3-style weight sharding, beyond paper)
+  SP   : "seq" -> "model" for long-context activations (optional)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig
+
+PyTree = Any
+
+_STATE = threading.local()
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def make_rules(cfg: ModelConfig, mesh: Mesh,
+               parallel: ParallelConfig) -> Dict[str, Any]:
+    """Logical-axis -> mesh-axis rules for one (arch, mesh, parallel) cell.
+
+    Values are mesh-axis names (or tuples). Divisibility fallbacks are
+    resolved here, per architecture, so the model code stays generic.
+    """
+    tp = parallel.tp_axis
+    tp_size = _axis_size(mesh, tp) if tp else 1
+    dp_axes = tuple(a for a in parallel.dp_axes if a in mesh.shape)
+    if "pod" in mesh.shape and "pod" not in dp_axes:
+        dp_axes = ("pod",) + dp_axes
+
+    rules: Dict[str, Any] = {
+        "batch": dp_axes,
+        "layers": None,
+        "head_dim": None,
+        "seq": None,
+        "kv_seq": None,
+        "conv_spatial": None,
+        "stats": None,
+    }
+
+    def divisible(n: int) -> bool:
+        return tp_size > 1 and n > 0 and n % tp_size == 0
+
+    rules["vocab"] = tp if divisible(cfg.vocab_size) else None
+    rules["heads"] = tp if divisible(cfg.n_heads) else None
+    rules["kv_heads"] = tp if divisible(cfg.n_kv_heads) else None
+    rules["ffn"] = tp if divisible(cfg.d_ff) else None
+
+    if cfg.n_experts:
+        if divisible(cfg.n_experts):
+            rules["experts"] = tp  # EP: expert dim over model axis
+        else:
+            rules["experts"] = None  # TP inside each expert instead
+        # "ffn" keeps tp too; duplicate mesh axes are dropped per-tensor
+        # (experts wins on the expert weights, ffn wins elsewhere).
+
+    # FSDP / ZeRO-3-style parameter sharding over the data axes.
+    if parallel.fsdp_params:
+        fsdp = dp_axes
+        rules["embed"] = fsdp if cfg.d_model % _axis_size(mesh, fsdp) == 0 else None
+    else:
+        rules["embed"] = None
+
+    # Fallback for archs whose head count does not divide tp (llama4: 40H):
+    # shard attention weights' embed dim on the model axis instead, so the
+    # attention params still get TP-sharded (FSDP-over-model style gather),
+    # and run the attention *computation* batch-parallel over the
+    # otherwise-idle model axis ("attn_batch"): attention has no
+    # cross-batch interaction, so the batch dim can absorb the model axis
+    # — 16x less redundant score compute/memory at the cost of one
+    # resharding per attention in/out (§Perf llama4 iteration 3; the
+    # seq-sharding variant was refuted — it fights the chunked scan).
+    # NOTE (§Perf llama4 iterations 2-3, both refuted): sharding the
+    # replicated attention over seq ("context parallel") or folding the
+    # model axis into the batch dim both lower to catastrophic
+    # gather-based reshardings in this XLA SPMD version ("Involuntary
+    # full rematerialization"). The effective fix is a (data=32, model=8)
+    # re-mesh so 40 heads shard evenly — see mesh.py:preferred_mesh.
+    rules["attn_batch"] = rules["batch"]
+    if cfg.n_heads and not divisible(cfg.n_heads) and cfg.d_model and \
+            divisible(cfg.d_model):
+        emb = rules["embed"]
+        if emb is None:
+            rules["embed"] = tp
+        elif isinstance(emb, tuple) and tp not in emb:
+            rules["embed"] = emb + (tp,)
+
+    # Sequence parallelism for activations (long-context cells).
+    if parallel.sequence_sharding and tp:
+        rules["seq"] = tp
+
+    # Serve cells: shard the KV-cache sequence dim on the model axis when
+    # kv heads can't shard (GQA kv < tp) — the decode scores then reduce
+    # over the model axis (sequence-sharded KV decode).
+    if parallel.kv_seq_sharding:
+        target = tp if tp else ("model" if "model" in mesh.shape else None)
+        kv_ok = cfg.n_kv_heads and tp and cfg.n_kv_heads % tp_size == 0
+        if target and not kv_ok:
+            rules["kv_seq"] = target
+
+    # Conv nets (ResNet-50, the paper's own arch): pure DP — the paper's
+    # regime. Channels stay replicated unless fsdp_params.
+    rules["conv_in"] = None
+    rules["conv_out"] = dp_axes if parallel.fsdp_params else None
+
+    # xLSTM / Mamba inner dims.
+    rules["inner"] = tp if divisible(cfg.ssm_expand * cfg.d_model) else None
+    rules["ssm_state"] = None
+    rules["ssm_heads"] = None
+
+    return rules
+
+
+def spec_for(axes: Sequence[Optional[str]], rules: Dict[str, Any]) -> P:
+    """Build a PartitionSpec, dropping mesh axes already used upstream."""
+    used = set()
+    out = []
+    for name in axes:
+        mesh_axes = rules.get(name) if name else None
+        if mesh_axes is None:
+            out.append(None)
+            continue
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        fresh = tuple(a for a in mesh_axes if a not in used)
+        used.update(fresh)
+        out.append(fresh if len(fresh) > 1 else (fresh[0] if fresh else None))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def prune_spec(shape, spec: P, mesh: Mesh) -> P:
+    """Per-dim divisibility pruning: trim mesh axes from each dim's spec
+    entry (right-to-left) until the dim divides evenly; never replicates
+    more than necessary."""
+    entries = list(tuple(spec)) + [None] * (len(shape) - len(tuple(spec)))
+    out = []
+    for dim, e in zip(shape, entries):
+        if e is None:
+            out.append(None)
+            continue
+        axes = (e,) if isinstance(e, str) else tuple(e)
+        while axes:
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if dim % size == 0:
+                break
+            axes = axes[:-1]
+        out.append(None if not axes else
+                   (axes[0] if len(axes) == 1 else axes))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def tree_specs(axes_tree: PyTree, rules: Dict[str, Any]) -> PyTree:
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x
+    )
+    return jax.tree.map(lambda a: spec_for(a, rules), axes_tree, is_leaf=is_axes)
+
+
+def tree_shardings(axes_tree: PyTree, mesh: Mesh, rules: Dict[str, Any]) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs(axes_tree, rules)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Activation constraint context (used inside model code)
+# ---------------------------------------------------------------------------
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules: Dict[str, Any]):
+    """While active, ``constrain(x, axes)`` pins activation shardings."""
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """Apply with_sharding_constraint if a sharding context is active.
+
+    Divisibility guard: per-dim axis pruning (prune_spec) — a dim that
+    doesn't divide the full axis product keeps the largest divisible
+    prefix instead of collapsing to replicated (which would make XLA
+    all-gather the tensor). Keeps one model code path valid for smoke
+    tests (1 device) and production meshes.
+    """
+    ctx = getattr(_STATE, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = prune_spec(x.shape, spec_for(axes, rules), mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec)
+    )
+
+
+def current_rules() -> Optional[Dict[str, Any]]:
+    ctx = getattr(_STATE, "ctx", None)
+    return ctx[1] if ctx else None

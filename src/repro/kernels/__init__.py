@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the perf-critical hot spots:
+  fused_update.py      paper's hybrid optimizer, one HBM pass (A.1)
+  flash_attention.py   tiled online-softmax attention (GQA/causal/SWA)
+ops.py has the jit'd wrappers; ref.py the pure-jnp oracles.
+"""
+from repro.kernels import ops, ref  # noqa: F401

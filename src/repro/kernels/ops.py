@@ -1,0 +1,89 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On TPU the kernels run compiled; on CPU they run in interpret mode
+(Python-executed kernel body) — which is how this container validates
+them. The pure-jnp oracles live in ref.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_update as _fu
+
+LANES = _fu.LANES
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# fused hybrid optimizer update
+# ---------------------------------------------------------------------------
+
+
+def fused_hybrid_update(g, p, d, m, h, weight_decay: float = 0.0) -> Tuple:
+    """Drop-in for core.optimizer.hybrid_update: (theta', delta', m').
+
+    Flattens the leaf to (rows, 128) fp32 tiles, pads the tail, runs the
+    one-pass Pallas update, unpads.
+    """
+    orig_shape = p.shape
+    orig_dtype = p.dtype
+    n = p.size
+    rows = max(1, -(-n // LANES))
+    pad = rows * LANES - n
+
+    def flat(x):
+        x = x.astype(jnp.float32).reshape(-1)
+        if pad:
+            x = jnp.concatenate([x, jnp.zeros((pad,), jnp.float32)])
+        return x.reshape(rows, LANES)
+
+    scalars = jnp.stack([jnp.asarray(h.eta, jnp.float32),
+                         jnp.asarray(h.alpha_sgd, jnp.float32)]).reshape(1, 2)
+    block_rows = rows
+    for cand in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if rows % cand == 0:
+            block_rows = cand
+            break
+    p_new, d_new, m_new = _fu.fused_update_2d(
+        flat(g), flat(p), flat(d), flat(m), scalars,
+        mu1=h.mu1, mu2=h.mu2, eps=h.eps, eta_rmsprop=h.eta_rmsprop,
+        weight_decay=weight_decay, interpret=_interpret(),
+        block_rows=block_rows)
+
+    def unflat(x, dtype):
+        return x.reshape(-1)[:n].reshape(orig_shape).astype(dtype)
+
+    return (unflat(p_new, orig_dtype), unflat(d_new, jnp.float32),
+            unflat(m_new, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+def attention(q, k, v, *, causal: bool = True, window=None,
+              block_q: int = 128, block_k: int = 128):
+    """Tiled online-softmax attention (GQA-aware). See ref.attention."""
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
+# fused RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-5):
+    """One-pass RMSNorm (fp32 stats in VMEM). See ref.rmsnorm."""
+    from repro.kernels import rmsnorm as _rn
+    return _rn.rmsnorm(x, scale, eps=eps, interpret=_interpret())

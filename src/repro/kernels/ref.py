@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q, k, v, *, causal=True, window=None):
+    """Naive full-materialization attention with GQA head repetition."""
+    b, sq, hq, dh = q.shape
+    hkv = k.shape[2]
+    if hkv != hq:
+        k = jnp.repeat(k, hq // hkv, axis=2)
+        v = jnp.repeat(v, hq // hkv, axis=2)
+    scale = 1.0 / math.sqrt(dh)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    qi = jnp.arange(sq)[:, None]
+    kj = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= qi - kj < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(q.dtype), v)
+
+
+def rmsnorm(x, scale, *, eps=1e-5):
+    """Pure-jnp RMSNorm oracle (fp32 stats, compute-dtype output)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    return y * scale.astype(x.dtype)
+
+
+def hybrid_update(g, p, d, m, *, eta, alpha_sgd, mu1=0.9, mu2=0.99,
+                  eps=1e-8, eta_rmsprop=3e-4, weight_decay=0.0):
+    """Paper A.1 update, fp32 (the fused kernel's oracle)."""
+    g = g.astype(jnp.float32)
+    p32 = p.astype(jnp.float32)
+    if weight_decay:
+        g = g + weight_decay * p32
+    m_new = mu2 * m + (1.0 - mu2) * jnp.square(g)
+    a_rms = (1.0 - alpha_sgd) * eta_rmsprop / eta
+    coef = alpha_sgd + a_rms / (jnp.sqrt(m_new) + eps)
+    d_new = mu1 * d - coef * g
+    return p32 + eta * d_new, d_new, m_new

@@ -1,0 +1,437 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST be the first two lines: jax locks the device count on first init.
+# Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell
+# on the production meshes, record memory/cost/collective analyses for the
+# roofline (EXPERIMENTS.md section Dry-run / Roofline).
+#
+#     PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+#         --shape train_4k [--multi-pod] [--out results/dryrun]
+#
+# Results are cached per cell as JSON; reruns skip completed cells unless
+# --force.
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import (
+    ASSIGNED_ARCHS,
+    OptimizerConfig,
+    ParallelConfig,
+    TrainConfig,
+    get_config,
+    shapes_for,
+)
+from repro.distributed.sharding import make_rules, spec_for, tree_shardings
+from repro.launch.hlo_analysis import Analysis, analyze_hlo
+from repro.launch.mesh import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+    cell_parallel,
+    make_production_mesh,
+)
+from repro.models import build_model, init_model_state
+from repro.optim import make_optimizer
+from repro.optim.zero import zero_shardings
+from repro.training.specs import cache_specs, input_specs, param_specs
+from repro.training.step import (
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+
+V5E_HBM_BYTES = 16 * 1024 ** 3
+
+
+def batch_shardings(batch_specs, mesh, rules):
+    def shard(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        spec = spec_for(("batch",), rules)
+        entry = spec[0] if len(spec) else None
+        axes = (() if entry is None else
+                ((entry,) if isinstance(entry, str) else tuple(entry)))
+        # progressive divisibility fallback (e.g. batch=128 on 256 chips
+        # shards over data only; batch=1 long-context stays replicated)
+        while axes:
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if leaf.shape[0] % size == 0:
+                break
+            axes = axes[:-1]
+        if not axes:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(axes if len(axes) > 1 else axes[0]))
+
+    return jax.tree.map(shard, batch_specs)
+
+
+def bytes_per_device(tree, shardings, mesh) -> float:
+    total = 0.0
+    for leaf, sh in zip(jax.tree.leaves(tree), jax.tree.leaves(
+            shardings, is_leaf=lambda x: isinstance(x, NamedSharding))):
+        n = leaf.size * leaf.dtype.itemsize
+        spec = sh.spec
+        shards = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            for a in ((entry,) if isinstance(entry, str) else entry):
+                shards *= mesh.shape[a]
+        total += n / shards
+    return total
+
+
+def lower_cell(arch: str, shape_name: str, mesh: Mesh, *,
+               parallel: Optional[ParallelConfig] = None,
+               attention_impl: str = "chunked",
+               moe_group: Optional[int] = None,
+               donate: bool = True,
+               dp_mode: str = "gspmd",
+               opt_cfg: Optional[OptimizerConfig] = None,
+               microbatches: int = 1):
+    """Build + lower + compile one cell. Returns (record, compiled)."""
+    cfg = get_config(arch)
+    shp = {s.name: s for s in shapes_for(cfg)}[shape_name]
+    if shp.skip_reason:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": shp.skip_reason}, None
+    parallel = parallel or cell_parallel(cfg, shp)
+    rules = make_rules(cfg, mesh, parallel)
+    compute_dtype = jnp.bfloat16
+
+    if moe_group is not None:
+        from repro.models import layers as _layers
+        _layers.MOE_GROUP = moe_group
+
+    t0 = time.time()
+    if shp.kind == "train" and dp_mode == "shardmap":
+        # paper-faithful explicit DP: per-worker fwd/bwd + compressed
+        # psum of gradients + replicated optimizer (pure-DP models)
+        from repro.training.step import (
+            make_dp_shardmap_train_step,
+            replicate_model_state,
+        )
+        model = build_model(cfg, compute_dtype=compute_dtype,
+                            attention_impl=attention_impl,
+                            remat=parallel.remat == "block")
+        p_shapes, p_axes = param_specs(model, jnp.float32)
+        opt_cfg = OptimizerConfig(kind="rmsprop_warmup")
+        train_cfg = TrainConfig(optimizer=opt_cfg, parallel=parallel)
+        optimizer = make_optimizer(opt_cfg, steps_per_epoch=40,
+                                   global_batch=shp.global_batch)
+        opt_shapes = jax.eval_shape(optimizer.init, p_shapes)
+        n_workers = 1
+        for a in parallel.dp_axes:
+            n_workers *= mesh.shape[a]
+        mstate_shapes = jax.eval_shape(
+            lambda: replicate_model_state(init_model_state(model),
+                                          n_workers))
+        state_shapes = {"params": p_shapes, "opt": opt_shapes,
+                        "model_state": mstate_shapes}
+        batch = input_specs(cfg, shp, compute_dtype)
+        repl = NamedSharding(mesh, P())
+        dp_shard = NamedSharding(mesh, P(parallel.dp_axes))
+        state_shard = {
+            "params": jax.tree.map(lambda _: repl, p_shapes),
+            "opt": jax.tree.map(lambda _: repl, opt_shapes),
+            "model_state": jax.tree.map(lambda _: dp_shard,
+                                        mstate_shapes),
+        }
+        b_shard = jax.tree.map(
+            lambda v: dp_shard if v.ndim else repl, batch)
+        step = make_dp_shardmap_train_step(model, optimizer, train_cfg,
+                                           mesh, parallel.dp_axes)
+        jitted = jax.jit(step, in_shardings=(state_shard, b_shard),
+                         out_shardings=(state_shard, None),
+                         donate_argnums=(0,) if donate else ())
+        lowered = jitted.lower(state_shapes, batch)
+        resident = {"state": (state_shapes, state_shard)}
+    elif shp.kind == "train":
+        model = build_model(cfg, compute_dtype=compute_dtype,
+                            attention_impl=attention_impl,
+                            remat=parallel.remat == "block")
+        p_shapes, p_axes = param_specs(model, jnp.float32)
+        p_shard = tree_shardings(p_axes, mesh, rules)
+        opt_cfg = opt_cfg or OptimizerConfig()
+        train_cfg = TrainConfig(optimizer=opt_cfg, parallel=parallel)
+        optimizer = make_optimizer(opt_cfg, steps_per_epoch=1000,
+                                   global_batch=shp.global_batch)
+        opt_shapes = jax.eval_shape(optimizer.init, p_shapes)
+        if parallel.zero_1:
+            state_opt_shard = {
+                "step": NamedSharding(mesh, P()),
+                **{f: zero_shardings(opt_shapes[f],
+                                     jax.tree.map(lambda s: s.spec, p_shard,
+                                                  is_leaf=lambda x: isinstance(
+                                                      x, NamedSharding)),
+                                     mesh, parallel.dp_axes)
+                   for f in optimizer.state_fields},
+            }
+            grad_shardings = zero_shardings(
+                p_shapes, jax.tree.map(
+                    lambda s: s.spec, p_shard,
+                    is_leaf=lambda x: isinstance(x, NamedSharding)),
+                mesh, parallel.dp_axes)
+
+            def grad_constraint(grads):
+                return jax.lax.with_sharding_constraint(grads,
+                                                        grad_shardings)
+        else:
+            state_opt_shard = {
+                "step": NamedSharding(mesh, P()),
+                **{f: p_shard for f in optimizer.state_fields},
+            }
+            grad_constraint = None
+
+        model_state_shapes = jax.eval_shape(
+            lambda: init_model_state(model))
+        mstate_shard = jax.tree.map(
+            lambda _: NamedSharding(mesh, P()), model_state_shapes)
+        state_shapes = {"params": p_shapes, "opt": opt_shapes,
+                        "model_state": model_state_shapes}
+        state_shard = {"params": p_shard, "opt": state_opt_shard,
+                       "model_state": mstate_shard}
+        batch = input_specs(cfg, shp, compute_dtype)
+        b_shard = batch_shardings(batch, mesh, rules)
+        step = make_train_step(model, optimizer, train_cfg, mesh, rules,
+                               grad_constraint,
+                               param_shardings=p_shard,
+                               microbatches=microbatches)
+        jitted = jax.jit(step, in_shardings=(state_shard, b_shard),
+                         out_shardings=(state_shard, None),
+                         donate_argnums=(0,) if donate else ())
+        lowered = jitted.lower(state_shapes, batch)
+        resident = {"state": (state_shapes, state_shard)}
+    else:
+        model = build_model(cfg, compute_dtype=compute_dtype,
+                            attention_impl=attention_impl, remat=False)
+        p_shapes, p_axes = param_specs(model, jnp.bfloat16)
+        p_shard = tree_shardings(p_axes, mesh, rules)
+        cache_vals, cache_axes = cache_specs(model, shp.global_batch,
+                                             shp.seq_len, jnp.bfloat16)
+        cache_shard = tree_shardings(cache_axes, mesh, rules)
+        # per-dim divisibility pruning (e.g. batch=128 on a 256-way dp)
+        from repro.distributed.sharding import prune_spec
+        cache_shard = jax.tree.map(
+            lambda v, s: NamedSharding(mesh, prune_spec(v.shape, s.spec,
+                                                        mesh)),
+            cache_vals, cache_shard,
+            is_leaf=lambda x: isinstance(x, NamedSharding))
+        batch = input_specs(cfg, shp, compute_dtype)
+        b_shard = batch_shardings(batch, mesh, rules)
+        if shp.kind == "prefill":
+            step = make_prefill_step(model, mesh, rules)
+        else:
+            step = make_decode_step(model, mesh, rules)
+        jitted = jax.jit(step,
+                         in_shardings=(p_shard, cache_shard, b_shard),
+                         out_shardings=(None, cache_shard),
+                         donate_argnums=(1,) if donate else ())
+        lowered = jitted.lower(p_shapes, cache_vals, batch)
+        resident = {"params": (p_shapes, p_shard),
+                    "cache": (cache_vals, cache_shard)}
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    # spec requirement: surface the compiled analyses directly
+    try:
+        print(f"  memory_analysis: {compiled.memory_analysis()}")
+    except Exception as e:
+        print(f"  memory_analysis: unavailable ({e})")
+    try:
+        ca = dict(compiled.cost_analysis())
+        print("  cost_analysis: flops=%s bytes=%s" % (
+            ca.get("flops"), ca.get("bytes accessed")))
+    except Exception as e:
+        print(f"  cost_analysis: unavailable ({e})")
+
+    record = analyze_compiled(arch, shp, cfg, mesh, compiled, resident)
+    record.update({
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "parallel": dataclasses.asdict(parallel),
+        "attention_impl": attention_impl,
+    })
+    return record, compiled
+
+
+def _spec_size(mesh, entry):
+    if entry is None:
+        return 1
+    n = 1
+    for a in ((entry,) if isinstance(entry, str) else entry):
+        n *= mesh.shape[a]
+    return n
+
+
+def analyze_compiled(arch, shp, cfg, mesh, compiled, resident
+                     ) -> Dict[str, Any]:
+    n_dev = mesh.size
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_size": getattr(mem, "argument_size_in_bytes", None),
+            "output_size": getattr(mem, "output_size_in_bytes", None),
+            "temp_size": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        mem_info = {"error": str(e)}
+    try:
+        cost = dict(compiled.cost_analysis())
+        cost = {k: v for k, v in cost.items()
+                if k in ("flops", "bytes accessed", "transcendentals")}
+    except Exception as e:
+        cost = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    a: Analysis = analyze_hlo(hlo, total_devices=n_dev)
+
+    # resident bytes per device (params + opt + cache), from shardings
+    resident_bytes = {k: bytes_per_device(v[0], v[1], mesh)
+                      for k, v in resident.items()}
+
+    # analytic MODEL_FLOPS (the "useful compute" yardstick)
+    n_active = cfg.active_param_count()
+    if cfg.family == "conv":
+        # ResNet-50: ~4.09 GFLOP/image fwd (He et al.); x3 for train
+        per_image = 2 * 4.089e9 / 2  # fwd MACs*2
+        factor = 3.0 if shp.kind == "train" else 1.0
+        model_flops = factor * per_image * shp.global_batch
+    else:
+        tokens = shp.global_batch * (shp.seq_len if shp.kind != "decode"
+                                     else 1)
+        factor = 6.0 if shp.kind == "train" else 2.0
+        model_flops = factor * n_active * tokens
+
+    compute_s = a.flops / PEAK_FLOPS_BF16  # a.flops is per-device (SPMD)
+    memory_s = a.memory_bytes / HBM_BW
+    collective_s = a.total_collective_bytes / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound_s = max(terms.values())
+    step_tokens_or_images = (shp.global_batch if cfg.family == "conv"
+                             else shp.global_batch * (
+                                 1 if shp.kind == "decode" else shp.seq_len))
+
+    return {
+        "arch": arch,
+        "shape": shp.name,
+        "kind": shp.kind,
+        "mesh": dict(mesh.shape),
+        "status": "ok",
+        "hlo_flops_per_device": a.flops,
+        "hlo_dot_flops": a.dot_flops,
+        "hlo_conv_flops": a.conv_flops,
+        "hlo_memory_bytes_per_device": a.memory_bytes,
+        "hlo_parameter_bytes_per_device": a.parameter_bytes,
+        "collective_bytes_per_device": a.collective_bytes,
+        "collective_dtypes": a.collective_dtypes,
+        "collective_total_bytes": a.total_collective_bytes,
+        "trip_counts_found": len(a.trip_counts),
+        "resident_bytes_per_device": resident_bytes,
+        "fits_v5e_16g": sum(resident_bytes.values()) < V5E_HBM_BYTES,
+        "memory_analysis": mem_info,
+        "cost_analysis_raw": cost,
+        "roofline": {
+            **{k: round(v, 6) for k, v in terms.items()},
+            "dominant": dominant,
+            "bound_s": round(bound_s, 6),
+            "model_flops_global": model_flops,
+            "hlo_flops_global": a.flops * n_dev,
+            "useful_fraction": round(
+                model_flops / max(a.flops * n_dev, 1.0), 4),
+            "achievable_mfu": round(
+                (model_flops / n_dev / PEAK_FLOPS_BF16) / max(bound_s, 1e-12),
+                4),
+            "tokens_or_images_per_step": step_tokens_or_images,
+        },
+    }
+
+
+def run_cells(archs, shapes, *, multi_pod=False, out_dir="results/dryrun",
+              force=False, attention_impl="chunked"):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(out_dir, exist_ok=True)
+    results = []
+    for arch in archs:
+        cfg = get_config(arch)
+        all_shapes = {s.name: s for s in shapes_for(cfg)}
+        for shape_name in (shapes or all_shapes):
+            if shape_name not in all_shapes:
+                continue
+            path = os.path.join(out_dir,
+                                f"{arch}__{shape_name}__{mesh_tag}.json")
+            if os.path.exists(path) and not force:
+                results.append(json.load(open(path)))
+                print(f"[cached] {arch} {shape_name} {mesh_tag}")
+                continue
+            print(f"[lower]  {arch} {shape_name} {mesh_tag} ...",
+                  flush=True)
+            try:
+                rec, compiled = lower_cell(arch, shape_name, mesh,
+                                           attention_impl=attention_impl)
+                del compiled
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape_name, "status": "error",
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-3000:]}
+            rec["mesh_tag"] = mesh_tag
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1, default=str)
+            status = rec.get("status")
+            extra = ""
+            if status == "ok":
+                r = rec["roofline"]
+                extra = (f"dom={r['dominant']} bound={r['bound_s']:.4f}s "
+                         f"compile={rec['compile_s']}s")
+            print(f"[done]   {arch} {shape_name} {mesh_tag}: {status} "
+                  f"{extra}", flush=True)
+            results.append(rec)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id, comma list, or 'all'")
+    ap.add_argument("--shape", default=None,
+                    help="shape name or comma list (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--attention-impl", default="chunked")
+    args = ap.parse_args()
+
+    if args.arch == "all":
+        archs = list(ASSIGNED_ARCHS) + ["resnet50"]
+    else:
+        archs = args.arch.split(",")
+    shapes = args.shape.split(",") if args.shape else None
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for mp in meshes:
+        run_cells(archs, shapes, multi_pod=mp, out_dir=args.out,
+                  force=args.force, attention_impl=args.attention_impl)
+
+
+if __name__ == "__main__":
+    main()

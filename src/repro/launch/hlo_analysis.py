@@ -1,0 +1,496 @@
+"""Optimized-HLO analyzer: loop-aware FLOPs / bytes / collective accounting.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified
+in this container), which under-reports scanned models by a factor of
+n_layers. This module parses ``compiled.as_text()`` into computations +
+ops, recovers while trip counts from loop-condition constants, and
+multiplies costs through the (possibly nested) loop structure.
+
+Outputs per program:
+  flops            dot + convolution FLOPs, trip-count weighted
+  collectives      per-op-kind wire bytes (ring-model factors), dtypes
+  memory_bytes     ~HBM traffic: sum of materialized buffer sizes x2
+                   (write + read) + parameter bytes (approximation,
+                   documented in EXPERIMENTS.md §Roofline)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast")
+
+# Ops counted as HBM-materializing for the memory-traffic model. The
+# CPU backend fuses far less than TPU, so raw elementwise/convert/
+# broadcast/transpose ops in CPU HLO are *excluded* — on TPU they fuse
+# into their consumers. What remains (matmuls, fusions, gathers,
+# reductions, copies, collectives, scan-stack slice updates) is the
+# traffic a TPU execution would actually see. Documented approximation
+# (EXPERIMENTS.md §Roofline).
+# (iota/rng excluded: XLA:TPU generates them in-register / fuses them;
+# the CPU backend materializes them — a backend artifact.)
+MATERIALIZING = {
+    "dot", "convolution", "fusion", "copy", "gather", "scatter",
+    "dynamic-slice", "dynamic-update-slice", "reduce", "reduce-window",
+    "sort", "cholesky", "triangular-solve", "pad", "concatenate",
+    "select-and-scatter",
+} | set(COLLECTIVES)
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    result: str  # raw type string
+    operands: List[str]
+    attrs: str
+    root: bool = False
+
+
+@dataclasses.dataclass
+class Analysis:
+    flops: float
+    dot_flops: float
+    conv_flops: float
+    memory_bytes: float
+    parameter_bytes: float
+    collective_bytes: Dict[str, float]  # opcode -> wire bytes (per device)
+    collective_dtypes: Dict[str, Dict[str, float]]  # opcode -> dtype -> bytes
+    collective_count: int
+    trip_counts: Dict[str, int]
+    op_histogram: Dict[str, int]
+    top_memory_ops: List[tuple] = dataclasses.field(default_factory=list)
+    top_collective_ops: List[tuple] = dataclasses.field(
+        default_factory=list)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def type_bytes(type_str: str) -> float:
+    """Bytes of a (possibly tuple) HLO type string."""
+    total = 0.0
+    for dtype, dims in _TYPE_RE.findall(type_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def type_shape(type_str: str) -> Tuple[str, Tuple[int, ...]]:
+    m = _TYPE_RE.search(type_str)
+    if not m:
+        return ("", ())
+    dims = tuple(int(d) for d in m.group(2).split(",")) if m.group(2) else ()
+    return m.group(1), dims
+
+
+_COMP_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_OP_RE = re.compile(
+    r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"((?:\([^()]*\))|(?:[\w\[\],{}.]+))\s+"
+    r"([\w\-]+)\((.*)$"
+)
+
+
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+
+
+def parse_computations(text: str) -> Dict[str, List[Op]]:
+    """Column-0 lines open computations (headers may wrap over several
+    lines); indented lines are ops; a column-0 '}' closes."""
+    comps: Dict[str, List[Op]] = {}
+    current: Optional[str] = None
+    entry_marked: Optional[str] = None
+    for line in text.splitlines():
+        if line.startswith("}"):
+            current = None
+            continue
+        if line and not line[0].isspace():
+            m = _HEADER_RE.match(line)
+            if m:
+                current = m.group(2)
+                comps[current] = []
+                if m.group(1):
+                    entry_marked = current
+            continue
+        if current is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        root, name, rtype, opcode, rest = m.groups()
+        # operands: the leading %names inside the first paren group
+        operands = re.findall(r"%([\w.\-]+)", rest.split("),", 1)[0])
+        comps[current].append(Op(name=name, opcode=opcode, result=rtype,
+                                 operands=operands, attrs=rest,
+                                 root=bool(root)))
+    if entry_marked:
+        comps["__entry__"] = comps[entry_marked]
+    return comps
+
+
+def _op_defs(ops: List[Op]) -> Dict[str, Op]:
+    return {o.name: o for o in ops}
+
+
+def _trip_count(cond_ops: List[Op]) -> int:
+    """Trip count heuristic: the max scalar s32/u32/s64 constant in the
+    loop-condition computation (jax scans compare a counter against the
+    length constant)."""
+    best = 1
+    for o in cond_ops:
+        if o.opcode != "constant":
+            continue
+        dtype, dims = type_shape(o.result)
+        if dims != () or dtype not in ("s32", "u32", "s64", "u64"):
+            continue
+        m = re.search(r"constant\((-?\d+)\)", "constant(" + o.attrs)
+        if m:
+            best = max(best, int(m.group(1)))
+    return best
+
+
+_CALLED_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def compute_multipliers(comps: Dict[str, List[Op]]
+                        ) -> Tuple[Dict[str, float], Dict[str, int]]:
+    entry = comps.get("__entry__")
+    if entry is None:  # fall back: last computation is usually ENTRY
+        entry_name = list(comps)[-1]
+    else:
+        entry_name = [k for k, v in comps.items()
+                      if v is entry and k != "__entry__"][0]
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry_name] = 1.0
+    trips: Dict[str, int] = {}
+
+    # iterate to fixpoint (call graph is a DAG; few passes suffice)
+    for _ in range(20):
+        changed = False
+        new_mult = defaultdict(float)
+        new_mult[entry_name] = 1.0
+        for cname, ops in comps.items():
+            if cname == "__entry__" or mult.get(cname, 0) == 0:
+                continue
+            m_c = mult[cname]
+            for op in ops:
+                if op.opcode == "while":
+                    body = cond = None
+                    bm = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                    cm = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+                    if bm:
+                        body = bm.group(1)
+                    if cm:
+                        cond = cm.group(1)
+                    trip = _trip_count(comps.get(cond, [])) if cond else 1
+                    if body:
+                        trips[body] = trip
+                        new_mult[body] += m_c * trip
+                    if cond:
+                        new_mult[cond] += m_c * (trip + 1)
+                elif op.opcode == "conditional":
+                    bs = _BRANCHES_RE.search(op.attrs)
+                    names = []
+                    if bs:
+                        names = re.findall(r"%?([\w.\-]+)", bs.group(1))
+                    for nm in names:
+                        new_mult[nm] += m_c  # upper bound: every branch
+                else:
+                    for target in _CALLED_RE.findall(op.attrs):
+                        if target in comps and target != cname:
+                            new_mult[target] += m_c
+        if dict(new_mult) != {k: v for k, v in mult.items() if v}:
+            changed = True
+        mult = new_mult
+        if not changed:
+            break
+    return dict(mult), trips
+
+
+def _dot_flops(op: Op, defs: Dict[str, Op]) -> float:
+    _, out_dims = type_shape(op.result)
+    out_elems = math.prod(out_dims) if out_dims else 1
+    lhs = defs.get(op.operands[0]) if op.operands else None
+    contract = 1
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+    if m and lhs is not None:
+        _, lhs_dims = type_shape(lhs.result)
+        for idx in m.group(1).split(","):
+            if idx != "" and int(idx) < len(lhs_dims):
+                contract *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(op: Op, defs: Dict[str, Op]) -> float:
+    _, out_dims = type_shape(op.result)
+    out_elems = math.prod(out_dims) if out_dims else 1
+    rhs = defs.get(op.operands[1]) if len(op.operands) > 1 else None
+    if rhs is None:
+        return 0.0
+    _, k_dims = type_shape(rhs.result)
+    m = re.search(r"dim_labels=\S+?_(\w+?)->", op.attrs)
+    kernel_mult = 1
+    if m and k_dims:
+        labels = m.group(1)
+        for ch, d in zip(labels, k_dims):
+            if ch != "o":  # spatial digits and 'i' contribute; 'o' doesn't
+                kernel_mult *= d
+    else:
+        kernel_mult = math.prod(k_dims[:-1]) if k_dims else 1
+    return 2.0 * out_elems * kernel_mult
+
+
+def _group_size(op: Op, total_devices: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", op.attrs)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", op.attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return total_devices
+
+
+def _wire_bytes(op: Op, defs: Dict[str, Op], k: int) -> float:
+    """Ring-model per-device wire bytes for one collective execution."""
+    if k <= 1:
+        return 0.0
+    frac = (k - 1) / k
+    out_b = type_bytes(op.result)
+    in_b = sum(type_bytes(defs[o].result) for o in op.operands if o in defs)
+    if op.opcode == "all-reduce":
+        return 2.0 * in_b * frac
+    if op.opcode == "all-gather":
+        return out_b * frac
+    if op.opcode == "reduce-scatter":
+        return in_b * frac
+    if op.opcode == "all-to-all":
+        return in_b * frac
+    if op.opcode in ("collective-permute", "collective-broadcast"):
+        return max(in_b, out_b)
+    return in_b
+
+
+def analyze_hlo(text: str, total_devices: int = 1) -> Analysis:
+    comps = parse_computations(text)
+    comps.pop("__entry__", None)
+    mult, trips = compute_multipliers(comps)
+
+    flops = dot_flops = conv_flops = 0.0
+    mem = 0.0
+    param_bytes = 0.0
+    coll_bytes: Dict[str, float] = defaultdict(float)
+    coll_dtypes: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: defaultdict(float))
+    coll_count = 0
+    histogram: Dict[str, int] = defaultdict(int)
+    top_mem: List[tuple] = []
+    top_coll: List[tuple] = []
+
+    entry_name = None
+    for cname, ops in comps.items():
+        for o in ops:
+            if o.opcode == "parameter" and mult.get(cname, 0) == 1.0:
+                pass
+        # entry params counted below
+
+    # computations that are fusion bodies: their internals don't
+    # materialize — only the fusion op's output does.
+    fusion_bodies = set()
+    fusion_target = {}
+    for ops in comps.values():
+        for op in ops:
+            if op.opcode == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+                if m:
+                    fusion_bodies.add(m.group(1))
+                    fusion_target[op.name] = m.group(1)
+
+    # pure dtype-cast fusions (no layout movement): CPU artifacts — the
+    # TPU MXU consumes bf16 directly and these don't exist there.
+    CAST_ONLY = {"parameter", "convert", "bitcast", "get-tuple-element",
+                 "tuple"}
+    # + layout movement: still real traffic, but at the semantic dtype
+    PASSTHROUGH = CAST_ONLY | {"copy", "transpose", "reshape"}
+
+    def _convert_only(cname: str) -> bool:
+        return all(o.opcode in CAST_ONLY for o in comps.get(cname, []))
+
+    def _body_mentions_bf16(cname: str) -> bool:
+        return any(type_shape(o.result)[0] == "bf16"
+                   for o in comps.get(cname, []))
+
+    def _bf16_roundtrip(name: str, defs: Dict[str, Op],
+                        hops: int = 5) -> bool:
+        """True if the (f32) value named ``name`` is a converted bf16
+        value — semantically 2 bytes/element on TPU. Follows copy/
+        bitcast/transpose/convert-only-fusion chains."""
+        while hops > 0:
+            hops -= 1
+            d = defs.get(name)
+            if d is None:
+                return False
+            if type_shape(d.result)[0] == "bf16":
+                return True
+            if d.opcode == "convert":
+                src = defs.get(d.operands[0]) if d.operands else None
+                if src and type_shape(src.result)[0] == "bf16":
+                    return True
+                name = d.operands[0] if d.operands else None
+                continue
+            if d.opcode == "fusion" and d.name in fusion_target and all(
+                    o.opcode in PASSTHROUGH
+                    for o in comps.get(fusion_target[d.name], [])):
+                if _body_mentions_bf16(fusion_target[d.name]):
+                    return True
+                name = d.operands[0] if d.operands else None
+                continue
+            if d.opcode in ("copy", "bitcast", "transpose", "reshape",
+                            "all-reduce"):
+                name = d.operands[0] if d.operands else None
+                continue
+            return False
+        return False
+
+    def materialized_bytes(op: Op, defs: Dict[str, Op]) -> float:
+        """HBM write bytes for one op execution. dynamic-update-slice is
+        in-place in XLA: traffic = the updated slice, not the full array
+        (this is what makes scan stacks cheap per iteration)."""
+        if op.opcode == "dynamic-update-slice":
+            upd = defs.get(op.operands[1]) if len(op.operands) > 1 else None
+            return type_bytes(upd.result) if upd else type_bytes(op.result)
+        if op.opcode == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+            if m and m.group(1) in comps:
+                fops = comps[m.group(1)]
+                fbytes = type_bytes(op.result)
+                # in-place scan-stack update fused behind (bit)casts:
+                # count the update slice, not the whole stack buffer
+                for fo in fops:
+                    if fo.opcode == "dynamic-update-slice" and \
+                            type_bytes(fo.result) >= 0.5 * fbytes:
+                        fdefs = _op_defs(fops)
+                        upd = (fdefs.get(fo.operands[1])
+                               if len(fo.operands) > 1 else None)
+                        if upd is not None:
+                            return type_bytes(upd.result)
+        return type_bytes(op.result)
+
+    for cname, ops in comps.items():
+        m_c = mult.get(cname, 0.0)
+        if m_c == 0.0:
+            continue
+        in_fusion = cname in fusion_bodies
+        defs = _op_defs(ops)
+        for op in ops:
+            histogram[op.opcode] += 1
+            if op.opcode == "dot":
+                f = _dot_flops(op, defs) * m_c
+                dot_flops += f
+                flops += f
+            elif op.opcode == "convolution":
+                f = _conv_flops(op, defs) * m_c
+                conv_flops += f
+                flops += f
+            elif op.opcode in COLLECTIVES or (
+                    op.opcode.endswith("-start") and
+                    op.opcode[:-6] in COLLECTIVES):
+                base = op.opcode[:-6] if op.opcode.endswith("-start") \
+                    else op.opcode
+                k = _group_size(op, total_devices)
+                wb = _wire_bytes(op, defs, k) * m_c
+                dtype, _ = type_shape(op.result)
+                # semantic-dtype correction, per tuple element: each
+                # operand that is a bf16->f32 round-trip runs in bf16 on
+                # TPU. Factor = weighted by operand sizes.
+                if dtype == "f32" or op.result.startswith("("):
+                    tot = corr = 0.0
+                    for o in op.operands:
+                        d = defs.get(o)
+                        if d is None:
+                            continue
+                        ob = type_bytes(d.result)
+                        tot += ob
+                        if type_shape(d.result)[0] == "f32" and \
+                                _bf16_roundtrip(o, defs):
+                            corr += ob / 2
+                    if tot > 0 and corr > 0:
+                        wb *= (tot - corr) / tot
+                        dtype = "bf16*" if corr >= tot / 2 else "mixed*"
+                coll_bytes[base] += wb
+                coll_dtypes[base][dtype] += wb
+                coll_count += 1
+                top_coll.append((wb, base, k, m_c, cname[:30],
+                                 op.result[:46]))
+            if op.opcode in MATERIALIZING and not in_fusion:
+                b = materialized_bytes(op, defs) * m_c
+                if op.opcode == "fusion" and op.name in fusion_target \
+                        and _convert_only(fusion_target[op.name]):
+                    b = 0.0  # CPU dtype/layout artifact; fused on TPU
+                elif op.opcode in ("dot", "convolution") and op.operands \
+                        and all(_bf16_roundtrip(o, defs)
+                                for o in op.operands[:2]):
+                    b *= 0.5  # bf16 dot/conv upcast by the CPU backend
+                elif op.opcode in COLLECTIVES and op.operands and \
+                        type_shape(op.result)[0] == "f32" and \
+                        _bf16_roundtrip(op.operands[0], defs):
+                    b *= 0.5  # collective carries a bf16 value on TPU
+                elif op.opcode == "fusion" and type_shape(
+                        op.result)[0] == "f32" and \
+                        op.name in fusion_target and \
+                        _body_mentions_bf16(fusion_target[op.name]):
+                    b *= 0.5  # f32 fusion of bf16-origin values (CPU
+                    # upcast artifact; TPU keeps the chain in bf16)
+                mem += b
+                if b > 0:
+                    top_mem.append((b, op.opcode, m_c, cname[:30],
+                                    op.result[:42], op.name[:34]))
+
+    # entry parameters = resident inputs (params/opt state/batch), read once
+    entry = None
+    for cname, ops in comps.items():
+        if mult.get(cname) == 1.0 and any(
+                o.opcode == "parameter" for o in ops):
+            if entry is None or len(ops) > len(comps.get(entry, [])):
+                entry = cname
+    if entry:
+        for op in comps[entry]:
+            if op.opcode == "parameter":
+                param_bytes += type_bytes(op.result)
+
+    top_mem.sort(reverse=True)
+    top_coll.sort(reverse=True)
+    return Analysis(
+        flops=flops,
+        dot_flops=dot_flops,
+        conv_flops=conv_flops,
+        memory_bytes=2.0 * mem + param_bytes,
+        parameter_bytes=param_bytes,
+        collective_bytes=dict(coll_bytes),
+        collective_dtypes={k: dict(v) for k, v in coll_dtypes.items()},
+        collective_count=coll_count,
+        trip_counts=trips,
+        op_histogram=dict(histogram),
+        top_memory_ops=top_mem[:40],
+        top_collective_ops=top_coll[:40],
+    )

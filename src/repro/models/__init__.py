@@ -1,0 +1,3 @@
+"""Pure-JAX model zoo (no flax): transformer (dense/moe/vlm), Mamba2
+hybrid, xLSTM, Whisper enc-dec, ResNet-50."""
+from repro.models.registry import build_model, init_model_state  # noqa: F401

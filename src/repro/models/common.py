@@ -1,0 +1,188 @@
+"""Functional module machinery: boxed params with logical axes, inits, norms.
+
+Params are nested dicts of ``Boxed(value, axes)`` during init; ``unbox``
+splits them into a value tree and a parallel logical-axes tree. The axes
+tree is consumed by ``repro.distributed.sharding`` to build PartitionSpecs
+(MaxText-style logical axis rules), so models never hard-code mesh axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Boxed:
+    """A parameter value tagged with logical axis names (one per dim).
+
+    Registered as a pytree node (axes = static aux data) so Boxed trees
+    flow through jit / eval_shape — which is how the dry-run derives the
+    (shapes, logical-axes) pair without allocating anything.
+    """
+
+    value: jax.Array
+    axes: Tuple[Optional[str], ...]
+
+    def __post_init__(self):
+        assert len(self.axes) == self.value.ndim, (self.axes, self.value.shape)
+
+
+jax.tree_util.register_pytree_node(
+    Boxed,
+    lambda b: ((b.value,), b.axes),
+    lambda axes, ch: Boxed.__new__(Boxed) if False else _boxed_make(axes, ch),
+)
+
+
+def _boxed_make(axes, children):
+    b = Boxed.__new__(Boxed)
+    b.value = children[0]
+    b.axes = axes
+    return b
+
+
+def unbox(tree: PyTree) -> Tuple[PyTree, PyTree]:
+    """Split a Boxed tree into (values, axes) trees of identical structure."""
+    is_boxed = lambda x: isinstance(x, Boxed)
+    values = jax.tree.map(lambda b: b.value, tree, is_leaf=is_boxed)
+    axes = jax.tree.map(lambda b: b.axes, tree, is_leaf=is_boxed)
+    return values, axes
+
+
+def axes_tree_of(tree: PyTree) -> PyTree:
+    return unbox(tree)[1]
+
+
+# ---------------------------------------------------------------------------
+# Initializers (fan-in scaled normal, as used by the reference models)
+# ---------------------------------------------------------------------------
+
+
+def normal_init(key, shape, stddev=0.02, dtype=jnp.float32):
+    return stddev * jax.random.normal(key, shape, dtype)
+
+
+def fan_in_init(key, shape, fan_in_dims: Sequence[int] = (-2,), dtype=jnp.float32):
+    fan_in = 1
+    for d in fan_in_dims:
+        fan_in *= shape[d]
+    return jax.random.normal(key, shape, dtype) / math.sqrt(max(fan_in, 1))
+
+
+def he_init(key, shape, fan_in, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * math.sqrt(2.0 / fan_in)
+
+
+def dense(key, d_in: int, d_out: int, axes: Tuple[Optional[str], str],
+          stacked: int = 0, dtype=jnp.float32) -> Boxed:
+    """A (stacked?, d_in, d_out) weight, fan-in initialized."""
+    shape = (d_in, d_out) if not stacked else (stacked, d_in, d_out)
+    full_axes = axes if not stacked else ("layers",) + tuple(axes)
+    return Boxed(fan_in_init(key, shape, (-2,), dtype), tuple(full_axes))
+
+
+def zeros(shape, axes, dtype=jnp.float32) -> Boxed:
+    return Boxed(jnp.zeros(shape, dtype), tuple(axes))
+
+
+def ones(shape, axes, dtype=jnp.float32) -> Boxed:
+    return Boxed(jnp.ones(shape, dtype), tuple(axes))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, stacked: int = 0) -> Dict[str, Boxed]:
+    shape = (d,) if not stacked else (stacked, d)
+    axes = ("embed",) if not stacked else ("layers", "embed")
+    return {"scale": ones(shape, axes)}
+
+
+def layernorm_init(d: int, stacked: int = 0) -> Dict[str, Boxed]:
+    shape = (d,) if not stacked else (stacked, d)
+    axes = ("embed",) if not stacked else ("layers", "embed")
+    return {"scale": ones(shape, axes), "bias": zeros(shape, axes)}
+
+
+def apply_norm(p: Dict[str, jax.Array], x: jax.Array, kind: str,
+               eps: float = 1e-5) -> jax.Array:
+    """Normalize in the compute dtype with fp32 *statistics* only.
+
+    The statistics reductions accumulate in fp32 (``dtype=`` arg) without
+    materializing an fp32 copy of the activation — on TPU this is the
+    difference between one bf16 stream and an extra fp32 stream per norm
+    (measured in EXPERIMENTS.md §Perf iteration 1).
+    """
+    dtype = x.dtype
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True,
+                       dtype=jnp.float32)
+        inv = jax.lax.rsqrt(var + eps).astype(dtype)
+        y = x * inv * p["scale"].astype(dtype)
+    elif kind == "layernorm":
+        mean = jnp.mean(x, axis=-1, keepdims=True, dtype=jnp.float32)
+        mean_sq = jnp.mean(jnp.square(x), axis=-1, keepdims=True,
+                           dtype=jnp.float32)
+        var = jnp.maximum(mean_sq - jnp.square(mean), 0.0)
+        inv = jax.lax.rsqrt(var + eps).astype(dtype)
+        y = (x - mean.astype(dtype)) * inv
+        y = y * p["scale"].astype(dtype) + p["bias"].astype(dtype)
+    else:
+        raise ValueError(kind)
+    return y.astype(dtype)
+
+
+def norm_init(kind: str, d: int, stacked: int = 0) -> Dict[str, Boxed]:
+    return rmsnorm_init(d, stacked) if kind == "rmsnorm" else layernorm_init(d, stacked)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+
+def split_keys(key, n: int):
+    return jax.random.split(key, n)
+
+
+def cast_tree(tree: PyTree, dtype) -> PyTree:
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )
+
+
+def count_params(tree: PyTree) -> int:
+    return sum(x.size for x in jax.tree.leaves(tree))
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def cross_entropy_loss(logits: jax.Array, targets: jax.Array,
+                       ignore_id: int = -1,
+                       label_smoothing: float = 0.0) -> Tuple[jax.Array, jax.Array]:
+    """Token-mean softmax cross entropy. logits (..., V) fp; targets int."""
+    logits = logits.astype(jnp.float32)
+    v = logits.shape[-1]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    target_logit = jnp.take_along_axis(
+        logits, targets[..., None].clip(0), axis=-1
+    )[..., 0]
+    nll = lse - target_logit
+    if label_smoothing:
+        mean_logit = jnp.mean(logits, axis=-1)
+        smooth_nll = lse - mean_logit
+        nll = (1 - label_smoothing) * nll + label_smoothing * smooth_nll
+    mask = (targets != ignore_id).astype(jnp.float32)
+    total = jnp.maximum(mask.sum(), 1.0)
+    return (nll * mask).sum() / total, mask.sum()

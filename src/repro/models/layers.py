@@ -1,0 +1,474 @@
+"""Transformer building blocks: RoPE, GQA attention (train/prefill/decode),
+MLPs, and a GShard-style capacity-based MoE layer.
+
+All functions are pure; params come from the matching ``*_init``. Logical
+sharding axes are declared at init (see distributed/sharding.py) and
+activations are pinned via ``constrain``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import common
+from repro.models.common import Boxed, dense, gelu, zeros
+
+Params = Dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding (llama split-half convention)
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, Dh); positions: (B, S) int32."""
+    half = x.shape[-1] // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attention_init(key, cfg: ModelConfig, stacked: int = 0,
+                   kv_dim: Optional[int] = None) -> Params:
+    """QKV + output projection. Weights shaped (d, H, Dh) so the heads dim
+    carries a logical axis the sharding rules can map to the model axis."""
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    kv = cfg.n_kv_heads
+    kd = kv_dim or d
+    ks = jax.random.split(key, 4)
+    L = (stacked,) if stacked else ()
+    la = ("layers",) if stacked else ()
+
+    def w(k, d_in, n_heads, name):
+        arr = common.fan_in_init(k, L + (d_in, n_heads, dh), (-3,))
+        return Boxed(arr, la + ("embed", name, "head_dim"))
+
+    p: Params = {
+        "wq": w(ks[0], d, h, "heads"),
+        "wk": w(ks[1], kd, kv, "kv_heads"),
+        "wv": w(ks[2], kd, kv, "kv_heads"),
+        "wo": Boxed(
+            common.fan_in_init(ks[3], L + (h, dh, d), (-3, -2)),
+            la + ("heads", "head_dim", "embed"),
+        ),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros(L + (h, dh), la + ("heads", "head_dim"))
+        p["bk"] = zeros(L + (kv, dh), la + ("kv_heads", "head_dim"))
+        p["bv"] = zeros(L + (kv, dh), la + ("kv_heads", "head_dim"))
+    return p
+
+
+def _qkv(p: Params, x: jax.Array, kv_x: jax.Array, cfg: ModelConfig,
+         positions: Optional[jax.Array], kv_positions: Optional[jax.Array],
+         use_rope: bool):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, kv_positions, cfg.rope_theta)
+    # "attn_batch" == "batch" normally; when heads can't shard it also
+    # carries the model axis (batch-parallel attention fallback)
+    q = constrain(q, ("attn_batch", "seq", "heads", None))
+    k = constrain(k, ("attn_batch", "kv_seq", "kv_heads", None))
+    v = constrain(v, ("attn_batch", "kv_seq", "kv_heads", None))
+    return q, k, v
+
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """GQA: repeat kv heads to match query heads (reference path)."""
+    b, s, kv, dh = k.shape
+    if kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // kv, axis=2)
+
+
+def naive_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
+                    q_offset=0) -> jax.Array:
+    """Materializes (B,H,Sq,Sk) scores. Reference / smoke-test path."""
+    b, sq, h, dh = q.shape
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    scale = 1.0 / math.sqrt(dh)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    qi = jnp.arange(sq)[:, None] + q_offset
+    kj = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= qi - kj < window
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
+                      q_chunk: int = 1024, kv_chunk: int = 1024,
+                      precision: str = "f32",
+                      inner_checkpoint: bool = False) -> jax.Array:
+    """Online-softmax attention, O(S * chunk) memory (TPU-native flash
+    equivalent in pure jnp; the Pallas kernel in kernels/flash_attention.py
+    is the hot-path twin validated against this).
+
+    precision="bf16" keeps q/k/v tiles in the compute dtype and uses fp32
+    only for the softmax statistics and accumulator (halves the score
+    traffic — §Perf). inner_checkpoint=True wraps each q-block in
+    jax.checkpoint so the backward pass recomputes p-tiles instead of
+    stacking them across the whole sequence (flash-backward memory).
+    """
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    sq_real, sk_real = sq, sk
+    pad_q = (-sq) % q_chunk
+    pad_k = (-sk) % kv_chunk
+    if pad_q:  # e.g. VLM early fusion: seq = text + n_patches
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        sq += pad_q
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        sk += pad_k
+    n_q, n_k = sq // q_chunk, sk // kv_chunk
+    scale = 1.0 / math.sqrt(dh)
+
+    tile_dtype = q.dtype if precision == "bf16" else jnp.float32
+    qr = q.reshape(b, n_q, q_chunk, h, dh).astype(tile_dtype)
+    kr = k.reshape(b, n_k, kv_chunk, h, dh).astype(tile_dtype)
+    vr = v.reshape(b, n_k, kv_chunk, h, dh).astype(tile_dtype)
+
+    def q_block(qi, q_blk):
+        m0 = jnp.full((b, h, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, q_chunk, h, dh), jnp.float32)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            kj, k_blk, v_blk = inputs
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_blk,
+                           preferred_element_type=jnp.float32)
+            s = s * scale
+            qpos = qi * q_chunk + jnp.arange(q_chunk)[:, None]
+            kpos = kj * kv_chunk + jnp.arange(kv_chunk)[None, :]
+            mask = kpos < sk_real  # exclude kv padding
+            if causal:
+                mask &= kpos <= qpos
+            if window is not None:
+                mask &= qpos - kpos < window
+            s = jnp.where(mask, s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # exp in the tile dtype: p lives (and is saved for backward)
+            # at 2 bytes/elem; statistics accumulate in fp32 (§Perf)
+            p = jnp.exp((s - m_new[..., None]).astype(tile_dtype))
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1, dtype=jnp.float32)
+            acc = acc * corr.transpose(0, 2, 1)[..., None] + jnp.einsum(
+                "bhqk,bkhd->bqhd", p, v_blk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        ks_idx = jnp.arange(n_k)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (ks_idx, kr.transpose(1, 0, 2, 3, 4), vr.transpose(1, 0, 2, 3, 4)),
+        )
+        denom = jnp.maximum(l, 1e-30)  # fully-padded q rows: avoid 0/0
+        return acc / denom.transpose(0, 2, 1)[..., None]
+
+    if inner_checkpoint:
+        q_block = jax.checkpoint(
+            q_block, policy=jax.checkpoint_policies.nothing_saveable,
+            static_argnums=())
+    out = jax.lax.map(
+        lambda args: q_block(args[0], args[1]),
+        (jnp.arange(n_q), qr.transpose(1, 0, 2, 3, 4)),
+    )
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, dh)
+    if pad_q:
+        out = out[:, :sq_real]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, valid_len: jax.Array,
+                     window: Optional[int] = None) -> jax.Array:
+    """Single-token query vs cache. q: (B,1,H,Dh); cache: (B,S,KV,Dh).
+
+    GQA is handled by a grouped einsum — the KV cache is never
+    materialized at H heads (an 8x copy for qwen2-72b; §Perf bonus cell).
+    """
+    b, one, h, dh = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    qg = q.reshape(b, one, kv, g, dh)
+    scale = 1.0 / math.sqrt(dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache).astype(
+        jnp.float32) * scale
+    kj = jnp.arange(s)[None, None, None, None, :]
+    mask = kj < valid_len.reshape(-1, 1, 1, 1, 1)
+    if window is not None:
+        mask &= kj >= valid_len.reshape(-1, 1, 1, 1, 1) - window
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v_cache)
+    return out.reshape(b, one, h, dh)
+
+
+def attention_apply(
+    p: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    impl: str = "chunked",
+    kv_x: Optional[jax.Array] = None,  # cross-attention source
+    kv_positions: Optional[jax.Array] = None,
+    cache: Optional[Params] = None,  # {"k","v"} (B,Smax,KV,Dh)
+    cache_index: Optional[jax.Array] = None,
+    use_rope: bool = True,
+) -> Tuple[jax.Array, Optional[Params]]:
+    """Returns (output, updated_cache).
+
+    If the cache is *smaller* than the position index it behaves as a ring
+    buffer (sliding-window serving): writes go to ``index % cache_len`` and
+    the whole ring is valid once full. RoPE phases are absolute, so scores
+    are storage-order independent and the ring needs no unrotation.
+    """
+    cross = kv_x is not None
+    kv_x = x if kv_x is None else kv_x
+    kv_positions = positions if kv_positions is None else kv_positions
+    q, k, v = _qkv(p, x, kv_x, cfg, positions, kv_positions,
+                   use_rope and not cross and cfg.pos_embedding == "rope")
+
+    opt = impl == "chunked_opt"
+    chunked = functools.partial(
+        chunked_attention, precision="bf16" if opt else "f32",
+        inner_checkpoint=opt)
+
+    new_cache = None
+    if cache is not None and not cross:
+        cache_len = cache["k"].shape[1]
+        idx = cache_index
+        if x.shape[1] == 1:  # decode
+            write = idx % cache_len if window else idx
+            k_cache = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, write, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, write, 0, 0))
+            new_cache = {"k": k_cache, "v": v_cache}
+            valid = jnp.full((x.shape[0],), jnp.minimum(idx + 1, cache_len))
+            out = decode_attention(q, k_cache.astype(q.dtype),
+                                   v_cache.astype(q.dtype), valid,
+                                   None)  # ring IS the window
+        else:  # prefill into cache (keep the last cache_len positions)
+            k_in, v_in = k, v
+            if k.shape[1] > cache_len:
+                k_in, v_in = k[:, -cache_len:], v[:, -cache_len:]
+            k_cache = jax.lax.dynamic_update_slice(
+                cache["k"], k_in.astype(cache["k"].dtype), (0, idx, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                cache["v"], v_in.astype(cache["v"].dtype), (0, idx, 0, 0))
+            new_cache = {"k": k_cache, "v": v_cache}
+            out = chunked(q, k, v, causal=causal, window=window) \
+                if impl.startswith("chunked") else \
+                naive_attention(q, k, v, causal=causal, window=window)
+    else:
+        fn = chunked if impl.startswith("chunked") else naive_attention
+        if impl.startswith("chunked") and (x.shape[1] < 128 or
+                                           kv_x.shape[1] < 128):
+            fn = naive_attention  # smoke shapes
+        out = fn(q, k, v, causal=causal and not cross, window=window)
+
+    out = constrain(out, ("attn_batch", "seq", "heads", None))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return constrain(y, ("batch", "seq", "embed")), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg: ModelConfig, stacked: int = 0,
+             d_ff: Optional[int] = None) -> Params:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_variant == "swiglu":
+        return {
+            "w_gate": dense(ks[0], d, ff, ("embed", "ffn"), stacked),
+            "w_up": dense(ks[1], d, ff, ("embed", "ffn"), stacked),
+            "w_down": dense(ks[2], ff, d, ("ffn", "embed"), stacked),
+        }
+    return {
+        "w_up": dense(ks[0], d, ff, ("embed", "ffn"), stacked),
+        "w_down": dense(ks[1], ff, d, ("ffn", "embed"), stacked),
+    }
+
+
+def mlp_apply(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if "w_gate" in p:
+        h = jax.nn.silu(x @ p["w_gate"].astype(x.dtype)) * (
+            x @ p["w_up"].astype(x.dtype))
+    else:
+        h = gelu(x @ p["w_up"].astype(x.dtype))
+    h = constrain(h, ("batch", "seq", "ffn"))
+    y = h @ p["w_down"].astype(x.dtype)
+    return constrain(y, ("batch", "seq", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# MoE: GShard/GLaM-style grouped capacity dispatch (EP over "experts")
+# ---------------------------------------------------------------------------
+
+# Dispatch-tensor size per device is G_local*S_g*E_local*C; S_g=256 keeps
+# it in the tens-of-MB range for every assigned MoE arch (see DESIGN.md).
+MOE_GROUP = 256  # tokens per dispatch group
+CAPACITY_FACTOR = 1.25
+
+
+def moe_init(key, cfg: ModelConfig, stacked: int = 0) -> Params:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    L = (stacked,) if stacked else ()
+    la = ("layers",) if stacked else ()
+
+    def ew(k, d_in, d_out, ax):
+        arr = common.fan_in_init(k, L + (e, d_in, d_out), (-2,))
+        return Boxed(arr, la + ("experts",) + ax)
+
+    p: Params = {
+        "router": dense(ks[0], d, e, ("embed", "experts_router"), stacked),
+        "w_up": ew(ks[2], d, ff, ("embed", "ffn")),
+        "w_down": ew(ks[3], ff, d, ("ffn", "embed")),
+    }
+    if cfg.mlp_variant == "swiglu":
+        p["w_gate"] = ew(ks[1], d, ff, ("embed", "ffn"))
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], cfg, stacked,
+                               d_ff=cfg.d_ff * cfg.n_shared_experts)
+    return p
+
+
+def moe_apply(p: Params, x: jax.Array, cfg: ModelConfig,
+              capacity_factor: Optional[float] = None
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output, load_balance_aux_loss)."""
+    if capacity_factor is None:
+        capacity_factor = CAPACITY_FACTOR  # read at call time (testable)
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    n_tokens = b * s
+    g_size = min(MOE_GROUP, n_tokens)
+    n_groups = n_tokens // g_size
+    xg = x.reshape(n_groups, g_size, d)
+    xg = constrain(xg, ("batch", None, "embed"))
+
+    logits = jnp.einsum("gsd,de->gse", xg, p["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+
+    # Switch-style load-balance aux loss.
+    density = jnp.mean(
+        jax.nn.one_hot(jnp.argmax(probs, -1), e, dtype=jnp.float32), axis=1)
+    density_proxy = jnp.mean(probs, axis=1)
+    aux = jnp.mean(density * density_proxy) * (e * e)
+
+    cap = max(4, int(g_size * k * capacity_factor / e))
+    # dispatch is 0/1 placement; combine = dispatch * per-token gate, so
+    # only ONE (g,s,e,c) tensor is built (the gate rides a (g,s,e) tensor)
+    # — §Perf MoE iteration: halves the one-hot construction traffic and
+    # keeps everything in the compute dtype.
+    dispatch = jnp.zeros((n_groups, g_size, e, cap), dtype=x.dtype)
+    gates_full = jnp.zeros((n_groups, g_size, e), dtype=jnp.float32)
+    remaining = probs
+    position_in_expert = jnp.zeros((n_groups, e), jnp.int32)
+    for _ in range(k):
+        idx = jnp.argmax(remaining, axis=-1)  # (g, s)
+        gate = jnp.take_along_axis(remaining, idx[..., None], -1)[..., 0]
+        onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)
+        pos = position_in_expert[:, None, :] + jnp.cumsum(onehot, axis=1) - onehot
+        pos = jnp.sum(pos * onehot, axis=-1)  # (g, s) slot within expert
+        keep = pos < cap
+        dispatch = dispatch + (
+            jax.nn.one_hot(idx, e, dtype=x.dtype)[..., None]
+            * jax.nn.one_hot(pos, cap, dtype=x.dtype)[:, :, None, :]
+            * keep[..., None, None]
+        )
+        gates_full = gates_full + onehot * (gate * keep)[..., None]
+        position_in_expert = position_in_expert + jnp.sum(onehot, axis=1)
+        remaining = remaining * (1.0 - jax.nn.one_hot(idx, e,
+                                                      dtype=jnp.float32))
+
+    dispatch = constrain(dispatch, ("batch", None, "experts", None))
+    combine = dispatch * gates_full[..., None].astype(x.dtype)
+    combine = constrain(combine, ("batch", None, "experts", None))
+    # dispatch: (g, s, e, c) x (g, s, d) -> (g, e, c, d); EP all-to-all here
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xg)
+    xe = constrain(xe, ("batch", "experts", None, "embed"))
+    if "w_gate" in p:
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe,
+                                   p["w_gate"].astype(x.dtype)))
+        h = h * jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(x.dtype))
+    else:
+        h = gelu(jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(x.dtype)))
+    h = constrain(h, ("batch", "experts", None, "ffn"))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(x.dtype))
+    # NOTE (§Perf mixtral iter 4): ye is partial-summed over the model
+    # axis when the ffn dim is TP-sharded; do NOT constrain it here — the
+    # combine einsum is linear in ye, so the partitioner can delay the
+    # all-reduce past it onto y, which is capacity_factor*k times smaller.
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), ye)
+    y = constrain(y, ("batch", None, "embed"))
+
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], xg, cfg)
+    return y.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding + LM head
+# ---------------------------------------------------------------------------
+
+
+def embedding_init(key, cfg: ModelConfig) -> Params:
+    p: Params = {
+        "table": Boxed(
+            common.normal_init(key, (cfg.vocab_size, cfg.d_model)),
+            ("vocab", "embed"),
+        )
+    }
+    return p
+
+
+def embed(p: Params, tokens: jax.Array, compute_dtype) -> jax.Array:
+    x = p["table"].astype(compute_dtype)[tokens]
+    return constrain(x, ("batch", "seq", "embed"))
+
+
+def lm_head(table_or_w: jax.Array, x: jax.Array, tied: bool) -> jax.Array:
+    w = table_or_w.astype(x.dtype)
+    logits = x @ (w.T if tied else w)
+    return constrain(logits, ("batch", "seq", "vocab"))

@@ -1,0 +1,307 @@
+"""Mamba2 blocks and the Zamba2-style hybrid model.
+
+Zamba2: a backbone of Mamba2 blocks with a small set of *shared*
+(attention + MLP) transformer blocks cycled in every ``shared_attn_every``
+layers. Each shared application takes concat(hidden, initial_embedding)
+through a learned 2d->d projection (the Zamba "shared transformer"
+pattern), so the shared weights are reused with fresh inputs.
+
+TPU adaptation (documented in DESIGN.md): in serve mode the shared
+attention uses a sliding window (SHARED_ATTN_SERVE_WINDOW) so the decode
+state stays O(window) — the Mamba backbone already gives O(1)/token.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import common, layers, ssd
+from repro.models.common import Boxed, apply_norm, norm_init, unbox
+
+Params = Dict[str, Any]
+
+SHARED_ATTN_SERVE_WINDOW = 4096
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def mamba2_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_head_dim
+    conv_ch = d_in + 2 * cfg.ssm_state
+    return d_in, n_heads, conv_ch
+
+
+def mamba2_init(key, cfg: ModelConfig, stacked: int = 0) -> Params:
+    d = cfg.d_model
+    d_in, n_h, conv_ch = mamba2_dims(cfg)
+    ks = jax.random.split(key, 4)
+    L = (stacked,) if stacked else ()
+    la = ("layers",) if stacked else ()
+    return {
+        "norm": norm_init(cfg.norm, d, stacked),
+        # in_proj -> [z(d_in), x(d_in), B(ds), C(ds), dt(n_h)]
+        "w_in": Boxed(
+            common.fan_in_init(ks[0], L + (d, 2 * d_in + 2 * cfg.ssm_state + n_h),
+                               (-2,)),
+            la + ("embed", "inner")),
+        "conv_w": Boxed(
+            common.normal_init(ks[1], L + (cfg.ssm_conv_width, conv_ch), 0.1),
+            la + ("conv_spatial", "inner")),
+        "conv_b": common.zeros(L + (conv_ch,), la + ("inner",)),
+        "A_log": Boxed(jnp.zeros(L + (n_h,)), la + ("ssm_heads",)),
+        "dt_bias": common.zeros(L + (n_h,), la + ("ssm_heads",)),
+        "D": common.ones(L + (n_h,), la + ("ssm_heads",)),
+        "out_norm": norm_init("rmsnorm", d_in, stacked),
+        "w_out": Boxed(common.fan_in_init(ks[2], L + (d_in, d), (-2,)),
+                       la + ("inner", "embed")),
+    }
+
+
+def _split_in(cfg: ModelConfig, proj: jax.Array):
+    d_in, n_h, _ = mamba2_dims(cfg)
+    ds = cfg.ssm_state
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in:2 * d_in + 2 * ds]
+    dt = proj[..., 2 * d_in + 2 * ds:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv along seq. xbc: (B,S,C); w: (W,C).
+
+    Returns (out, new_state) where state holds the last W-1 inputs.
+    """
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(
+        xp[:, i:i + xbc.shape[1], :] * w[i].astype(xbc.dtype)
+        for i in range(width)
+    ) + b.astype(xbc.dtype)
+    new_state = xp[:, -(width - 1):, :]
+    return jax.nn.silu(out), new_state
+
+
+def mamba2_apply(p: Params, x: jax.Array, cfg: ModelConfig,
+                 conv_state=None, ssm_state=None,
+                 decode: bool = False) -> Tuple[jax.Array, Any, Any]:
+    """Returns (out, new_conv_state, new_ssm_state)."""
+    d_in, n_h, _ = mamba2_dims(cfg)
+    ds = cfg.ssm_state
+    dh = cfg.ssm_head_dim
+    h_res = apply_norm(p["norm"], x, cfg.norm, cfg.norm_eps)
+    proj = h_res @ p["w_in"].astype(x.dtype)
+    z, xbc, dt = _split_in(cfg, proj)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs = xbc[..., :d_in]
+    B = xbc[..., d_in:d_in + ds]
+    C = xbc[..., d_in + ds:]
+    b, s, _ = x.shape
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H,) negative
+    log_decay = dt * a  # (B,S,H)
+
+    xh = xs.reshape(b, s, n_h, dh)
+    xbar = xh * dt[..., None].astype(x.dtype)
+    # B/C shared across heads (single group)
+    Bh = jnp.broadcast_to(B[:, :, None, :], (b, s, n_h, ds)).astype(x.dtype)
+    Ch = jnp.broadcast_to(C[:, :, None, :], (b, s, n_h, ds)).astype(x.dtype)
+
+    if decode:
+        y, new_ssm = ssd.gla_decode_step(
+            Ch[:, 0], Bh[:, 0], xbar[:, 0], log_decay[:, 0], ssm_state)
+        y = y[:, None]
+    else:
+        y, new_ssm = ssd.chunked_gla(
+            Ch, Bh, xbar, log_decay, initial_state=ssm_state)
+    y = y + xh * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(b, s, d_in)
+    y = apply_norm(p["out_norm"], y * jax.nn.silu(z), "rmsnorm", cfg.norm_eps)
+    out = y @ p["w_out"].astype(x.dtype)
+    return constrain(out, ("batch", "seq", "embed")), new_conv, new_ssm
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid model
+# ---------------------------------------------------------------------------
+
+
+def shared_block_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "concat_proj": common.dense(ks[0], 2 * cfg.d_model, cfg.d_model,
+                                    ("embed", "embed")),
+        "norm1": norm_init(cfg.norm, cfg.d_model),
+        "attn": layers.attention_init(ks[1], cfg),
+        "norm2": norm_init(cfg.norm, cfg.d_model),
+        "mlp": layers.mlp_init(ks[2], cfg),
+    }
+
+
+class Zamba2Model:
+    def __init__(self, cfg: ModelConfig, compute_dtype=jnp.bfloat16,
+                 attention_impl: str = "chunked", remat: bool = True):
+        self.cfg = cfg
+        self.compute_dtype = compute_dtype
+        self.attention_impl = attention_impl
+        self.remat = remat
+        k = cfg.shared_attn_every
+        self.n_full_groups = cfg.n_layers // k  # groups ending in shared attn
+        self.tail = cfg.n_layers - self.n_full_groups * k
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(key, 4 + cfg.n_shared_attn_blocks)
+        p: Params = {
+            "embed": layers.embedding_init(ks[0], cfg),
+            "mamba": mamba2_init(ks[1], cfg, cfg.n_layers),
+            "final_norm": norm_init(cfg.norm, cfg.d_model),
+            "head": common.dense(ks[2], cfg.d_model, cfg.vocab_size,
+                                 ("embed", "vocab")),
+        }
+        for j in range(cfg.n_shared_attn_blocks):
+            p[f"shared{j}"] = shared_block_init(ks[3 + j], cfg)
+        return p
+
+    def init_params(self, key):
+        return unbox(self.init(key))
+
+    def _mamba_span(self, p_mamba, x, lo, hi, caches, decode):
+        """Scan mamba layers [lo, hi) (params statically sliced)."""
+        span = jax.tree.map(lambda a: a[lo:hi], p_mamba)
+        conv0 = ssm0 = None
+        if caches is not None:
+            conv0 = jax.tree.map(lambda a: a[lo:hi], caches["conv"])
+            ssm0 = jax.tree.map(lambda a: a[lo:hi], caches["ssm"])
+
+        has_cache = caches is not None
+
+        def body(carry, scanned):
+            x = carry
+            lp, conv_c, ssm_c = scanned
+            out, nc, ns = mamba2_apply(lp, x, self.cfg, conv_c, ssm_c,
+                                       decode=decode)
+            return x + out, ((nc, ns) if has_cache else None)
+
+        fn = body
+        if self.remat and caches is None:
+            fn = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, updates = jax.lax.scan(fn, x, (span, conv0, ssm0))
+        return x, updates
+
+    def _shared(self, p, j, x, emb0, positions, mode, cache, cache_index,
+                window):
+        sp = p[f"shared{j % self.cfg.n_shared_attn_blocks}"]
+        h = jnp.concatenate([x, emb0], axis=-1) @ sp["concat_proj"].astype(
+            x.dtype)
+        h = apply_norm(sp["norm1"], h, self.cfg.norm, self.cfg.norm_eps)
+        attn_out, new_cache = layers.attention_apply(
+            sp["attn"], h, self.cfg, positions=positions, causal=True,
+            window=window, impl=self.attention_impl, cache=cache,
+            cache_index=cache_index)
+        x = x + attn_out
+        h = apply_norm(sp["norm2"], x, self.cfg.norm, self.cfg.norm_eps)
+        return x + layers.mlp_apply(sp["mlp"], h, self.cfg), new_cache
+
+    def forward(self, p: Params, tokens, *, mode="train", cache=None,
+                cache_index=None):
+        cfg = self.cfg
+        k = cfg.shared_attn_every
+        x = layers.embed(p["embed"], tokens, self.compute_dtype)
+        emb0 = x
+        b, s, _ = x.shape
+        decode = mode == "decode"
+        if decode:
+            positions = jnp.broadcast_to(cache_index, (b,))[:, None]
+        else:
+            positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        window = None if mode == "train" else SHARED_ATTN_SERVE_WINDOW
+
+        new_cache: Optional[Params] = None
+        if cache is not None:
+            new_cache = {"conv": [], "ssm": [], "attn": []}
+        for g in range(self.n_full_groups):
+            lo, hi = g * k, (g + 1) * k
+            x, upd = self._mamba_span(p["mamba"], x, lo, hi, cache, decode)
+            if cache is not None:
+                new_cache["conv"].append(upd[0])
+                new_cache["ssm"].append(upd[1])
+            attn_cache = None
+            if cache is not None:
+                attn_cache = jax.tree.map(lambda a: a[g], cache["attn"])
+            x, nac = self._shared(p, g, x, emb0, positions, mode, attn_cache,
+                                  cache_index, window)
+            if cache is not None:
+                new_cache["attn"].append(nac)
+        if self.tail:
+            lo = self.n_full_groups * k
+            x, upd = self._mamba_span(p["mamba"], x, lo, cfg.n_layers, cache,
+                                      decode)
+            if cache is not None:
+                new_cache["conv"].append(upd[0])
+                new_cache["ssm"].append(upd[1])
+        if cache is not None:
+            new_cache["conv"] = jnp.concatenate(new_cache["conv"], axis=0)
+            new_cache["ssm"] = jnp.concatenate(new_cache["ssm"], axis=0)
+            new_cache["attn"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs, 0), *new_cache["attn"])
+
+        x = apply_norm(p["final_norm"], x, cfg.norm, cfg.norm_eps)
+        logits = layers.lm_head(p["head"], x, tied=False)
+        return logits, 0.0, new_cache
+
+    def loss_fn(self, p, model_state, batch, label_smoothing=0.0):
+        logits, _, _ = self.forward(p, batch["tokens"], mode="train")
+        loss, n_tok = common.cross_entropy_loss(
+            logits, batch["targets"], label_smoothing=label_smoothing)
+        return loss, (model_state, {"loss": loss, "tokens": n_tok})
+
+    def cache_shape(self, batch: int, max_seq: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        d_in, n_h, conv_ch = mamba2_dims(cfg)
+        attn_window = min(max_seq, SHARED_ATTN_SERVE_WINDOW)
+        L = cfg.n_layers
+        G = self.n_full_groups
+        shapes = {
+            "conv": ((L, batch, cfg.ssm_conv_width - 1, conv_ch),
+                     ("layers", "batch", None, "inner"), dtype),
+            "ssm": ((L, batch, n_h, cfg.ssm_head_dim, cfg.ssm_state),
+                    ("layers", "batch", "ssm_heads", None, None),
+                    jnp.float32),
+            "attn": {
+                "k": ((G, batch, attn_window, cfg.n_kv_heads, cfg.head_dim),
+                      ("layers", "batch", "kv_seq", "kv_heads", None), dtype),
+                "v": ((G, batch, attn_window, cfg.n_kv_heads, cfg.head_dim),
+                      ("layers", "batch", "kv_seq", "kv_heads", None), dtype),
+            },
+        }
+        is_leaf = lambda x: isinstance(x, tuple) and isinstance(x[0], tuple)
+        vals = jax.tree.map(lambda t: jnp.zeros(t[0], t[2]), shapes,
+                            is_leaf=is_leaf)
+        axes = jax.tree.map(lambda t: t[1], shapes, is_leaf=is_leaf)
+        return vals, axes
+
+    def prefill(self, p, tokens, cache, **_):
+        logits, _, new_cache = self.forward(
+            p, tokens, mode="prefill", cache=cache, cache_index=0)
+        return logits[:, -1:, :], new_cache
+
+    def decode_step(self, p, cache, tokens, cache_index):
+        logits, _, new_cache = self.forward(
+            p, tokens, mode="decode", cache=cache,
+            cache_index=cache_index)
+        return logits, new_cache

@@ -1,0 +1,45 @@
+"""Model registry: arch family -> model class; uniform Model interface.
+
+Model protocol (duck-typed):
+  init_params(key) -> (params, logical_axes_tree)
+  loss_fn(params, model_state, batch, label_smoothing) -> (loss, (state', metrics))
+  cache_shape(batch, max_seq, dtype) -> (cache_zeros, cache_axes)   [LMs]
+  prefill(params, tokens, cache, **frontend) -> (last_logits, cache)
+  decode_step(params, cache, tokens, cache_index) -> (logits, cache)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.mamba import Zamba2Model
+from repro.models.resnet import ResNet50
+from repro.models.transformer import TransformerLM
+from repro.models.whisper import WhisperModel
+from repro.models.xlstm import XLSTMModel
+
+_FAMILIES = {
+    "dense": TransformerLM,
+    "moe": TransformerLM,
+    "vlm": TransformerLM,
+    "hybrid": Zamba2Model,
+    "ssm": XLSTMModel,
+    "audio": WhisperModel,
+    "conv": ResNet50,
+}
+
+
+def build_model(cfg: ModelConfig, compute_dtype=jnp.bfloat16,
+                attention_impl: str = "chunked", remat: bool = True) -> Any:
+    cls = _FAMILIES[cfg.family]
+    return cls(cfg, compute_dtype=compute_dtype,
+               attention_impl=attention_impl, remat=remat)
+
+
+def init_model_state(model) -> Any:
+    """BN-bearing models carry last-minibatch stats; others empty."""
+    if hasattr(model, "init_state"):
+        return model.init_state()
+    return {}

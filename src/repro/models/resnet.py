@@ -1,0 +1,179 @@
+"""ResNet-50 in JAX (NHWC) — the paper's own benchmark architecture.
+
+BatchNorm follows the paper's §2 variant: **no moving averages**. The BN
+statistics of the *last minibatch* are kept as model state; before
+validation they are all-reduced (pmean over the data axes) by
+``core.batchnorm.finalize_bn_stats``. During training, normalization uses
+the current minibatch's (optionally cross-replica) statistics.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.batchnorm import bn_apply_stats, bn_batch_stats
+from repro.distributed.sharding import constrain
+from repro.models import common
+from repro.models.common import Boxed, unbox
+
+Params = Dict[str, Any]
+
+
+def conv_init(key, kh, kw, c_in, c_out) -> Boxed:
+    fan_in = kh * kw * c_in
+    return Boxed(common.he_init(key, (kh, kw, c_in, c_out), fan_in),
+                 (None, None, "conv_in", "conv_out"))
+
+
+def bn_init(c: int) -> Params:
+    return {"scale": common.ones((c,), ("conv_out",)),
+            "bias": common.zeros((c,), ("conv_out",))}
+
+
+def conv(x, w, stride=1, padding="SAME"):
+    return jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+class ResNet50:
+    """Bottleneck ResNet. ``model_state`` carries last-minibatch BN stats."""
+
+    def __init__(self, cfg: ModelConfig, compute_dtype=jnp.bfloat16,
+                 cross_replica_bn: bool = False, **_):
+        self.cfg = cfg
+        self.compute_dtype = compute_dtype
+        self.cross_replica_bn = cross_replica_bn
+        self._bn_names: List[str] = []
+
+    # ------------------------------------------------------------- init
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        w = cfg.conv_width
+        ks = iter(jax.random.split(key, 256))
+        p: Params = {"stem": {"conv": conv_init(next(ks), 7, 7, 3, w),
+                              "bn": bn_init(w)}}
+        c_in = w
+        for si, blocks in enumerate(cfg.conv_stages):
+            mid = w * (2 ** si)
+            c_out = mid * 4
+            stage: Params = {}
+            for bi in range(blocks):
+                blk: Params = {
+                    "conv1": conv_init(next(ks), 1, 1, c_in, mid),
+                    "bn1": bn_init(mid),
+                    "conv2": conv_init(next(ks), 3, 3, mid, mid),
+                    "bn2": bn_init(mid),
+                    "conv3": conv_init(next(ks), 1, 1, mid, c_out),
+                    "bn3": bn_init(c_out),
+                }
+                if bi == 0:
+                    blk["proj"] = conv_init(next(ks), 1, 1, c_in, c_out)
+                    blk["proj_bn"] = bn_init(c_out)
+                stage[f"block{bi}"] = blk
+                c_in = c_out
+            p[f"stage{si}"] = stage
+        p["fc"] = {
+            "w": common.dense(next(ks), c_in, cfg.num_classes,
+                              ("conv_in", None)),
+            "b": common.zeros((cfg.num_classes,), (None,)),
+        }
+        return p
+
+    def init_params(self, key):
+        return unbox(self.init(key))
+
+    def init_state(self) -> Params:
+        """BN last-minibatch stats, zero-initialized (mean 0 / var 1)."""
+        cfg = self.cfg
+        w = cfg.conv_width
+        state: Params = {"stem/bn": _stat(w)}
+        c_in = w
+        for si, blocks in enumerate(cfg.conv_stages):
+            mid = w * (2 ** si)
+            c_out = mid * 4
+            for bi in range(blocks):
+                state[f"stage{si}/block{bi}/bn1"] = _stat(mid)
+                state[f"stage{si}/block{bi}/bn2"] = _stat(mid)
+                state[f"stage{si}/block{bi}/bn3"] = _stat(c_out)
+                if bi == 0:
+                    state[f"stage{si}/block{bi}/proj_bn"] = _stat(c_out)
+            c_in = c_out
+        return state
+
+    # -------------------------------------------------------------- fwd
+    def _bn(self, p_bn, x, name, state, new_state, train: bool):
+        if train:
+            mean, var = bn_batch_stats(x, cross_replica=self.cross_replica_bn)
+            new_state[name] = {"mean": mean, "var": var,
+                               "count": jnp.array(1.0, jnp.float32)}
+        else:
+            mean = state[name]["mean"]
+            var = state[name]["var"]
+        return bn_apply_stats(x, mean, var, p_bn["scale"], p_bn["bias"])
+
+    def apply(self, p: Params, state: Params, images: jax.Array,
+              train: bool = True) -> Tuple[jax.Array, Params]:
+        x = images.astype(self.compute_dtype)
+        x = constrain(x, ("batch", None, None, None))
+        new_state: Params = {}
+        x = conv(x, p["stem"]["conv"], stride=2)
+        x = jax.nn.relu(self._bn(p["stem"]["bn"], x, "stem/bn", state,
+                                 new_state, train))
+        x = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME")
+        for si in range(len(self.cfg.conv_stages)):
+            stage = p[f"stage{si}"]
+            for bi in range(self.cfg.conv_stages[si]):
+                blk = stage[f"block{bi}"]
+                pre = f"stage{si}/block{bi}"
+                stride = 2 if (bi == 0 and si > 0) else 1
+                out = conv(x, blk["conv1"])
+                out = jax.nn.relu(self._bn(blk["bn1"], out, f"{pre}/bn1",
+                                           state, new_state, train))
+                out = conv(out, blk["conv2"], stride=stride)
+                out = jax.nn.relu(self._bn(blk["bn2"], out, f"{pre}/bn2",
+                                           state, new_state, train))
+                out = conv(out, blk["conv3"])
+                out = self._bn(blk["bn3"], out, f"{pre}/bn3", state,
+                               new_state, train)
+                if bi == 0:
+                    sc = conv(x, blk["proj"], stride=stride)
+                    sc = self._bn(blk["proj_bn"], sc, f"{pre}/proj_bn",
+                                  state, new_state, train)
+                else:
+                    sc = x
+                x = jax.nn.relu(out + sc)
+        x = jnp.mean(x, axis=(1, 2))
+        logits = x @ p["fc"]["w"].astype(x.dtype) + p["fc"]["b"].astype(
+            x.dtype)
+        return logits.astype(jnp.float32), (new_state if train else state)
+
+    # ------------------------------------------------------------ losses
+    def loss_fn(self, p, model_state, batch, label_smoothing=0.0):
+        logits, new_state = self.apply(p, model_state, batch["images"],
+                                       train=True)
+        labels = batch["labels"]
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+        if label_smoothing:
+            nll = (1 - label_smoothing) * nll - label_smoothing * jnp.mean(
+                logp, axis=-1)
+        loss = jnp.mean(nll)
+        acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+        return loss, (new_state, {"loss": loss, "accuracy": acc})
+
+    def eval_fn(self, p, model_state, batch):
+        logits, _ = self.apply(p, model_state, batch["images"], train=False)
+        labels = batch["labels"]
+        return jnp.mean((jnp.argmax(logits, -1) == labels).astype(
+            jnp.float32))
+
+
+def _stat(c: int) -> Params:
+    return {"mean": jnp.zeros((c,), jnp.float32),
+            "var": jnp.ones((c,), jnp.float32),
+            "count": jnp.array(0.0, jnp.float32)}

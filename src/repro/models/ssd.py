@@ -1,0 +1,109 @@
+"""Chunked gated linear attention / SSD engine.
+
+Mamba2's SSD and xLSTM's mLSTM are both gated linear-attention recurrences
+
+    S_t = a_t * S_{t-1} + v_t k_t^T          (state: (H, Dv, Dk))
+    y_t = S_t q_t                            (readout)
+
+with per-(head, step) scalar decay ``a_t``. The chunked formulation below
+is the TPU-native adaptation (matmul-heavy => MXU-friendly; the state is
+materialized once per chunk instead of per step, and the (chunk x chunk)
+score matrix is the only quadratic object). A single ``lax.scan`` over
+chunks carries the state and emits per-chunk outputs, so peak memory is
+O(B * chunk^2 * H) regardless of sequence length.
+
+All math in fp32 for stability; inputs/outputs in the compute dtype.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def chunked_gla(
+    q: jax.Array,  # (B, S, H, Dk)
+    k: jax.Array,  # (B, S, H, Dk)
+    v: jax.Array,  # (B, S, H, Dv)
+    log_a: jax.Array,  # (B, S, H) per-step log decay (<= 0)
+    *,
+    chunk: int = 128,
+    initial_state: Optional[jax.Array] = None,  # (B, H, Dv, Dk)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y: (B,S,H,Dv), final_state: (B,H,Dv,Dk))."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, s)
+    n = s // chunk
+    assert s % chunk == 0, (s, chunk)
+    f32 = jnp.float32
+
+    def chunk_of(x):
+        r = x.reshape(b, n, chunk, *x.shape[2:])
+        return r.transpose(1, 0, *range(2, r.ndim)).astype(f32)
+
+    qs, ks, vs = chunk_of(q), chunk_of(k), chunk_of(v)
+    ls = chunk_of(log_a)  # (n, b, chunk, h)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    s0 = (jnp.zeros((b, h, dv, dk), f32) if initial_state is None
+          else initial_state.astype(f32))
+
+    def step(state, inp):
+        qc, kc, vc, lc = inp  # (b, chunk, ...)
+        lcum = jnp.cumsum(lc, axis=1)  # inclusive within-chunk cum log decay
+        # intra-chunk: weight(t,τ) = exp(l_t - l_τ) for τ <= t
+        rel = lcum[:, :, None, :] - lcum[:, None, :, :]  # (b, t, τ, h)
+        rel = jnp.where(tri[None, :, :, None], rel, NEG)
+        decay = jnp.exp(rel)
+        scores = jnp.einsum("bthd,bshd->btsh", qc, kc)
+        y = jnp.einsum("btsh,bshv->bthv", scores * decay, vc)
+        # inter-chunk: y += exp(l_t) * S_prev q_t
+        qd = qc * jnp.exp(lcum)[..., None]
+        y = y + jnp.einsum("bthd,bhvd->bthv", qd, state)
+        # state update: S = exp(l_Q) S_prev + Σ_τ exp(l_Q - l_τ) v_τ k_τ^T
+        tail = jnp.exp(lcum[:, -1:, :] - lcum)  # (b, chunk, h)
+        new_state = state * jnp.exp(lcum[:, -1, :])[..., None, None] \
+            + jnp.einsum("bthv,bthd->bhvd", vc, kc * tail[..., None])
+        return new_state, y
+
+    final_state, ys = jax.lax.scan(step, s0, (qs, ks, vs, ls))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dv)
+    return y.astype(q.dtype), final_state
+
+
+def gla_decode_step(
+    q: jax.Array,  # (B, H, Dk)
+    k: jax.Array,
+    v: jax.Array,  # (B, H, Dv)
+    log_a: jax.Array,  # (B, H)
+    state: jax.Array,  # (B, H, Dv, Dk)
+) -> Tuple[jax.Array, jax.Array]:
+    """Single-token recurrence step. Returns (y: (B,H,Dv), new_state)."""
+    f32 = jnp.float32
+    a = jnp.exp(log_a.astype(f32))[..., None, None]
+    new_state = state.astype(f32) * a + jnp.einsum(
+        "bhv,bhd->bhvd", v.astype(f32), k.astype(f32))
+    y = jnp.einsum("bhvd,bhd->bhv", new_state, q.astype(f32))
+    return y.astype(q.dtype), new_state
+
+
+def reference_gla(q, k, v, log_a, initial_state=None):
+    """O(S) sequential oracle for tests (pure scan over time)."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    s0 = (jnp.zeros((b, h, dv, dk), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(state, inp):
+        qt, kt, vt, lt = inp
+        y, state = gla_decode_step(qt, kt, vt, lt, state)
+        return state, y
+
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), log_a.transpose(1, 0, 2))
+    state, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), state

@@ -1,0 +1,188 @@
+"""Decoder-only transformer LM covering the dense / moe / vlm families.
+
+Layers are scanned (params stacked on a leading "layers" dim) so the HLO
+stays compact at 80+ layers. MoE archs with ``moe_layer_every=k`` scan over
+layer *groups* of k sub-layers (k-1 dense + 1 MoE), matching llama4's
+alternating pattern. VLM (phi-3-vision) does early fusion: projected patch
+embeddings are prepended to the token sequence.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import common, layers
+from repro.models.common import Boxed, apply_norm, norm_init, unbox
+
+Params = Dict[str, Any]
+
+
+class TransformerLM:
+    def __init__(self, cfg: ModelConfig, compute_dtype=jnp.bfloat16,
+                 attention_impl: str = "chunked", remat: bool = True):
+        self.cfg = cfg
+        self.compute_dtype = compute_dtype
+        self.attention_impl = attention_impl
+        self.remat = remat
+        self.group = cfg.moe_layer_every if cfg.n_experts else 1
+        assert cfg.n_layers % self.group == 0
+        self.n_groups = cfg.n_layers // self.group
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        ks = iter(jax.random.split(key, 8 + 4 * self.group))
+        p: Params = {"embed": layers.embedding_init(next(ks), cfg)}
+        if cfg.vision is not None:
+            p["vision_proj"] = common.dense(
+                next(ks), cfg.vision.patch_dim, cfg.d_model,
+                (None, "embed"))
+        for j in range(self.group):
+            sub: Params = {
+                "norm1": norm_init(cfg.norm, cfg.d_model, self.n_groups),
+                "attn": layers.attention_init(next(ks), cfg, self.n_groups),
+                "norm2": norm_init(cfg.norm, cfg.d_model, self.n_groups),
+            }
+            if cfg.is_moe_layer(j):
+                sub["moe"] = layers.moe_init(next(ks), cfg, self.n_groups)
+            else:
+                sub["mlp"] = layers.mlp_init(next(ks), cfg, self.n_groups)
+            p[f"sub{j}"] = sub
+        p["final_norm"] = norm_init(cfg.norm, cfg.d_model)
+        if not cfg.tie_embeddings:
+            p["head"] = common.dense(next(ks), cfg.d_model, cfg.vocab_size,
+                                     ("embed", "vocab"))
+        return p
+
+    def init_params(self, key):
+        """Returns (params, logical_axes_tree)."""
+        return unbox(self.init(key))
+
+    # ------------------------------------------------------------- sub-layer
+    def _block(self, sub_p: Params, x, positions, mode: str, sub_idx: int,
+               cache: Optional[Params], cache_index) -> Tuple:
+        cfg = self.cfg
+        h = apply_norm(sub_p["norm1"], x, cfg.norm, cfg.norm_eps)
+        attn_out, new_cache = layers.attention_apply(
+            sub_p["attn"], h, cfg,
+            positions=positions,
+            causal=True,
+            window=cfg.sliding_window,
+            impl=self.attention_impl,
+            cache=cache,
+            cache_index=cache_index,
+        )
+        x = x + attn_out
+        h = apply_norm(sub_p["norm2"], x, cfg.norm, cfg.norm_eps)
+        if "moe" in sub_p:
+            mlp_out, aux = layers.moe_apply(sub_p["moe"], h, cfg)
+        else:
+            mlp_out, aux = layers.mlp_apply(sub_p["mlp"], h, cfg), 0.0
+        return x + mlp_out, new_cache, aux
+
+    def _scan_layers(self, p: Params, x, positions, mode: str,
+                     cache: Optional[Params], cache_index):
+        """lax.scan over layer groups. cache leaves: (G, B, S, KV, Dh)."""
+
+        def group_fn(carry, scanned):
+            x, aux_acc = carry
+            sub_params, sub_caches = scanned
+            new_caches = {}
+            for j in range(self.group):
+                c = sub_caches[f"sub{j}"] if sub_caches is not None else None
+                x, nc, aux = self._block(sub_params[f"sub{j}"], x, positions,
+                                         mode, j, c, cache_index)
+                if nc is not None:
+                    new_caches[f"sub{j}"] = nc
+            return (x, aux_acc + aux), (new_caches if new_caches else None)
+
+        fn = group_fn
+        if self.remat and mode == "train":
+            fn = jax.checkpoint(
+                group_fn, policy=jax.checkpoint_policies.nothing_saveable)
+        sub_params = {f"sub{j}": p[f"sub{j}"] for j in range(self.group)}
+        (x, aux), new_cache = jax.lax.scan(
+            fn, (x, 0.0), (sub_params, cache))
+        return x, aux, new_cache
+
+    # ---------------------------------------------------------------- fwd
+    def forward(self, p: Params, tokens: jax.Array, *,
+                patches: Optional[jax.Array] = None,
+                mode: str = "train",
+                cache: Optional[Params] = None,
+                cache_index=None) -> Tuple[jax.Array, Any, Optional[Params]]:
+        """Returns (logits, moe_aux, new_cache).
+
+        tokens: (B, S) int32. In decode mode S==1 and cache_index is the
+        write position. patches: (B, P, patch_dim) for VLM early fusion.
+        """
+        cfg = self.cfg
+        x = layers.embed(p["embed"], tokens, self.compute_dtype)
+        n_patches = 0
+        if patches is not None:
+            pe = patches.astype(self.compute_dtype) @ p["vision_proj"].astype(
+                self.compute_dtype)
+            x = jnp.concatenate([pe, x], axis=1)
+            n_patches = pe.shape[1]
+        b, s, _ = x.shape
+        if mode == "decode":
+            positions = jnp.broadcast_to(cache_index, (b,))[:, None]
+        else:
+            positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+            if cache is not None and cache_index is None:
+                cache_index = 0
+        x, aux, new_cache = self._scan_layers(p, x, positions, mode, cache,
+                                              cache_index)
+        x = apply_norm(p["final_norm"], x, cfg.norm, cfg.norm_eps)
+        if n_patches:
+            x = x[:, n_patches:, :]
+        w = p["embed"]["table"] if cfg.tie_embeddings else p["head"]
+        logits = layers.lm_head(w, x, cfg.tie_embeddings)
+        return logits, aux, new_cache
+
+    # --------------------------------------------------------------- losses
+    def loss_fn(self, p: Params, model_state: Params, batch: Dict,
+                label_smoothing: float = 0.0):
+        logits, moe_aux, _ = self.forward(
+            p, batch["tokens"], patches=batch.get("patches"), mode="train")
+        loss, n_tok = common.cross_entropy_loss(
+            logits, batch["targets"], label_smoothing=label_smoothing)
+        total = loss + 0.01 * moe_aux
+        metrics = {"loss": loss, "moe_aux": moe_aux, "tokens": n_tok}
+        return total, (model_state, metrics)
+
+    # ---------------------------------------------------------------- serve
+    def cache_shape(self, batch: int, max_seq: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        # SWA archs (mixtral) keep a ring buffer of window size only.
+        s = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+        kv = {
+            "k": ((self.n_groups, batch, s, cfg.n_kv_heads,
+                   cfg.head_dim), ("layers", "batch", "kv_seq", "kv_heads",
+                                   None)),
+            "v": ((self.n_groups, batch, s, cfg.n_kv_heads,
+                   cfg.head_dim), ("layers", "batch", "kv_seq", "kv_heads",
+                                   None)),
+        }
+        shapes = {f"sub{j}": dict(kv) for j in range(self.group)}
+        vals = jax.tree.map(lambda sa: jnp.zeros(sa[0], dtype), shapes,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        axes = jax.tree.map(lambda sa: sa[1], shapes,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        return vals, axes
+
+    def prefill(self, p: Params, tokens, cache, *, patches=None):
+        logits, _, new_cache = self.forward(
+            p, tokens, patches=patches, mode="prefill", cache=cache,
+            cache_index=0)
+        return logits[:, -1:, :], new_cache
+
+    def decode_step(self, p: Params, cache, tokens, cache_index):
+        logits, _, new_cache = self.forward(
+            p, tokens, mode="decode", cache=cache, cache_index=cache_index)
+        return logits, new_cache

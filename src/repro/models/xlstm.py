@@ -1,0 +1,314 @@
+"""xLSTM: mLSTM (matrix memory, parallelizable) + sLSTM (scalar memory,
+sequential) blocks in a ``slstm_every`` pattern (7:1 for xlstm-350m).
+
+mLSTM is gated linear attention with an exponential input gate and a
+normalizer n — implemented on the shared chunked GLA engine (ssd.py) by
+augmenting v with a ones channel: state carries [i*v; i] so the readout
+gives numerator and denominator in one pass (TPU adaptation: one
+matmul-heavy kernel instead of two).
+
+sLSTM has a recurrent nonlinearity => inherently sequential lax.scan over
+time with the stabilized exponential-gate formulation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import common, layers, ssd
+from repro.models.common import Boxed, apply_norm, norm_init, unbox
+
+Params = Dict[str, Any]
+
+CONV_W = 4
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_dims(cfg: ModelConfig):
+    d_in = int(cfg.d_model * cfg.mlstm_proj_factor)
+    n_h = cfg.n_heads
+    return d_in, n_h, d_in // n_h
+
+
+def mlstm_init(key, cfg: ModelConfig, stacked: int = 0) -> Params:
+    d = cfg.d_model
+    d_in, n_h, dh = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    L = (stacked,) if stacked else ()
+    la = ("layers",) if stacked else ()
+
+    def headwise(k, name):  # block-diagonal per-head projection
+        arr = common.fan_in_init(k, L + (n_h, dh, dh), (-2,))
+        return Boxed(arr, la + ("heads", None, None))
+
+    return {
+        "norm": norm_init(cfg.norm, d, stacked),
+        "w_up": Boxed(common.fan_in_init(ks[0], L + (d, 2 * d_in), (-2,)),
+                      la + ("embed", "inner")),
+        "conv_w": Boxed(common.normal_init(ks[1], L + (CONV_W, d_in), 0.1),
+                        la + ("conv_spatial", "inner")),
+        "conv_b": common.zeros(L + (d_in,), la + ("inner",)),
+        "wq": headwise(ks[2], "q"),
+        "wk": headwise(ks[3], "k"),
+        "wv": headwise(ks[4], "v"),
+        "w_if": Boxed(common.fan_in_init(ks[5], L + (d_in, 2 * n_h), (-2,)),
+                      la + ("inner", "heads")),
+        # input-gate bias 0, forget-gate bias +3 (standard xLSTM init)
+        "b_if": Boxed(
+            jnp.broadcast_to(
+                jnp.concatenate([jnp.zeros(n_h), jnp.full((n_h,), 3.0)]),
+                L + (2 * n_h,)).copy() if L else
+            jnp.concatenate([jnp.zeros(n_h), jnp.full((n_h,), 3.0)]),
+            la + ("heads",)),
+        "out_norm": norm_init("rmsnorm", d_in, stacked),
+        "w_down": Boxed(common.fan_in_init(ks[6], L + (d_in, d), (-2,)),
+                        la + ("inner", "embed")),
+    }
+
+
+def mlstm_apply(p: Params, x: jax.Array, cfg: ModelConfig,
+                conv_state=None, gla_state=None,
+                decode: bool = False) -> Tuple[jax.Array, Any, Any]:
+    d_in, n_h, dh = _mlstm_dims(cfg)
+    b, s, _ = x.shape
+    h = apply_norm(p["norm"], x, cfg.norm, cfg.norm_eps)
+    up = h @ p["w_up"].astype(x.dtype)
+    inner, z = up[..., :d_in], up[..., d_in:]
+    from repro.models.mamba import _causal_conv  # shared depthwise conv
+    conv_out, new_conv = _causal_conv(inner, p["conv_w"], p["conv_b"],
+                                      conv_state)
+    qk_src = conv_out.reshape(b, s, n_h, dh)
+    v_src = inner.reshape(b, s, n_h, dh)
+    q = jnp.einsum("bshd,hde->bshe", qk_src, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bshd,hde->bshe", qk_src, p["wk"].astype(x.dtype)) / (
+        dh ** 0.5)
+    v = jnp.einsum("bshd,hde->bshe", v_src, p["wv"].astype(x.dtype))
+
+    gates = conv_out @ p["w_if"].astype(x.dtype) + p["b_if"].astype(x.dtype)
+    gates = gates.astype(jnp.float32)
+    i_gate = jnp.exp(jnp.minimum(gates[..., :n_h], 10.0))  # capped exp gate
+    log_a = jax.nn.log_sigmoid(gates[..., n_h:])  # forget gate
+
+    v_aug = jnp.concatenate(
+        [v, jnp.ones((b, s, n_h, 1), v.dtype)], axis=-1
+    ) * i_gate[..., None].astype(v.dtype)
+
+    if decode:
+        y, new_state = ssd.gla_decode_step(
+            q[:, 0], k[:, 0], v_aug[:, 0], log_a[:, 0], gla_state)
+        y = y[:, None]
+    else:
+        y, new_state = ssd.chunked_gla(q, k, v_aug, log_a,
+                                       initial_state=gla_state)
+    num, den = y[..., :dh], y[..., dh:]
+    y = num / jnp.maximum(jnp.abs(den), 1.0).astype(num.dtype)
+    y = y.reshape(b, s, d_in)
+    y = apply_norm(p["out_norm"], y, "rmsnorm", cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    out = y @ p["w_down"].astype(x.dtype)
+    return constrain(out, ("batch", "seq", "embed")), new_conv, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg: ModelConfig, stacked: int = 0) -> Params:
+    d, n_h = cfg.d_model, cfg.n_heads
+    dh = d // n_h
+    d_ffn = int(d * cfg.slstm_proj_factor)
+    ks = jax.random.split(key, 4)
+    L = (stacked,) if stacked else ()
+    la = ("layers",) if stacked else ()
+    return {
+        "norm": norm_init(cfg.norm, d, stacked),
+        "w_gates": Boxed(common.fan_in_init(ks[0], L + (d, 4 * d), (-2,)),
+                         la + ("embed", "inner")),
+        "r_gates": Boxed(  # block-diagonal recurrent, per head, 4 gates
+            common.fan_in_init(ks[1], L + (4, n_h, dh, dh), (-2,)) * 0.1,
+            la + (None, "heads", None, None)),
+        "b_gates": common.zeros(L + (4 * d,), la + ("inner",)),
+        "w_up": Boxed(common.fan_in_init(ks[2], L + (d, 2 * d_ffn), (-2,)),
+                      la + ("embed", "ffn")),
+        "w_down": Boxed(common.fan_in_init(ks[3], L + (d_ffn, d), (-2,)),
+                        la + ("ffn", "embed")),
+    }
+
+
+def slstm_apply(p: Params, x: jax.Array, cfg: ModelConfig,
+                state=None, decode: bool = False) -> Tuple[jax.Array, Any]:
+    """state: dict h,c,n,m each (B, d) fp32."""
+    d, n_h = cfg.d_model, cfg.n_heads
+    dh = d // n_h
+    b, s, _ = x.shape
+    xin = apply_norm(p["norm"], x, cfg.norm, cfg.norm_eps)
+    wx = (xin @ p["w_gates"].astype(x.dtype) + p["b_gates"].astype(x.dtype))
+    wx = wx.astype(jnp.float32).reshape(b, s, 4, n_h, dh)
+    r = p["r_gates"].astype(jnp.float32)
+
+    if state is None:
+        zeros = jnp.zeros((b, n_h, dh), jnp.float32)
+        state = {"h": zeros, "c": zeros, "n": zeros,
+                 "m": jnp.zeros((b, n_h, dh), jnp.float32)}
+
+    def cell(st, wx_t):
+        rh = jnp.einsum("bhd,ghde->bghe", st["h"], r)  # (b,4,h,dh)
+        pre = wx_t + rh
+        zt = jnp.tanh(pre[:, 0])
+        it = pre[:, 1]
+        ft = pre[:, 2]
+        ot = jax.nn.sigmoid(pre[:, 3])
+        m_new = jnp.maximum(ft + st["m"], it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(ft + st["m"] - m_new)
+        c = f_p * st["c"] + i_p * zt
+        n = f_p * st["n"] + i_p
+        h = ot * c / jnp.maximum(jnp.abs(n), 1e-6)
+        new = {"h": h, "c": c, "n": n, "m": m_new}
+        return new, h
+
+    if decode:
+        new_state, h = cell(state, wx[:, 0])
+        ys = h[:, None]
+    else:
+        new_state, hs = jax.lax.scan(cell, state, wx.transpose(1, 0, 2, 3, 4))
+        ys = hs.transpose(1, 0, 2, 3)
+    y = ys.reshape(b, s, d).astype(x.dtype)
+    # gated FFN
+    up = y @ p["w_up"].astype(x.dtype)
+    d_ffn = up.shape[-1] // 2
+    y = jax.nn.silu(up[..., :d_ffn]) * up[..., d_ffn:]
+    out = y @ p["w_down"].astype(x.dtype)
+    return constrain(out, ("batch", "seq", "embed")), new_state
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+class XLSTMModel:
+    def __init__(self, cfg: ModelConfig, compute_dtype=jnp.bfloat16,
+                 attention_impl: str = "chunked", remat: bool = True):
+        self.cfg = cfg
+        self.compute_dtype = compute_dtype
+        self.remat = remat
+        every = cfg.slstm_every
+        assert cfg.n_layers % every == 0
+        self.n_segments = cfg.n_layers // every
+        self.m_per_seg = every - 1
+        self.n_mlstm = self.n_segments * self.m_per_seg
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(key, 5)
+        return {
+            "embed": layers.embedding_init(ks[0], cfg),
+            "mlstm": mlstm_init(ks[1], cfg, self.n_mlstm),
+            "slstm": slstm_init(ks[2], cfg, self.n_segments),
+            "final_norm": norm_init(cfg.norm, cfg.d_model),
+            "head": common.dense(ks[3], cfg.d_model, cfg.vocab_size,
+                                 ("embed", "vocab")),
+        }
+
+    def init_params(self, key):
+        return unbox(self.init(key))
+
+    def _mlstm_span(self, p_m, x, lo, hi, caches, decode):
+        span = jax.tree.map(lambda a: a[lo:hi], p_m)
+        conv0 = gla0 = None
+        if caches is not None:
+            conv0 = caches["conv"][lo:hi]
+            gla0 = caches["gla"][lo:hi]
+        has_cache = caches is not None
+
+        def body(carry, scanned):
+            x = carry
+            lp, conv_c, gla_c = scanned
+            out, nc, ns = mlstm_apply(lp, x, self.cfg, conv_c, gla_c,
+                                      decode=decode)
+            return x + out, ((nc, ns) if has_cache else None)
+
+        fn = body
+        if self.remat and caches is None:
+            fn = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, updates = jax.lax.scan(fn, x, (span, conv0, gla0))
+        return x, updates
+
+    def forward(self, p: Params, tokens, *, mode="train", cache=None,
+                cache_index=None):
+        cfg = self.cfg
+        x = layers.embed(p["embed"], tokens, self.compute_dtype)
+        decode = mode == "decode"
+        new_cache: Optional[Params] = None
+        if cache is not None:
+            new_cache = {"conv": [], "gla": [], "slstm": []}
+        for seg in range(self.n_segments):
+            lo = seg * self.m_per_seg
+            x, upd = self._mlstm_span(p["mlstm"], x, lo, lo + self.m_per_seg,
+                                      cache, decode)
+            s_params = jax.tree.map(lambda a: a[seg], p["slstm"])
+            s_state = None
+            if cache is not None:
+                new_cache["conv"].append(upd[0])
+                new_cache["gla"].append(upd[1])
+                s_state = jax.tree.map(lambda a: a[seg], cache["slstm"])
+            out, new_s = slstm_apply(s_params, x, cfg, s_state, decode)
+            x = x + out
+            if cache is not None:
+                new_cache["slstm"].append(new_s)
+        if cache is not None:
+            new_cache["conv"] = jnp.concatenate(new_cache["conv"], 0)
+            new_cache["gla"] = jnp.concatenate(new_cache["gla"], 0)
+            new_cache["slstm"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs, 0), *new_cache["slstm"])
+        x = apply_norm(p["final_norm"], x, cfg.norm, cfg.norm_eps)
+        logits = layers.lm_head(p["head"], x, tied=False)
+        return logits, 0.0, new_cache
+
+    def loss_fn(self, p, model_state, batch, label_smoothing=0.0):
+        logits, _, _ = self.forward(p, batch["tokens"], mode="train")
+        loss, n_tok = common.cross_entropy_loss(
+            logits, batch["targets"], label_smoothing=label_smoothing)
+        return loss, (model_state, {"loss": loss, "tokens": n_tok})
+
+    def cache_shape(self, batch: int, max_seq: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        d_in, n_h, dh = _mlstm_dims(cfg)
+        d_head = cfg.d_model // cfg.n_heads
+        shapes = {
+            "conv": ((self.n_mlstm, batch, CONV_W - 1, d_in),
+                     ("layers", "batch", None, "inner"), dtype),
+            "gla": ((self.n_mlstm, batch, n_h, dh + 1, dh),
+                    ("layers", "batch", "heads", None, None), jnp.float32),
+            "slstm": {
+                k: ((self.n_segments, batch, n_h, d_head),
+                    ("layers", "batch", "heads", None), jnp.float32)
+                for k in ("h", "c", "n", "m")
+            },
+        }
+        is_leaf = lambda x: isinstance(x, tuple) and isinstance(x[0], tuple)
+        vals = jax.tree.map(lambda t: jnp.zeros(t[0], t[2]), shapes,
+                            is_leaf=is_leaf)
+        axes = jax.tree.map(lambda t: t[1], shapes, is_leaf=is_leaf)
+        return vals, axes
+
+    def prefill(self, p, tokens, cache, **_):
+        logits, _, new_cache = self.forward(
+            p, tokens, mode="prefill", cache=cache, cache_index=0)
+        return logits[:, -1:, :], new_cache
+
+    def decode_step(self, p, cache, tokens, cache_index):
+        logits, _, new_cache = self.forward(
+            p, tokens, mode="decode", cache=cache, cache_index=cache_index)
+        return logits, new_cache

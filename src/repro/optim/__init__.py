@@ -1,0 +1,20 @@
+"""Optimizers: the paper's rmsprop_warmup + baselines + ZeRO sharding."""
+from repro.configs.base import OptimizerConfig
+from repro.optim.interface import Optimizer  # noqa: F401
+from repro.optim.lars import lars
+from repro.optim.rmsprop_warmup import rmsprop_warmup
+from repro.optim.sgd import momentum_sgd
+
+_FACTORIES = {
+    "rmsprop_warmup": rmsprop_warmup,
+    "momentum_sgd": momentum_sgd,
+    "lars": lars,
+}
+
+
+def make_optimizer(cfg: OptimizerConfig, steps_per_epoch: int,
+                   global_batch: int, use_fused: bool = False) -> Optimizer:
+    if cfg.kind not in _FACTORIES:
+        raise KeyError(f"unknown optimizer {cfg.kind!r}")
+    return _FACTORIES[cfg.kind](cfg, steps_per_epoch, global_batch,
+                                use_fused=use_fused)

@@ -1,0 +1,32 @@
+"""Minimal optimizer interface (no optax in this environment).
+
+An ``Optimizer`` owns its schedule closures; ``update`` maps
+(params, grads, state) -> (new_params, new_state, metrics) and is pure, so
+it jits/shards like any other function. State layout:
+
+    {"step": i32[], "delta": tree, "m": tree?, "residual": tree?}
+
+``delta``/``m`` mirror param shapes => they inherit param shardings (or
+ZeRO shardings, see zero.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], Tuple[PyTree, PyTree, Dict]]
+    # which state fields exist (for checkpoint/sharding plumbing)
+    state_fields: Tuple[str, ...] = ("delta",)
+
+
+def tree_zeros_like_f32(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

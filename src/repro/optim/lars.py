@@ -1,0 +1,52 @@
+"""LARS (You et al.) — beyond-paper alternative for extreme batch sizes,
+implemented for the ablation suite (the paper's Table 1 competitor [10]
+used a LARS-like approach at B=16k)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+from repro.core.schedules import make_lr_schedule
+from repro.optim.interface import Optimizer, tree_zeros_like_f32
+from repro.optim.rmsprop_warmup import _decay_mask
+
+
+def lars(cfg: OptimizerConfig, steps_per_epoch: int, global_batch: int,
+         trust_coef: float = 0.001, **_) -> Optimizer:
+    lr_fn = make_lr_schedule(cfg.schedule, global_batch,
+                             base_lr_per_256=cfg.base_lr_per_256,
+                             warmup_epochs=cfg.warmup_epochs)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "delta": tree_zeros_like_f32(params)}
+
+    def update(params, grads, state):
+        step = state["step"]
+        epoch = step.astype(jnp.float32) / steps_per_epoch
+        eta = lr_fn(epoch)
+        mask = _decay_mask(params)
+
+        def leaf(g, p, d, do_decay):
+            g32 = g.astype(jnp.float32)
+            p32 = p.astype(jnp.float32)
+            if do_decay:
+                g32 = g32 + cfg.weight_decay * p32
+            p_norm = jnp.linalg.norm(p32)
+            g_norm = jnp.linalg.norm(g32)
+            trust = jnp.where(
+                (p_norm > 0) & (g_norm > 0),
+                trust_coef * p_norm / (g_norm + 1e-9), 1.0)
+            d_new = cfg.mu1 * d - trust * g32
+            return (p32 + eta * d_new).astype(p.dtype), d_new
+
+        out = jax.tree.map(leaf, grads, params, state["delta"], mask)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_delta = jax.tree.map(lambda t: t[1], out,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"step": step + 1, "delta": new_delta}, {
+            "lr": eta, "epoch": epoch}
+
+    return Optimizer(init=init, update=update, state_fields=("delta",))

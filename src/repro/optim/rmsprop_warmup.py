@@ -1,0 +1,89 @@
+"""The paper's optimizer as a GradientTransformation: hybrid
+RMSprop->SGD with the ELU transition schedule and slow-start LR.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+from repro.core.optimizer import HybridHyper, hybrid_update
+from repro.core.schedules import alpha_sgd_schedule, make_lr_schedule
+from repro.optim.interface import Optimizer, PyTree, tree_zeros_like_f32
+
+# params whose name matches these fragments get no weight decay (norms,
+# biases — standard large-batch practice, Goyal et al.)
+NO_DECAY = ("scale", "bias", "b_if", "b_gates", "A_log", "dt_bias", "D",
+            "conv_b", "bq", "bk", "bv")
+
+
+def _decay_mask(params: PyTree) -> PyTree:
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+
+    def masked(path):
+        names = [getattr(k, "key", str(k)) for k in path]
+        return not any(n in NO_DECAY for n in names)
+
+    mask = {jax.tree_util.keystr(p): masked(p) for p, _ in flat}
+    leaves = [mask[jax.tree_util.keystr(p)] for p, _ in flat]
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(params), leaves)
+
+
+def rmsprop_warmup(cfg: OptimizerConfig, steps_per_epoch: int,
+                   global_batch: int, use_fused: bool = False) -> Optimizer:
+    lr_fn = make_lr_schedule(cfg.schedule, global_batch,
+                             base_lr_per_256=cfg.base_lr_per_256,
+                             warmup_epochs=cfg.warmup_epochs)
+    state_dtype = jnp.dtype(cfg.state_dtype)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "delta": jax.tree.map(zeros, params),
+            "m": jax.tree.map(zeros, params),
+        }
+
+    def update(params, grads, state):
+        step = state["step"]
+        epoch = step.astype(jnp.float32) / steps_per_epoch
+        eta = lr_fn(epoch)
+        a_sgd = alpha_sgd_schedule(epoch, cfg.beta_center, cfg.beta_period,
+                                   kind=cfg.transition)
+        h = HybridHyper(eta=eta, alpha_sgd=a_sgd, mu1=cfg.mu1, mu2=cfg.mu2,
+                        eps=cfg.eps, eta_rmsprop=cfg.eta_rmsprop)
+        mask = _decay_mask(params)
+
+        if use_fused:
+            from repro.kernels import ops as kops
+
+            def leaf(g, p, d, m, do_decay):
+                wd = cfg.weight_decay if do_decay else 0.0
+                p2, d2, m2 = kops.fused_hybrid_update(
+                    g, p, d.astype(jnp.float32), m.astype(jnp.float32),
+                    h, wd)
+                return p2, d2.astype(state_dtype), m2.astype(state_dtype)
+        else:
+            def leaf(g, p, d, m, do_decay):
+                wd = cfg.weight_decay if do_decay else 0.0
+                p2, d2, m2 = hybrid_update(
+                    g, p, d.astype(jnp.float32), m.astype(jnp.float32),
+                    h, wd)
+                return p2, d2.astype(state_dtype), m2.astype(state_dtype)
+
+        out = jax.tree.map(leaf, grads, params, state["delta"], state["m"],
+                           mask)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_delta = jax.tree.map(lambda t: t[1], out,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {"step": step + 1, "delta": new_delta, "m": new_m}
+        metrics = {"lr": eta, "alpha_sgd": a_sgd, "epoch": epoch}
+        return new_params, new_state, metrics
+
+    return Optimizer(init=init, update=update, state_fields=("delta", "m"))

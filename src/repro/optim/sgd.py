@@ -1,0 +1,45 @@
+"""Momentum SGD with the Goyal et al. schedule — the paper's baseline
+(what the hybrid rule reduces to at alpha_sgd = 1)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+from repro.core.optimizer import HybridHyper, momentum_sgd_update
+from repro.core.schedules import make_lr_schedule
+from repro.optim.interface import Optimizer, tree_zeros_like_f32
+from repro.optim.rmsprop_warmup import _decay_mask
+
+
+def momentum_sgd(cfg: OptimizerConfig, steps_per_epoch: int,
+                 global_batch: int, **_) -> Optimizer:
+    lr_fn = make_lr_schedule("goyal" if cfg.schedule == "goyal" else
+                             cfg.schedule, global_batch,
+                             base_lr_per_256=cfg.base_lr_per_256,
+                             warmup_epochs=cfg.warmup_epochs)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "delta": tree_zeros_like_f32(params)}
+
+    def update(params, grads, state):
+        step = state["step"]
+        epoch = step.astype(jnp.float32) / steps_per_epoch
+        eta = lr_fn(epoch)
+        h = HybridHyper(eta=eta, alpha_sgd=jnp.float32(1.0), mu1=cfg.mu1)
+        mask = _decay_mask(params)
+
+        def leaf(g, p, d, do_decay):
+            wd = cfg.weight_decay if do_decay else 0.0
+            return momentum_sgd_update(g, p, d, h, wd)
+
+        out = jax.tree.map(leaf, grads, params, state["delta"], mask)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_delta = jax.tree.map(lambda t: t[1], out,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"step": step + 1, "delta": new_delta}, {
+            "lr": eta, "epoch": epoch}
+
+    return Optimizer(init=init, update=update, state_fields=("delta",))

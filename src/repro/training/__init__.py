@@ -1,0 +1,9 @@
+from repro.training.loop import LoopConfig, LoopResult, run_training  # noqa: F401
+from repro.training.specs import cache_specs, input_specs, param_specs  # noqa: F401
+from repro.training.step import (  # noqa: F401
+    make_decode_step,
+    make_dp_shardmap_train_step,
+    make_eval_step,
+    make_prefill_step,
+    make_train_step,
+)

@@ -1,0 +1,65 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run / AOT).
+
+``input_specs`` builds the *batch* inputs for one (arch, shape) cell;
+params / optimizer-state / cache specs are derived via ``jax.eval_shape``
+so nothing is allocated (the pattern the multi-pod dry-run relies on).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.common import unbox
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                compute_dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Batch inputs for the step this shape's kind lowers."""
+    b = shape.global_batch
+    if cfg.family == "conv":
+        r = cfg.image_size
+        return {"images": SDS((b, r, r, 3), compute_dtype),
+                "labels": SDS((b,), jnp.int32)}
+
+    s = shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        batch: Dict[str, Any] = {"tokens": SDS((b, s), jnp.int32)}
+        if shape.kind == "train":
+            batch["targets"] = SDS((b, s), jnp.int32)
+        if cfg.vision is not None:
+            batch["patches"] = SDS(
+                (b, cfg.vision.num_patches, cfg.vision.patch_dim),
+                compute_dtype)
+        if cfg.audio is not None:
+            batch["frames"] = SDS(
+                (b, cfg.audio.num_frames, cfg.audio.frame_dim),
+                compute_dtype)
+        return batch
+    if shape.kind == "decode":
+        return {"tokens": SDS((b, 1), jnp.int32),
+                "cache_index": SDS((), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def param_specs(model, param_dtype=jnp.float32) -> Tuple[Any, Any]:
+    """(ShapeDtypeStruct tree, logical-axes tree), nothing allocated."""
+    boxed = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    shapes, axes = unbox(boxed)
+    shapes = jax.tree.map(
+        lambda s: SDS(s.shape, param_dtype
+                      if jnp.issubdtype(s.dtype, jnp.floating) else s.dtype),
+        shapes)
+    return shapes, axes
+
+
+def cache_specs(model, batch: int, max_seq: int,
+                dtype=jnp.bfloat16) -> Tuple[Any, Any]:
+    """(ShapeDtypeStruct tree, logical-axes tree) for the KV/SSM cache."""
+    vals = jax.eval_shape(lambda: model.cache_shape(batch, max_seq, dtype)[0])
+    _, axes = model.cache_shape(1, 8, dtype)  # tiny real build: axes only
+    return vals, axes

@@ -1,0 +1,24 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the
+real (single) device; multi-device tests spawn subprocesses that set
+--xla_force_host_platform_device_count themselves."""
+import os
+import sys
+
+import jax
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)
+
+
+SUBPROCESS_ENV_8DEV = {
+    **os.environ,
+    "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+    "PYTHONPATH": os.path.join(os.path.dirname(__file__), "..", "src"),
+}

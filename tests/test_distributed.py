@@ -1,0 +1,190 @@
+"""Multi-(virtual-)device tests, run in subprocesses so the main test
+process keeps its single-device view (XLA locks device count at init)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ENV = {
+    **os.environ,
+    "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+    "PYTHONPATH": os.path.join(os.path.dirname(__file__), "..", "src"),
+}
+
+
+def run_py(body: str, timeout=420) -> str:
+    res = subprocess.run([sys.executable, "-c", textwrap.dedent(body)],
+                         env=ENV, capture_output=True, text=True,
+                         timeout=timeout)
+    assert res.returncode == 0, f"STDERR:\n{res.stderr[-4000:]}"
+    return res.stdout
+
+
+def test_gspmd_train_step_sharded():
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import OptimizerConfig, get_config, reduced_config
+        from repro.launch.train import build_train_setup
+        cfg = reduced_config(get_config('llama3.2-1b'))
+        mesh = jax.make_mesh((4, 2), ('data', 'model'))
+        model, state, step, data, put, _ = build_train_setup(
+            cfg, global_batch=8, seq_len=32,
+            opt_cfg=OptimizerConfig(), steps_per_epoch=5, mesh=mesh)
+        batch = put({k: jnp.asarray(v) for k, v in data.batch_at(0).items()})
+        new_state, metrics = step(state, batch)
+        assert bool(jnp.isfinite(metrics['loss']))
+        print('LOSS', float(metrics['loss']))
+    """)
+    assert "LOSS" in out
+
+
+def test_paper_faithful_shardmap_dp_matches_gspmd():
+    """The explicit shard_map DP step (compressed psum) must produce the
+    same training trajectory as the GSPMD step (up to wire rounding)."""
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import OptimizerConfig, get_config, reduced_config
+        from repro.launch.train import build_train_setup
+        cfg = reduced_config(get_config('resnet50'))
+        mesh = jax.make_mesh((8, 1), ('data', 'model'))
+        losses = {}
+        for mode in ('gspmd', 'shardmap'):
+            # sync_bn isolates the gradient-sync comparison: without it
+            # shard_map workers normalize with local-batch stats
+            # (paper-faithful) and the forward passes differ by design
+            model, state, step, data, put, _ = build_train_setup(
+                cfg, global_batch=16, seq_len=16,
+                opt_cfg=OptimizerConfig(), steps_per_epoch=5,
+                mesh=mesh, dp_mode=mode, seed=0, sync_bn=True)
+            ls = []
+            for s in range(5):
+                batch = put({k: jnp.asarray(v)
+                             for k, v in data.batch_at(s).items()})
+                state, metrics = step(state, batch)
+                ls.append(float(metrics['loss']))
+            losses[mode] = ls
+        diff = max(abs(a - b) for a, b in
+                   zip(losses['gspmd'], losses['shardmap']))
+        print('DIFF', diff)
+        assert diff < 0.05, (losses, diff)
+    """)
+    assert "DIFF" in out
+
+
+def test_bn_stats_per_worker_and_finalize():
+    """Paper §2: per-worker last-minibatch BN stats differ; the
+    pre-validation all-reduce (mean over workers) equals global stats."""
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import OptimizerConfig, get_config, reduced_config
+        from repro.launch.train import build_train_setup
+        from repro.training.step import finalize_worker_bn_stats
+        cfg = reduced_config(get_config('resnet50'))
+        mesh = jax.make_mesh((8, 1), ('data', 'model'))
+        model, state, step, data, put, _ = build_train_setup(
+            cfg, global_batch=16, seq_len=16, opt_cfg=OptimizerConfig(),
+            steps_per_epoch=5, mesh=mesh, dp_mode='shardmap')
+        batch = put({k: jnp.asarray(v) for k, v in data.batch_at(0).items()})
+        state, _ = step(state, batch)
+        stats = jax.device_get(state['model_state'])
+        leaf = stats['stem/bn']['mean']  # (n_workers, C)
+        assert leaf.shape[0] == 8
+        per_worker_var = np.var(np.asarray(leaf), axis=0).max()
+        print('WORKER_VARIANCE', per_worker_var)
+        assert per_worker_var > 0  # stats genuinely differ per worker
+        final = finalize_worker_bn_stats(state['model_state'])
+        f_leaf = final['stem/bn']['mean']
+        np.testing.assert_allclose(np.asarray(f_leaf),
+                                   np.asarray(leaf).mean(0), rtol=1e-6)
+        print('FINALIZE_OK')
+    """)
+    assert "FINALIZE_OK" in out
+
+
+def test_compressed_psum_wire_dtype_and_value():
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.core.compression import compressed_psum
+        mesh = jax.make_mesh((8,), ('data',))
+        x = jnp.linspace(-1.0, 1.0, 8 * 64).reshape(8, 64)
+
+        def f(local):
+            return compressed_psum({'g': local[0]}, ('data',),
+                                   wire='f16')['g']
+
+        fn = shard_map(f, mesh=mesh, in_specs=P('data'), out_specs=P(),
+                       check_rep=False)
+        got = fn(x)
+        want = np.asarray(x, np.float32).mean(0)
+        err = np.abs(np.asarray(got) - want).max()
+        print('ERR', err)
+        assert err < 2e-3  # f16 wire rounding only
+        # HLO must carry the all-reduce in f16 (the paper's mechanism)
+        txt = jax.jit(fn).lower(x).compile().as_text()
+        ars = [l for l in txt.splitlines() if 'all-reduce' in l
+               and '= f16' in l.replace(' ', ' ')]
+        found_f16 = any('f16[' in l and 'all-reduce' in l
+                        for l in txt.splitlines())
+        print('F16_ALLREDUCE', found_f16)
+        assert found_f16
+    """)
+    assert "F16_ALLREDUCE True" in out
+
+
+def test_elastic_restore_different_dp():
+    """Checkpoint at dp=8, restore and continue at dp=4 (elastic restart
+    after losing nodes)."""
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np, tempfile
+        from repro.configs import OptimizerConfig, get_config, reduced_config
+        from repro.launch.train import build_train_setup
+        from repro.training import LoopConfig, run_training
+        cfg = reduced_config(get_config('llama3.2-1b'))
+        tmp = tempfile.mkdtemp()
+        mesh8 = jax.make_mesh((4, 2), ('data', 'model'))
+        model, state, step, data, put, sh = build_train_setup(
+            cfg, global_batch=8, seq_len=32, opt_cfg=OptimizerConfig(),
+            steps_per_epoch=5, mesh=mesh8)
+        run_training(step, state, data,
+                     LoopConfig(total_steps=4, checkpoint_every=2,
+                                checkpoint_dir=tmp), put_batch=put)
+        # 'lose half the nodes': rebuild on a (2,2) mesh and resume
+        mesh4 = jax.make_mesh((2, 2), ('data', 'model'))
+        model, state, step, data, put, sh = build_train_setup(
+            cfg, global_batch=8, seq_len=32, opt_cfg=OptimizerConfig(),
+            steps_per_epoch=5, mesh=mesh4)
+        res = run_training(step, state, data,
+                           LoopConfig(total_steps=8, checkpoint_every=100,
+                                      checkpoint_dir=tmp),
+                           put_batch=put, state_shardings=sh)
+        assert res.resumed_from == 4, res.resumed_from
+        print('ELASTIC_OK', res.history[-1]['loss'])
+    """)
+    assert "ELASTIC_OK" in out
+
+
+def test_dryrun_entry_on_small_mesh():
+    """The dry-run builder lowers + compiles + analyzes on a small mesh
+    (full 512-device runs are exercised by launch/dryrun.py itself)."""
+    out = run_py("""
+        import jax, jax.numpy as jnp
+        from repro.configs import get_config, reduced_config
+        import repro.configs.base as base
+        import dataclasses
+        # register a reduced variant under a test id
+        cfg = reduced_config(get_config('llama3.2-1b'))
+        base._REGISTRY['test-tiny'] = lambda: dataclasses.replace(
+            cfg, name='test-tiny')
+        from repro.launch.dryrun import lower_cell
+        mesh = jax.make_mesh((4, 2), ('data', 'model'))
+        rec, compiled = lower_cell('test-tiny', 'train_4k', mesh)
+        assert rec['status'] == 'ok', rec
+        assert rec['roofline']['bound_s'] > 0
+        assert rec['collective_total_bytes'] > 0
+        print('DRYRUN_OK', rec['roofline']['dominant'])
+    """, timeout=560)
+    assert "DRYRUN_OK" in out

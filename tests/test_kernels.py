@@ -1,0 +1,145 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True
+on CPU per the validation contract)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.optimizer import HybridHyper
+from repro.kernels import ops, ref
+
+
+class TestFusedUpdate:
+    @pytest.mark.parametrize("shape", [(7,), (128,), (1000,), (33, 65),
+                                       (512, 128), (3, 5, 7)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_oracle(self, shape, dtype, key):
+        ks = jax.random.split(key, 4)
+        g = jax.random.normal(ks[0], shape, dtype)
+        p = jax.random.normal(ks[1], shape, dtype)
+        d = jax.random.normal(ks[2], shape, jnp.float32)
+        m = jnp.abs(jax.random.normal(ks[3], shape, jnp.float32))
+        h = HybridHyper(eta=jnp.float32(0.7), alpha_sgd=jnp.float32(0.3))
+        got = ops.fused_hybrid_update(g, p, d, m, h, weight_decay=1e-4)
+        want = ref.hybrid_update(g, p, d, m, eta=0.7, alpha_sgd=0.3,
+                                 weight_decay=1e-4)
+        tol = 1e-5 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(np.asarray(got[0], np.float32),
+                                   np.asarray(want[0].astype(dtype),
+                                              np.float32), atol=tol)
+        np.testing.assert_allclose(got[1], want[1], atol=1e-5)
+        np.testing.assert_allclose(got[2], want[2], atol=1e-5)
+        assert got[0].shape == shape and got[0].dtype == dtype
+
+    def test_alpha_one_is_sgd(self, key):
+        g = jax.random.normal(key, (256,))
+        p = jnp.zeros((256,))
+        h = HybridHyper(eta=jnp.float32(0.5), alpha_sgd=jnp.float32(1.0),
+                        eta_rmsprop=0.0)
+        p1, d1, _ = ops.fused_hybrid_update(g, p, jnp.zeros(256),
+                                            jnp.zeros(256), h)
+        np.testing.assert_allclose(d1, -g, rtol=1e-6)
+        np.testing.assert_allclose(p1, -0.5 * g, rtol=1e-6)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_gqa_sweep(self, hq, hkv, causal, key):
+        ks = jax.random.split(key, 3)
+        b, s, dh = 2, 256, 32
+        q = jax.random.normal(ks[0], (b, s, hq, dh))
+        k = jax.random.normal(ks[1], (b, s, hkv, dh))
+        v = jax.random.normal(ks[2], (b, s, hkv, dh))
+        got = ops.attention(q, k, v, causal=causal, block_q=64, block_k=64)
+        want = ref.attention(q, k, v, causal=causal)
+        np.testing.assert_allclose(got, want, atol=2e-5)
+
+    @pytest.mark.parametrize("window", [32, 128])
+    def test_sliding_window(self, window, key):
+        ks = jax.random.split(key, 3)
+        b, s, h, dh = 1, 256, 2, 16
+        q = jax.random.normal(ks[0], (b, s, h, dh))
+        k = jax.random.normal(ks[1], (b, s, h, dh))
+        v = jax.random.normal(ks[2], (b, s, h, dh))
+        got = ops.attention(q, k, v, causal=True, window=window,
+                            block_q=64, block_k=64)
+        want = ref.attention(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(got, want, atol=2e-5)
+
+    def test_bf16(self, key):
+        ks = jax.random.split(key, 3)
+        b, s, h, dh = 1, 128, 2, 64
+        q = jax.random.normal(ks[0], (b, s, h, dh), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (b, s, h, dh), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (b, s, h, dh), jnp.bfloat16)
+        got = ops.attention(q, k, v, causal=True, block_q=64, block_k=64)
+        want = ref.attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), atol=0.05)
+
+    def test_rectangular_and_uneven_blocks(self, key):
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (2, 384, 4, 32))
+        k = jax.random.normal(ks[1], (2, 384, 4, 32))
+        v = jax.random.normal(ks[2], (2, 384, 4, 32))
+        got = ops.attention(q, k, v, causal=True, block_q=128, block_k=128)
+        want = ref.attention(q, k, v, causal=True)
+        np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+class TestChunkedGLA:
+    """The SSD/mLSTM engine vs its sequential oracle."""
+
+    @pytest.mark.parametrize("chunk", [16, 64, 256])
+    @pytest.mark.parametrize("s", [256, 512])
+    def test_chunk_sweep(self, chunk, s, key):
+        from repro.models import ssd
+        ks = jax.random.split(key, 4)
+        b, h, dk, dv = 2, 3, 16, 8
+        q = jax.random.normal(ks[0], (b, s, h, dk))
+        k = jax.random.normal(ks[1], (b, s, h, dk))
+        v = jax.random.normal(ks[2], (b, s, h, dv))
+        log_a = -jnp.abs(jax.random.normal(ks[3], (b, s, h))) * 0.2
+        y1, s1 = ssd.chunked_gla(q, k, v, log_a, chunk=chunk)
+        y2, s2 = ssd.reference_gla(q, k, v, log_a)
+        np.testing.assert_allclose(y1, y2, atol=1e-4)
+        np.testing.assert_allclose(s1, s2, atol=1e-4)
+
+    def test_gradients_finite(self, key):
+        from repro.models import ssd
+        ks = jax.random.split(key, 4)
+        b, s, h, dk, dv = 1, 128, 2, 8, 8
+        q = jax.random.normal(ks[0], (b, s, h, dk))
+        k = jax.random.normal(ks[1], (b, s, h, dk))
+        v = jax.random.normal(ks[2], (b, s, h, dv))
+        log_a = -jnp.abs(jax.random.normal(ks[3], (b, s, h))) * 0.1
+
+        def loss(q, k, v, la):
+            y, _ = ssd.chunked_gla(q, k, v, la, chunk=32)
+            return jnp.sum(jnp.square(y))
+
+        grads = jax.grad(loss, argnums=(0, 1, 2, 3))(q, k, v, log_a)
+        for g in grads:
+            assert bool(jnp.isfinite(g).all())
+
+
+class TestRMSNorm:
+    @pytest.mark.parametrize("shape", [(4, 64), (2, 7, 128), (300, 256)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_oracle(self, shape, dtype, key):
+        ks = jax.random.split(key, 2)
+        x = jax.random.normal(ks[0], shape, dtype) * 3.0
+        scale = 1.0 + 0.1 * jax.random.normal(ks[1], (shape[-1],))
+        got = ops.rmsnorm(x, scale)
+        want = ref.rmsnorm(x, scale)
+        tol = 1e-5 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), atol=tol)
+        assert got.shape == shape and got.dtype == dtype
+
+    def test_unit_rms(self, key):
+        x = jax.random.normal(key, (32, 128)) * 10.0
+        y = ops.rmsnorm(x, jnp.ones(128))
+        rms = np.sqrt(np.mean(np.square(np.asarray(y)), axis=-1))
+        np.testing.assert_allclose(rms, 1.0, rtol=1e-3)

@@ -1,0 +1,158 @@
+"""The paper's equations, verified exactly (Appendix A)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.optimizer import (
+    HybridHyper,
+    alpha_rmsprop,
+    hybrid_update,
+    momentum_sgd_update,
+)
+from repro.core.schedules import (
+    alpha_sgd_schedule,
+    goyal_lr,
+    linear_scaling_lr,
+    slow_start_lr,
+)
+
+
+class TestHybridRule:
+    def test_alpha_sgd_1_is_momentum_sgd(self, key):
+        """a_sgd=1, eta_rmsprop contribution vanishes => exact momentum SGD."""
+        g, p, d = [jax.random.normal(k, (64,)) for k in
+                   jax.random.split(key, 3)]
+        m = jnp.abs(jax.random.normal(key, (64,)))
+        h = HybridHyper(eta=jnp.float32(0.1), alpha_sgd=jnp.float32(1.0),
+                        eta_rmsprop=0.0)
+        p1, d1, m1 = hybrid_update(g, p, d, m, h)
+        p2, d2 = momentum_sgd_update(g, p, d, h)
+        np.testing.assert_allclose(p1, p2, rtol=1e-6)
+        np.testing.assert_allclose(d1, d2, rtol=1e-6)
+        # m still accumulates (it's the RMSprop second moment)
+        np.testing.assert_allclose(m1, 0.99 * m + 0.01 * g * g, rtol=1e-6)
+
+    def test_alpha_sgd_0_is_rmsprop_with_momentum(self, key):
+        """a_sgd=0: Delta = mu1*Delta - (eta_rms/eta)/(sqrt(m)+eps) * g."""
+        g, p, d = [jax.random.normal(k, (64,)) for k in
+                   jax.random.split(key, 3)]
+        m = jnp.abs(jax.random.normal(key, (64,)))
+        eta, eta_rms = 0.4, 3e-4
+        h = HybridHyper(eta=jnp.float32(eta), alpha_sgd=jnp.float32(0.0),
+                        eta_rmsprop=eta_rms)
+        p1, d1, m1 = hybrid_update(g, p, d, m, h)
+        m_ref = 0.99 * m + 0.01 * g * g
+        d_ref = 0.9 * d - (eta_rms / eta) / (jnp.sqrt(m_ref) + 1e-8) * g
+        np.testing.assert_allclose(d1, d_ref, rtol=1e-5)
+        np.testing.assert_allclose(p1, p + eta * d_ref, rtol=1e-5)
+
+    def test_momentum_correction_coupling(self):
+        """Paper A.1: a_rms = (1-a_sgd) * eta_rms / eta_sgd, so the
+        *effective* RMSprop step eta*a_rms/sqrt(m) is eta-independent."""
+        for eta in (0.1, 1.0, 12.8):
+            h = HybridHyper(eta=jnp.float32(eta),
+                            alpha_sgd=jnp.float32(0.25))
+            eff = float(h.eta * alpha_rmsprop(h))
+            np.testing.assert_allclose(eff, 0.75 * 3e-4, rtol=1e-6)
+
+    def test_update_is_fp32_and_finite(self, key):
+        g = jax.random.normal(key, (128,), jnp.bfloat16)
+        p = jax.random.normal(key, (128,), jnp.bfloat16)
+        h = HybridHyper(eta=jnp.float32(1.0), alpha_sgd=jnp.float32(0.5))
+        p1, d1, m1 = hybrid_update(g, p, jnp.zeros(128), jnp.zeros(128), h)
+        assert p1.dtype == jnp.bfloat16  # params keep their dtype
+        assert d1.dtype == jnp.float32 and m1.dtype == jnp.float32
+        assert bool(jnp.isfinite(d1).all())
+
+
+class TestTransitionSchedule:
+    def test_paper_anchor_points(self):
+        # 1/2 at beta_center=10
+        np.testing.assert_allclose(alpha_sgd_schedule(10.0), 0.5, rtol=1e-6)
+        # 1 at beta_center + beta_period/2 = 12.5, and stays 1
+        np.testing.assert_allclose(alpha_sgd_schedule(12.5), 1.0, rtol=1e-6)
+        assert float(alpha_sgd_schedule(50.0)) == 1.0
+        # exponential region: a(10 - 2.5) = 0.5 * exp(-1)
+        np.testing.assert_allclose(alpha_sgd_schedule(7.5),
+                                   0.5 * np.exp(-1.0), rtol=1e-5)
+
+    def test_monotone_and_continuous(self):
+        e = jnp.linspace(0.0, 20.0, 2001)
+        a = alpha_sgd_schedule(e)
+        assert bool(jnp.all(jnp.diff(a) >= -1e-7))
+        # max slope is the linear segment's 2/beta_period = 0.4/epoch;
+        # at 0.01-epoch resolution a jump would show as diff >> 0.004
+        assert bool(jnp.all(jnp.abs(jnp.diff(a)) < 6e-3))
+        assert float(a[0]) < 0.01 and float(a[-1]) == 1.0
+
+
+class TestLRSchedules:
+    def test_linear_scaling_paper_value(self):
+        # paper: n=1024, b_local=32 => eta_base = 12.8
+        assert linear_scaling_lr(32768) == pytest.approx(12.8)
+
+    def test_slow_start_piecewise(self):
+        eta = 12.8
+        assert float(slow_start_lr(0.0, eta)) == pytest.approx(0.5 * eta)
+        assert float(slow_start_lr(39.9, eta)) == pytest.approx(0.5 * eta)
+        assert float(slow_start_lr(40.1, eta)) == pytest.approx(0.075 * eta)
+        assert float(slow_start_lr(70.1, eta)) == pytest.approx(0.01 * eta)
+        assert float(slow_start_lr(85.1, eta)) == pytest.approx(0.001 * eta)
+
+    def test_slow_start_lower_than_goyal_at_start(self):
+        """The 'slow start': initial LR is half of Goyal's target."""
+        eta = 12.8
+        assert float(slow_start_lr(0.0, eta)) < eta
+
+    def test_goyal_warmup(self):
+        eta = 12.8
+        assert float(goyal_lr(0.0, eta)) == pytest.approx(0.1)
+        assert float(goyal_lr(5.0, eta)) == pytest.approx(eta)
+        assert float(goyal_lr(29.0, eta)) == pytest.approx(eta)
+        assert float(goyal_lr(30.5, eta)) == pytest.approx(0.1 * eta)
+        assert float(goyal_lr(60.5, eta)) == pytest.approx(0.01 * eta)
+        assert float(goyal_lr(80.5, eta)) == pytest.approx(0.001 * eta)
+
+
+class TestTransitionAblation:
+    """Paper A.1's design rationale: a sudden RMSprop->SGD switch shocks
+    training; the smooth ELU transition does not (reduced-scale repro)."""
+
+    @staticmethod
+    def _train(transition):
+        import numpy as np
+
+        from repro.configs import (
+            OptimizerConfig,
+            get_config,
+            reduced_config,
+        )
+        from repro.launch.train import build_train_setup
+        cfg = reduced_config(get_config("resnet50"))
+        opt_cfg = OptimizerConfig(kind="rmsprop_warmup",
+                                  schedule="constant",
+                                  transition=transition,
+                                  base_lr_per_256=0.1 * 24.0,
+                                  beta_center=1.0, beta_period=1.0)
+        model, state, step_fn, data, _, _ = build_train_setup(
+            cfg, global_batch=256, seq_len=16, opt_cfg=opt_cfg,
+            steps_per_epoch=10)
+        losses = []
+        for s in range(20):
+            batch = {k: jnp.asarray(v) for k, v in data.batch_at(s).items()}
+            state, metrics = step_fn(state, batch)
+            losses.append(float(metrics["loss"]))
+        return losses
+
+    def test_sudden_transition_shocks_elu_does_not(self):
+        import numpy as np
+        elu = self._train("elu")
+        sudden = self._train("sudden")
+
+        def spike(ls):
+            post = [l for l in ls[10:15] if np.isfinite(l)]
+            return (max(post) - ls[9]) if post else float("inf")
+
+        assert spike(elu) < 0.5, elu
+        assert spike(sudden) > 1.0, sudden

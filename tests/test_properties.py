@@ -1,0 +1,176 @@
+"""Hypothesis property tests on the system's invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.compression import (
+    apply_error_feedback,
+    init_error_feedback,
+    simulate_wire_cast,
+)
+from repro.core.optimizer import HybridHyper, hybrid_update
+from repro.core.schedules import alpha_sgd_schedule, slow_start_lr
+from repro.distributed.sharding import spec_for
+from repro.optim.zero import zero_spec_for
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=list(hypothesis.HealthCheck))
+hypothesis.settings.load_profile("ci")
+
+
+@given(st.floats(0.0, 200.0))
+def test_alpha_sgd_bounds(epoch):
+    a = float(alpha_sgd_schedule(epoch))
+    assert 0.0 <= a <= 1.0
+
+
+@given(st.floats(0.0, 89.9), st.floats(1e-3, 100.0))
+def test_slow_start_positive_decreasing_family(epoch, eta):
+    lr = float(slow_start_lr(epoch, eta))
+    assert 0 < lr <= 0.5 * eta * (1 + 1e-6)  # fp32 rounding headroom
+    lr_later = float(slow_start_lr(min(epoch + 30.0, 89.9), eta))
+    assert lr_later <= lr + 1e-9
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from(["bf16", "f16"]))
+def test_wire_cast_relative_error_bounded(seed, wire):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (256,)) * 10.0
+    q = simulate_wire_cast({"g": g}, wire)["g"]
+    rel = np.abs(np.asarray(q - g)) / (np.abs(np.asarray(g)) + 1e-30)
+    # bf16: 8 mantissa bits -> 2^-8; f16: 11 bits but limited range
+    bound = 2 ** -8 if wire == "bf16" else 2 ** -10
+    finite = np.isfinite(np.asarray(g))
+    assert (rel[finite] <= bound + 1e-6).all()
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+def test_error_feedback_reduces_accumulated_bias(seed):
+    """Sum of EF-compressed gradients tracks the true sum better than
+    naive repeated rounding (the EF invariant: residual stays bounded)."""
+    key = jax.random.PRNGKey(seed)
+    gs = jax.random.normal(key, (20, 128)) * 1e-3  # small => rounding bites
+    resid = init_error_feedback({"g": gs[0]})
+    acc_ef = np.zeros(128)
+    acc_naive = np.zeros(128)
+    acc_true = np.zeros(128)
+    for i in range(20):
+        q, resid = apply_error_feedback({"g": gs[i]}, resid, wire="bf16")
+        acc_ef += np.asarray(q["g"], np.float64)
+        acc_naive += np.asarray(
+            simulate_wire_cast({"g": gs[i]}, "bf16")["g"], np.float64)
+        acc_true += np.asarray(gs[i], np.float64)
+    err_ef = np.abs(acc_ef - acc_true).max()
+    # EF error is bounded by one quantization step of the *last* value,
+    # independent of the number of steps
+    assert err_ef <= np.abs(np.asarray(resid["g"])).max() + 1e-6
+
+
+@given(st.integers(0, 2 ** 31 - 1),
+       st.floats(0.0, 1.0),
+       st.floats(1e-3, 20.0))
+def test_hybrid_update_invariants(seed, alpha, eta):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 2)
+    g = jax.random.normal(ks[0], (64,))
+    p = jax.random.normal(ks[1], (64,))
+    h = HybridHyper(eta=jnp.float32(eta), alpha_sgd=jnp.float32(alpha))
+    p1, d1, m1 = hybrid_update(g, p, jnp.zeros(64), jnp.zeros(64), h)
+    # second moment is nonnegative; zero gradient leaves params in place
+    assert bool((m1 >= 0).all())
+    p0, d0, m0 = hybrid_update(jnp.zeros(64), p, jnp.zeros(64),
+                               jnp.zeros(64), h)
+    np.testing.assert_allclose(p0, p, atol=1e-7)
+    np.testing.assert_allclose(d0, 0.0, atol=1e-7)
+
+
+@given(st.lists(st.sampled_from(["embed", "heads", "ffn", "vocab", None,
+                                 "experts", "batch"]),
+                min_size=1, max_size=4))
+def test_spec_never_reuses_mesh_axis(axes):
+    rules = {"embed": ("data",), "heads": "model", "ffn": "model",
+             "vocab": "model", "experts": "model",
+             "batch": ("pod", "data")}
+    spec = spec_for(tuple(axes), rules)
+    used = []
+    for entry in spec:
+        if entry is None:
+            continue
+        for a in ((entry,) if isinstance(entry, str) else entry):
+            assert a not in used, f"axis {a} used twice in {spec}"
+            used.append(a)
+
+
+@given(st.tuples(st.integers(1, 64), st.integers(1, 64)),
+       st.integers(1, 8))
+def test_zero_spec_divisibility(shape, dp):
+    import jax as _jax
+    from jax.sharding import PartitionSpec as P
+    if dp > 1 and len(_jax.devices()) < dp:
+        # semantics only need the axis size; emulate via mesh dict
+        class FakeMesh:
+            def __init__(self):
+                self.shape = {"data": dp}
+        mesh = FakeMesh()
+    else:
+        class FakeMesh:
+            def __init__(self):
+                self.shape = {"data": dp}
+        mesh = FakeMesh()
+    spec = zero_spec_for(shape, P(), mesh, ("data",))
+    for dim, entry in zip(shape, tuple(spec)):
+        if entry is not None:
+            assert dim % dp == 0
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 8), st.integers(1, 2))
+def test_moe_dispatch_invariants(seed, e, k):
+    """Each token occupies <= k slots; gates are nonnegative; capacity is
+    never exceeded (column sums <= 1 per slot)."""
+    import dataclasses
+    from repro.configs import get_config, reduced_config
+    from repro.models import layers
+    from repro.models.common import unbox
+    k = min(k, e)
+    cfg = dataclasses.replace(
+        reduced_config(get_config("mixtral-8x7b")),
+        d_model=8, d_ff=16, n_experts=e, experts_per_token=k)
+    key = jax.random.PRNGKey(seed)
+    p, _ = unbox(layers.moe_init(key, cfg))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, 16, 8))
+
+    # reproduce the dispatch construction via the public apply: capacity
+    # semantics are observable through drop behaviour
+    y_uncapped, _ = layers.moe_apply(p, x, cfg, capacity_factor=1000.0)
+    y_capped, _ = layers.moe_apply(p, x, cfg, capacity_factor=0.01)
+    # capped drops more (or equal) tokens than uncapped
+    n_alive_un = (np.linalg.norm(np.asarray(y_uncapped), axis=-1) >
+                  1e-9).sum()
+    n_alive_cap = (np.linalg.norm(np.asarray(y_capped), axis=-1) >
+                   1e-9).sum()
+    assert n_alive_cap <= n_alive_un
+    assert np.isfinite(np.asarray(y_capped)).all()
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+def test_gla_decode_step_matches_chunked_tail(seed):
+    """One gla_decode_step after a chunked prefix == chunked over S+1."""
+    from repro.models import ssd
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    b, s, h, dk, dv = 1, 32, 2, 4, 4
+    q = jax.random.normal(ks[0], (b, s + 1, h, dk))
+    k = jax.random.normal(ks[1], (b, s + 1, h, dk))
+    v = jax.random.normal(ks[2], (b, s + 1, h, dv))
+    log_a = -jnp.abs(jax.random.normal(ks[3], (b, s + 1, h))) * 0.1
+    # oracle over s+1 steps (no chunk-divisibility constraint)
+    y_ref, _ = ssd.reference_gla(q, k, v, log_a)
+    _, state = ssd.chunked_gla(q[:, :s], k[:, :s], v[:, :s],
+                               log_a[:, :s], chunk=16)
+    y_step, _ = ssd.gla_decode_step(q[:, s], k[:, s], v[:, s],
+                                    log_a[:, s], state)
+    np.testing.assert_allclose(np.asarray(y_step),
+                               np.asarray(y_ref[:, s]), atol=1e-4)

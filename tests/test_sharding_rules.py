@@ -1,0 +1,75 @@
+"""Logical-axis sharding rules: per-arch divisibility fallbacks."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ParallelConfig, get_config
+from repro.distributed.sharding import make_rules, spec_for
+
+
+class FakeMesh:
+    """Only .shape is consulted by the rules."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+POD_MESH = FakeMesh({"pod": 2, "data": 16, "model": 16})
+PAR = ParallelConfig(dp_axes=("data",), tp_axis="model")
+
+
+def test_qwen2_full_tp():
+    rules = make_rules(get_config("qwen2-72b"), MESH, PAR)
+    assert rules["vocab"] == "model"  # 152064 % 16 == 0
+    assert rules["heads"] == "model"  # 64 % 16
+    assert rules["kv_heads"] is None  # 8 kv heads < 16 => replicate
+    assert rules["ffn"] == "model"  # 29568 % 16
+
+
+def test_whisper_vocab_fallback():
+    rules = make_rules(get_config("whisper-tiny"), MESH, PAR)
+    assert rules["vocab"] is None  # 51865 is odd
+    assert rules["heads"] is None  # 6 heads < 16
+
+
+def test_llama4_heads_fallback_to_embed():
+    """40 heads don't divide 16 => attention weights shard on embed."""
+    rules = make_rules(get_config("llama4-maverick-400b-a17b"), MESH, PAR)
+    assert rules["heads"] is None
+    assert rules["experts"] == "model"  # 128 % 16 == 0 => EP
+    emb = rules["embed"]
+    assert emb == "model" or (isinstance(emb, tuple) and "model" in emb)
+
+
+def test_mixtral_experts_fallback_to_ffn_tp():
+    rules = make_rules(get_config("mixtral-8x7b"), MESH, PAR)
+    assert rules["experts"] is None  # 8 % 16 != 0 => TP inside experts
+    assert rules["ffn"] == "model"  # 14336 % 16 == 0
+
+
+def test_pod_axis_prepended():
+    rules = make_rules(get_config("yi-9b"), POD_MESH, PAR)
+    assert rules["batch"] == ("pod", "data")
+
+
+def test_spec_for_drops_duplicate_axis():
+    rules = {"experts": "model", "ffn": "model", "embed": None}
+    spec = spec_for(("experts", "embed", "ffn"), rules)
+    # ffn's duplicate 'model' dropped; trailing Nones trimmed
+    assert tuple(spec) in ((("model",)), ("model", None))
+    assert tuple(spec)[0] == "model"
+    assert all(e != "model" for e in tuple(spec)[1:])
+
+
+def test_granite_mqa_kv_replicated():
+    rules = make_rules(get_config("granite-34b"), MESH, PAR)
+    assert rules["kv_heads"] is None  # kv=1
+    assert rules["heads"] == "model"  # 48 % 16
+
+
+def test_fsdp_embed_rule():
+    par = ParallelConfig(dp_axes=("data",), tp_axis="model",
+                         fsdp_params=True)
+    rules = make_rules(get_config("qwen2-72b"), MESH, par)
+    assert rules["embed"] == ("data",)  # 8192 % 16 == 0
