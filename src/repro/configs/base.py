@@ -291,7 +291,12 @@ class ParallelConfig:
     tp_axis: Optional[str] = "model"
     zero_1: bool = True  # shard optimizer state over dp axes (beyond paper)
     fsdp_params: bool = False  # shard params over dp axes too
-    compression: Optional[str] = "bf16"  # None | bf16 | f16 (paper: f16)
+    # gradient sync: None | bf16 | f16 (paper: f16) | "<wire>+bucketed"
+    # (one collective per fixed-size bucket instead of per leaf,
+    # DESIGN.md §2/§6; bucketed applies to the shard_map DP mode)
+    compression: Optional[str] = "bf16"
+    bucket_bytes: int = 64 * 1024 * 1024  # bucketed sync: bytes/collective
+    error_feedback: bool = False  # thread EF residuals through explicit sync
     remat: str = "block"  # none | block  (activation checkpoint per layer)
     sequence_sharding: bool = False  # shard seq dim of activations (SP)
     kv_seq_sharding: bool = False  # serve: shard KV cache seq on model

@@ -5,16 +5,23 @@ negligible accuracy effect. TPU adaptation (DESIGN.md §2): bf16 is the
 default wire format (fp32 exponent range => no loss scaling), fp16 is
 available for paper-faithfulness.
 
-Two integration points:
-  * ``compressed_psum`` — explicit shard_map DP mode: cast -> psum -> cast,
-    exactly the paper's mechanism.
+Three sync modes (selected by ``ParallelConfig.compression``):
+  * ``compressed_psum`` — explicit shard_map DP mode (``"bf16"``/``"f16"``):
+    cast -> psum -> cast, one collective per gradient leaf — exactly the
+    paper's mechanism.
+  * bucketed (``"bf16+bucketed"`` etc., DESIGN.md §6) — the per-leaf cast
+    feeds ``distributed/bucketing.py``, which packs the gradient stream
+    into fixed-size contiguous buckets and issues one collective per
+    bucket instead of one per leaf.
   * ``simulate_wire_cast`` — GSPMD mode: gradients are cast to the wire
     dtype and back *at the sync boundary*, so the numerics match the
     compressed collective even when XLA chooses where the all-reduce
     lives. The dry-run HLO parse reports actual collective dtypes.
 
 Beyond paper: error feedback (residual accumulation) removes the bias of
-repeated rounding at very large scale.
+repeated rounding at very large scale; ``compressed_psum_ef`` threads the
+residuals through either explicit sync path (the bucketed variant lives
+in ``distributed/bucketing.py``).
 """
 from __future__ import annotations
 
@@ -35,6 +42,36 @@ def _wire(dtype_name: Optional[str]):
     return WIRE_DTYPES[dtype_name]
 
 
+def parse_compression(spec: Optional[str]) -> Tuple[Optional[str], bool]:
+    """Split a ``ParallelConfig.compression`` string into
+    ``(wire_dtype_name, bucketed)``.
+
+    ``None``/"none" -> (None, False); "bf16" -> ("bf16", False);
+    "bf16+bucketed" -> ("bf16", True); "bucketed" -> (None, True) —
+    bucketing without a wire cast still fuses the per-leaf collectives.
+    """
+    if spec is None:
+        return None, False
+    wire: Optional[str] = None
+    bucketed = False
+    seen_wire = False
+    for part in spec.split("+"):
+        if part == "bucketed":
+            if bucketed:
+                raise ValueError(f"duplicate 'bucketed' in {spec!r}")
+            bucketed = True
+        elif part in WIRE_DTYPES:
+            if seen_wire:
+                raise ValueError(
+                    f"conflicting wire dtypes in {spec!r}")
+            seen_wire = True
+            wire = None if part == "none" else part
+        else:
+            raise ValueError(f"unknown compression spec part {part!r} "
+                             f"in {spec!r}")
+    return wire, bucketed
+
+
 def compressed_psum(grads: PyTree, axis_names: Sequence[str],
                     wire: Optional[str] = "bf16",
                     mean: bool = True) -> PyTree:
@@ -45,9 +82,10 @@ def compressed_psum(grads: PyTree, axis_names: Sequence[str],
     number of workers (the paper averages per-worker gradients).
     """
     wdt = _wire(wire)
-    n = 1
-    for a in axis_names:
-        n *= jax.lax.axis_size(a)
+    # static axis-size product; psum of a python constant folds at trace
+    # time (no collective is emitted), unlike lax.axis_size which does
+    # not exist on this jax version
+    n = jax.lax.psum(1, tuple(axis_names))
 
     def sync(g):
         acc_dtype = g.dtype
@@ -95,6 +133,22 @@ def apply_error_feedback(grads: PyTree, residual: PyTree,
     resid = jax.tree.map(lambda t: t[1], pairs,
                          is_leaf=lambda x: isinstance(x, tuple))
     return quant, resid
+
+
+def compressed_psum_ef(grads: PyTree, residual: PyTree,
+                       axis_names: Sequence[str], wire: str = "bf16",
+                       mean: bool = True) -> Tuple[PyTree, PyTree]:
+    """Per-leaf compressed psum with error feedback threaded through.
+
+    The residual update is worker-local (it sees the *local* gradient, so
+    every worker's rounding error is corrected on its next step); only
+    the wire-rounded value crosses the interconnect. The subsequent wire
+    cast inside ``compressed_psum`` is exact because ``q`` is already
+    wire-representable.
+    """
+    quant, new_residual = apply_error_feedback(grads, residual, wire)
+    synced = compressed_psum(quant, axis_names, wire, mean=mean)
+    return synced, new_residual
 
 
 def compression_error(grads: PyTree, wire: str = "bf16") -> jax.Array:

@@ -1,5 +1,25 @@
-"""Distribution: logical-axis sharding rules, compressed collectives,
-fault tolerance orchestration."""
+"""Distribution layer: logical-axis sharding rules, compressed
+collectives, and the bucketed gradient all-reduce subsystem.
+
+Sync modes (see DESIGN.md §2 for the wire format, §6 for bucketing):
+  * GSPMD — sharding rules here + XLA-placed collectives; wire
+    compression is simulated at the sync boundary (core/compression.py).
+  * shard_map DP per-leaf — explicit half-precision psum per gradient
+    leaf (the paper's mechanism).
+  * shard_map DP bucketed — ``bucketing.py`` packs the gradient stream
+    into fixed-size contiguous buckets and issues one collective per
+    bucket; numerically identical to per-leaf.
+Fault-tolerance orchestration (elastic restart, deterministic data
+sharding) is specified in DESIGN.md §5.
+"""
+from repro.distributed.bucketing import (  # noqa: F401
+    BucketPlan,
+    bucketed_psum,
+    bucketed_psum_ef,
+    pack,
+    plan_buckets,
+    unpack,
+)
 from repro.distributed.sharding import (  # noqa: F401
     activation_sharding,
     constrain,

@@ -1,5 +1,12 @@
 """Logical-axis sharding rules (MaxText-style) + activation constraints.
 
+This is the GSPMD sync mode's half of the distribution layer
+(DESIGN.md §3): collectives are placed by XLA from these shardings,
+with the gradient wire dtype simulated at the sync boundary
+(core/compression.py, DESIGN.md §2). The explicit shard_map modes
+(per-leaf and bucketed psum, DESIGN.md §6) live in training/step.py and
+distributed/bucketing.py.
+
 Models tag every parameter dim and activation with *logical* axis names
 ("embed", "heads", "ffn", "experts", "vocab", "batch", "seq", ...). This
 module maps logical names onto physical mesh axes with divisibility-aware

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel pair for bucketed gradient communication
+(DESIGN.md §6): fused cast+copy between the fp32 accumulation stream and
+the wire-dtype bucket.
+
+Packing a gradient bucket is two logical ops — a dtype cast (fp32 ->
+bf16/f16) and a copy into the contiguous bucket buffer. Left to XLA these
+can materialize as separate HBM round-trips per leaf; the kernel fuses
+them into one pass per VMEM tile, so each bucket element is read once and
+written once at the wire width. Unpack is the mirror image (wire -> fp32).
+
+Tiling follows fused_update.py: the flat stream is reshaped to
+(rows, 128) — the last dim matches the VPU lane width — and processed in
+BLOCK_ROWS x 128 tiles. Padding-awareness lives in the wrappers: an
+arbitrary-length stream is zero-padded to a whole number of lanes (and
+trimmed after), so odd leaf sizes never reach the kernel.
+
+On TPU the kernels run compiled; on CPU in interpret mode (how this
+container validates them). Pure-jnp oracles: ref.cast_copy.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+BLOCK_ROWS = 1024  # 1024*128 elems: 512 KiB fp32 + 256 KiB bf16 per tile
+
+
+def _cast_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...].astype(o_ref.dtype)
+
+
+def cast_copy_2d(x, out_dtype, *, interpret=True, block_rows=BLOCK_ROWS):
+    """x: (rows, 128) with rows a multiple of block_rows; returns x cast
+    to out_dtype, one fused pass."""
+    rows = x.shape[0]
+    block_rows = min(block_rows, rows)
+    assert rows % block_rows == 0, (rows, block_rows)
+    grid = (rows // block_rows,)
+    tile_in = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    tile_out = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        _cast_kernel,
+        grid=grid,
+        in_specs=[tile_in],
+        out_specs=tile_out,
+        out_shape=jax.ShapeDtypeStruct(x.shape, out_dtype),
+        interpret=interpret,
+    )(x)
+
+
+def _to_lanes(flat, block_rows=BLOCK_ROWS):
+    """Pad a 1-D stream to a whole (rows, LANES) tile grid whose row
+    count divides into block_rows tiles — padding a few extra zero rows
+    is far cheaper than the degenerate (1, LANES) grid a prime row
+    count would otherwise force."""
+    n = flat.shape[0]
+    rows = max(1, -(-n // LANES))
+    block = min(block_rows, rows)
+    rows = -(-rows // block) * block
+    pad = rows * LANES - n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(rows, LANES), n
+
+
+def pack_cast(flat, wire_dtype, *, interpret=True):
+    """Fused cast+copy of a 1-D fp32 stream into the wire dtype.
+
+    Padding-aware: any length is accepted; the tail is zero-padded to a
+    whole tile grid for the kernel and trimmed from the result.
+    """
+    x2d, n = _to_lanes(flat)
+    out = cast_copy_2d(x2d, wire_dtype, interpret=interpret)
+    return out.reshape(-1)[:n]
+
+
+def unpack_cast(flat, acc_dtype, *, interpret=True):
+    """Inverse of pack_cast: wire-dtype stream -> accumulation dtype."""
+    x2d, n = _to_lanes(flat)
+    out = cast_copy_2d(x2d, acc_dtype, interpret=interpret)
+    return out.reshape(-1)[:n]

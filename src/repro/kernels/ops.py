@@ -66,6 +66,24 @@ def fused_hybrid_update(g, p, d, m, h, weight_decay: float = 0.0) -> Tuple:
 
 
 # ---------------------------------------------------------------------------
+# bucket pack/unpack (bucketed gradient all-reduce, DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+
+def pack_cast(flat, wire_dtype):
+    """Fused cast+copy of a flat fp32 stream to the wire dtype
+    (padding-aware). See ref.cast_copy."""
+    from repro.kernels import bucket_ops as _bo
+    return _bo.pack_cast(flat, wire_dtype, interpret=_interpret())
+
+
+def unpack_cast(flat, acc_dtype):
+    """Inverse of pack_cast: wire stream back to the accumulation dtype."""
+    from repro.kernels import bucket_ops as _bo
+    return _bo.unpack_cast(flat, acc_dtype, interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
 

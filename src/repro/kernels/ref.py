@@ -36,6 +36,13 @@ def rmsnorm(x, scale, *, eps=1e-5):
     return y * scale.astype(x.dtype)
 
 
+def cast_copy(flat, out_dtype):
+    """Pure-jnp oracle for the bucket pack/unpack kernels: a dtype cast
+    of the flat stream (the fused kernel's semantics are exactly this;
+    fusion only changes where the HBM round-trips happen)."""
+    return flat.astype(out_dtype)
+
+
 def hybrid_update(g, p, d, m, *, eta, alpha_sgd, mu1=0.9, mu2=0.99,
                   eps=1e-8, eta_rmsprop=3e-4, weight_decay=0.0):
     """Paper A.1 update, fp32 (the fused kernel's oracle)."""

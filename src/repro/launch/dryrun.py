@@ -32,7 +32,7 @@ from repro.configs import (
     shapes_for,
 )
 from repro.distributed.sharding import make_rules, spec_for, tree_shardings
-from repro.launch.hlo_analysis import Analysis, analyze_hlo
+from repro.launch.hlo_analysis import Analysis, analyze_hlo, comm_report
 from repro.launch.mesh import (
     HBM_BW,
     ICI_BW,
@@ -100,7 +100,8 @@ def lower_cell(arch: str, shape_name: str, mesh: Mesh, *,
                donate: bool = True,
                dp_mode: str = "gspmd",
                opt_cfg: Optional[OptimizerConfig] = None,
-               microbatches: int = 1):
+               microbatches: int = 1,
+               compression: Optional[str] = "__default__"):
     """Build + lower + compile one cell. Returns (record, compiled)."""
     cfg = get_config(arch)
     shp = {s.name: s for s in shapes_for(cfg)}[shape_name]
@@ -108,6 +109,15 @@ def lower_cell(arch: str, shape_name: str, mesh: Mesh, *,
         return {"arch": arch, "shape": shape_name, "status": "skipped",
                 "reason": shp.skip_reason}, None
     parallel = parallel or cell_parallel(cfg, shp)
+    if compression != "__default__":
+        from repro.core.compression import parse_compression
+        if parse_compression(compression)[1] and dp_mode != "shardmap":
+            # refuse to write a record that claims a mode that never ran:
+            # under GSPMD the bucketed flag is ignored (DESIGN.md §6)
+            raise ValueError(
+                "bucketed compression requires --dp-mode shardmap; "
+                f"got dp_mode={dp_mode!r} with {compression!r}")
+        parallel = dataclasses.replace(parallel, compression=compression)
     rules = make_rules(cfg, mesh, parallel)
     compute_dtype = jnp.bfloat16
 
@@ -345,6 +355,9 @@ def analyze_compiled(arch, shp, cfg, mesh, compiled, resident
         "collective_bytes_per_device": a.collective_bytes,
         "collective_dtypes": a.collective_dtypes,
         "collective_total_bytes": a.total_collective_bytes,
+        # collective count / bytes-per-collective / wire dtype — verifies
+        # the bucketed sync fusion from HLO (DESIGN.md §6)
+        "comm_report": comm_report(a),
         "trip_counts_found": len(a.trip_counts),
         "resident_bytes_per_device": resident_bytes,
         "fits_v5e_16g": sum(resident_bytes.values()) < V5E_HBM_BYTES,
@@ -367,9 +380,14 @@ def analyze_compiled(arch, shp, cfg, mesh, compiled, resident
 
 
 def run_cells(archs, shapes, *, multi_pod=False, out_dir="results/dryrun",
-              force=False, attention_impl="chunked"):
+              force=False, attention_impl="chunked", dp_mode="gspmd",
+              compression="__default__"):
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    if dp_mode != "gspmd":
+        mesh_tag += f"__{dp_mode}"
+    if compression != "__default__":
+        mesh_tag += f"__{compression or 'nowire'}"
     os.makedirs(out_dir, exist_ok=True)
     results = []
     for arch in archs:
@@ -388,7 +406,9 @@ def run_cells(archs, shapes, *, multi_pod=False, out_dir="results/dryrun",
                   flush=True)
             try:
                 rec, compiled = lower_cell(arch, shape_name, mesh,
-                                           attention_impl=attention_impl)
+                                           attention_impl=attention_impl,
+                                           dp_mode=dp_mode,
+                                           compression=compression)
                 del compiled
             except Exception as e:
                 rec = {"arch": arch, "shape": shape_name, "status": "error",
@@ -403,6 +423,12 @@ def run_cells(archs, shapes, *, multi_pod=False, out_dir="results/dryrun",
                 r = rec["roofline"]
                 extra = (f"dom={r['dominant']} bound={r['bound_s']:.4f}s "
                          f"compile={rec['compile_s']}s")
+                cr = rec.get("comm_report", {})
+                if cr:
+                    print("  comm: %.0f collectives/step, "
+                          "%.2f MiB/collective mean" % (
+                              cr["total_executions_per_step"],
+                              cr["mean_bytes_per_collective"] / 2**20))
             print(f"[done]   {arch} {shape_name} {mesh_tag}: {status} "
                   f"{extra}", flush=True)
             results.append(rec)
@@ -420,6 +446,11 @@ def main():
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--attention-impl", default="chunked")
+    ap.add_argument("--dp-mode", default="gspmd",
+                    choices=["gspmd", "shardmap"])
+    ap.add_argument("--compression", default="__default__",
+                    help="override gradient sync: none|bf16|f16|"
+                         "bf16+bucketed|f16+bucketed (DESIGN.md §2/§6)")
     args = ap.parse_args()
 
     if args.arch == "all":
@@ -430,7 +461,8 @@ def main():
     meshes = [False, True] if args.both_meshes else [args.multi_pod]
     for mp in meshes:
         run_cells(archs, shapes, multi_pod=mp, out_dir=args.out,
-                  force=args.force, attention_impl=args.attention_impl)
+                  force=args.force, attention_impl=args.attention_impl,
+                  dp_mode=args.dp_mode, compression=args.compression)
 
 
 if __name__ == "__main__":

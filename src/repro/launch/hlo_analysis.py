@@ -72,6 +72,11 @@ class Analysis:
     top_memory_ops: List[tuple] = dataclasses.field(default_factory=list)
     top_collective_ops: List[tuple] = dataclasses.field(
         default_factory=list)
+    # opcode -> trip-count-weighted executions per step (a collective
+    # inside a scanned layer counts n_layers times) — what the bucketing
+    # fusion claim (DESIGN.md §6) is verified against
+    collective_exec_counts: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def total_collective_bytes(self) -> float:
@@ -303,6 +308,7 @@ def analyze_hlo(text: str, total_devices: int = 1) -> Analysis:
     coll_dtypes: Dict[str, Dict[str, float]] = defaultdict(
         lambda: defaultdict(float))
     coll_count = 0
+    coll_execs: Dict[str, float] = defaultdict(float)
     histogram: Dict[str, int] = defaultdict(int)
     top_mem: List[tuple] = []
     top_coll: List[tuple] = []
@@ -330,8 +336,11 @@ def analyze_hlo(text: str, total_devices: int = 1) -> Analysis:
     # TPU MXU consumes bf16 directly and these don't exist there.
     CAST_ONLY = {"parameter", "convert", "bitcast", "get-tuple-element",
                  "tuple"}
-    # + layout movement: still real traffic, but at the semantic dtype
-    PASSTHROUGH = CAST_ONLY | {"copy", "transpose", "reshape"}
+    # + layout movement: still real traffic, but at the semantic dtype.
+    # slice/concatenate cover the bucketed gradient path (DESIGN.md §6),
+    # whose bucket is a slice of a concatenated bf16 stream.
+    PASSTHROUGH = CAST_ONLY | {"copy", "transpose", "reshape", "slice",
+                               "concatenate"}
 
     def _convert_only(cname: str) -> bool:
         return all(o.opcode in CAST_ONLY for o in comps.get(cname, []))
@@ -358,15 +367,39 @@ def analyze_hlo(text: str, total_devices: int = 1) -> Analysis:
                     return True
                 name = d.operands[0] if d.operands else None
                 continue
-            if d.opcode == "fusion" and d.name in fusion_target and all(
-                    o.opcode in PASSTHROUGH
-                    for o in comps.get(fusion_target[d.name], [])):
-                if _body_mentions_bf16(fusion_target[d.name]):
-                    return True
-                name = d.operands[0] if d.operands else None
-                continue
+            if d.opcode == "fusion" and d.name in fusion_target:
+                fops = comps.get(fusion_target[d.name], [])
+                # CPU promotes bf16 reductions to f32 by a convert that
+                # gets fused into the producer: a fusion whose ROOT
+                # converts a bf16 value is a bf16 round-trip regardless
+                # of what else the fusion computes (the bucketed
+                # gradient pack hits this).
+                froot = next((o for o in fops if o.root), None)
+                if froot is not None and froot.opcode == "convert" \
+                        and froot.operands:
+                    fdefs = _op_defs(fops)
+                    src = fdefs.get(froot.operands[0])
+                    if src is not None and \
+                            type_shape(src.result)[0] == "bf16":
+                        return True
+                if all(o.opcode in PASSTHROUGH for o in fops):
+                    if _body_mentions_bf16(fusion_target[d.name]):
+                        return True
+                    name = d.operands[0] if d.operands else None
+                    continue
+            if d.opcode == "call":
+                # outlined computation (XLA outlines the big gradient
+                # pack): the value is whatever the callee's root is
+                cm = re.search(r"to_apply=%?([\w.\-]+)", d.attrs)
+                if cm and cm.group(1) in comps:
+                    sub = comps[cm.group(1)]
+                    sroot = next((o for o in sub if o.root), None)
+                    if sroot is not None:
+                        return _bf16_roundtrip(sroot.name, _op_defs(sub),
+                                               hops)
+                return False
             if d.opcode in ("copy", "bitcast", "transpose", "reshape",
-                            "all-reduce"):
+                            "all-reduce", "slice", "concatenate"):
                 name = d.operands[0] if d.operands else None
                 continue
             return False
@@ -440,6 +473,7 @@ def analyze_hlo(text: str, total_devices: int = 1) -> Analysis:
                 coll_bytes[base] += wb
                 coll_dtypes[base][dtype] += wb
                 coll_count += 1
+                coll_execs[base] += m_c
                 top_coll.append((wb, base, k, m_c, cname[:30],
                                  op.result[:46]))
             if op.opcode in MATERIALIZING and not in_fusion:
@@ -493,4 +527,31 @@ def analyze_hlo(text: str, total_devices: int = 1) -> Analysis:
         op_histogram=dict(histogram),
         top_memory_ops=top_mem[:40],
         top_collective_ops=top_coll[:40],
+        collective_exec_counts=dict(coll_execs),
     )
+
+
+def comm_report(a: Analysis) -> Dict[str, object]:
+    """Communication summary for one compiled program — the numbers the
+    bucketed sync mode (DESIGN.md §6) is *verified* by, rather than
+    assumed: how many collectives actually execute per step, how many
+    wire bytes each one moves, and in which dtype.
+    """
+    per_op = {}
+    for op, execs in sorted(a.collective_exec_counts.items()):
+        byts = a.collective_bytes.get(op, 0.0)
+        per_op[op] = {
+            "executions_per_step": round(execs, 2),
+            "wire_bytes_per_device": byts,
+            "bytes_per_collective": byts / execs if execs else 0.0,
+            "dtype_bytes": dict(a.collective_dtypes.get(op, {})),
+        }
+    total_execs = sum(a.collective_exec_counts.values())
+    total_bytes = a.total_collective_bytes
+    return {
+        "per_op": per_op,
+        "total_executions_per_step": round(total_execs, 2),
+        "total_wire_bytes_per_device": total_bytes,
+        "mean_bytes_per_collective": (total_bytes / total_execs
+                                      if total_execs else 0.0),
+    }

@@ -48,12 +48,15 @@ def build_train_setup(cfg, *, global_batch: int, seq_len: int,
                       mesh=None, dp_mode: str = "gspmd",
                       compute_dtype=jnp.float32, attention_impl="naive",
                       seed: int = 0, use_fused_kernel: bool = False,
-                      sync_bn: bool = False):
+                      sync_bn: bool = False, compression: str = "bf16",
+                      bucket_bytes: int = 64 * 1024 * 1024,
+                      error_feedback: bool = False):
     """Returns (state, train_step, data, put_batch, state_shardings)."""
     shape = ShapeConfig("train", seq_len, global_batch, "train")
     parallel = ParallelConfig(
         dp_axes=("data",), tp_axis="model" if mesh is not None else None,
-        compression="bf16", zero_1=False)
+        compression=compression, bucket_bytes=bucket_bytes,
+        error_feedback=error_feedback, zero_1=False)
     if cfg.family == "conv" and dp_mode == "shardmap" and sync_bn:
         from repro.models.resnet import ResNet50
         model = ResNet50(cfg, compute_dtype=compute_dtype,
@@ -69,14 +72,27 @@ def build_train_setup(cfg, *, global_batch: int, seq_len: int,
     key = jax.random.PRNGKey(seed)
     params, axes = model.init_params(key)
     mstate = init_model_state(model)
+    ef_residual = None
     if dp_mode == "shardmap" and mesh is not None:
         from repro.training.step import replicate_model_state
         n_workers = 1
         for a in parallel.dp_axes:
             n_workers *= mesh.shape[a]
         mstate = replicate_model_state(mstate, n_workers)
+        if error_feedback:
+            from repro.core.compression import init_error_feedback
+            # per-worker residuals, leading worker dim like the BN stats
+            ef_residual = replicate_model_state(
+                init_error_feedback(params), n_workers)
+    elif error_feedback:
+        raise ValueError(
+            "error_feedback is only implemented for the explicit "
+            "shard_map DP mode on a mesh (dp_mode='shardmap'); the "
+            "GSPMD path has no worker-local gradients to correct")
     opt_state = optimizer.init(params)
     state = {"params": params, "opt": opt_state, "model_state": mstate}
+    if ef_residual is not None:
+        state["ef_residual"] = ef_residual
 
     rules = None
     state_shardings = None
@@ -139,6 +155,12 @@ def main():
                     help="DxM virtual mesh, e.g. 4x2 (needs XLA_FLAGS)")
     ap.add_argument("--dp-mode", default="gspmd",
                     choices=["gspmd", "shardmap"])
+    ap.add_argument("--compression", default="bf16",
+                    help="gradient sync wire format: none|bf16|f16|"
+                         "bf16+bucketed|f16+bucketed (DESIGN.md §2/§6)")
+    ap.add_argument("--bucket-mib", type=int, default=64,
+                    help="bucket size in MiB for the +bucketed modes")
+    ap.add_argument("--error-feedback", action="store_true")
     ap.add_argument("--use-fused-kernel", action="store_true")
     ap.add_argument("--log-json", default=None)
     ap.add_argument("--seed", type=int, default=0)
@@ -158,7 +180,10 @@ def main():
             cfg, global_batch=args.global_batch, seq_len=args.seq_len,
             opt_cfg=opt_cfg, steps_per_epoch=args.steps_per_epoch,
             mesh=mesh, dp_mode=args.dp_mode, seed=args.seed,
-            use_fused_kernel=args.use_fused_kernel)
+            use_fused_kernel=args.use_fused_kernel,
+            compression=args.compression,
+            bucket_bytes=args.bucket_mib * 1024 * 1024,
+            error_feedback=args.error_feedback)
 
     loop_cfg = LoopConfig(total_steps=args.steps,
                           checkpoint_every=args.ckpt_every,

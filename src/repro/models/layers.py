@@ -345,7 +345,7 @@ def mlp_apply(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 # Dispatch-tensor size per device is G_local*S_g*E_local*C; S_g=256 keeps
-# it in the tens-of-MB range for every assigned MoE arch (see DESIGN.md).
+# it in the tens-of-MB range for every assigned MoE arch (DESIGN.md §3).
 MOE_GROUP = 256  # tokens per dispatch group
 CAPACITY_FACTOR = 1.25
 

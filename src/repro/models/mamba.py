@@ -6,7 +6,7 @@ layers. Each shared application takes concat(hidden, initial_embedding)
 through a learned 2d->d projection (the Zamba "shared transformer"
 pattern), so the shared weights are reused with fresh inputs.
 
-TPU adaptation (documented in DESIGN.md): in serve mode the shared
+TPU adaptation (documented in DESIGN.md §4): in serve mode the shared
 attention uses a sliding window (SHARED_ATTN_SERVE_WINDOW) so the decode
 state stays O(window) — the Mamba backbone already gives O(1)/token.
 """

@@ -1,13 +1,23 @@
 """Step builders.
 
-Two distribution modes:
+Gradient-sync modes (``ParallelConfig.compression`` selects the wire
+format; ``dp_mode`` selects the mechanism):
   * GSPMD (default): jit + NamedShardings; XLA inserts TP/FSDP/DP
     collectives from the logical-axis rules. Gradient "wire" compression
-    is applied at the sync boundary (core/compression.py) and the dry-run
-    verifies the resulting collective dtypes from the HLO.
-  * shard_map DP (paper-faithful): explicit per-worker fwd/bwd, explicit
-    half-precision psum of gradients (the paper's mechanism), replicated
-    optimizer — the structure of ChainerMN's all-reduce data parallelism.
+    is applied at the sync boundary (core/compression.py, DESIGN.md §2)
+    and the dry-run verifies the resulting collective dtypes from the
+    HLO.
+  * shard_map DP per-leaf (paper-faithful): explicit per-worker fwd/bwd,
+    explicit half-precision psum per gradient leaf (the paper's
+    mechanism, DESIGN.md §2), replicated optimizer — the structure of
+    ChainerMN's all-reduce data parallelism.
+  * shard_map DP bucketed (``compression="bf16+bucketed"``): same step,
+    but the gradient stream is packed into fixed-size contiguous buckets
+    and all-reduced one bucket at a time
+    (distributed/bucketing.py, DESIGN.md §6) — numerically identical to
+    per-leaf, with ~leaf-count fewer collectives. Error-feedback
+    residuals (``ParallelConfig.error_feedback``) thread through either
+    explicit path.
 """
 from __future__ import annotations
 
@@ -19,7 +29,12 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import TrainConfig
-from repro.core.compression import compressed_psum, simulate_wire_cast
+from repro.core.compression import (
+    compressed_psum,
+    compressed_psum_ef,
+    parse_compression,
+    simulate_wire_cast,
+)
 from repro.distributed.sharding import activation_sharding
 from repro.optim.interface import Optimizer
 
@@ -49,7 +64,10 @@ def make_train_step(model, optimizer: Optimizer, train_cfg: TrainConfig,
     while the gradient math is unchanged (mean of microbatch grads ==
     full-batch grad for mean losses).
     """
-    wire = train_cfg.parallel.compression
+    # GSPMD leaves collective placement to XLA, so only the wire dtype of
+    # the compression spec applies here; "+bucketed" is a shard_map-DP
+    # concern (DESIGN.md §6) and is ignored by this builder.
+    wire, _ = parse_compression(train_cfg.parallel.compression)
 
     compute_dtype = getattr(model, "compute_dtype", jnp.bfloat16)
 
@@ -169,30 +187,78 @@ def make_dp_shardmap_train_step(model, optimizer: Optimizer,
     per-worker forward/backward, **half-precision all-reduce of
     gradients**, replicated optimizer update. Model must be pure-DP
     (params replicated), e.g. ResNet-50 or small LMs.
+
+    ``compression="<wire>+bucketed"`` swaps the per-leaf psum for the
+    bucketed subsystem (one collective per ``bucket_bytes`` of wire
+    traffic, DESIGN.md §6); ``error_feedback=True`` threads rounding
+    residuals through either sync path (state gains an ``ef_residual``
+    entry, per-worker like the BN stats).
     """
     from jax.experimental.shard_map import shard_map
 
-    wire = train_cfg.parallel.compression
+    from repro.distributed.bucketing import bucketed_psum, bucketed_psum_ef
+
+    parallel = train_cfg.parallel
+    wire, bucketed = parse_compression(parallel.compression)
+    use_ef = parallel.error_feedback
+    if use_ef and wire is None:
+        raise ValueError("error_feedback requires a wire dtype "
+                         f"(compression={parallel.compression!r})")
     dp_axes = tuple(dp_axes)
 
-    def local_step(params, mstate, opt, batch):
+    def sync_grads(grads, residual):
+        """One of the four (per-leaf|bucketed) x (plain|EF) sync paths."""
+        if use_ef:
+            if bucketed:
+                return bucketed_psum_ef(
+                    grads, residual, dp_axes, wire=wire,
+                    bucket_bytes=parallel.bucket_bytes)
+            return compressed_psum_ef(grads, residual, dp_axes, wire)
+        if bucketed:
+            return bucketed_psum(grads, dp_axes, wire=wire,
+                                 bucket_bytes=parallel.bucket_bytes,
+                                 mean=True), None
+        return compressed_psum(grads, dp_axes, wire, mean=True), None
+
+    def local_step(params, mstate, opt, batch, residual=None):
         # mstate leaves carry a leading per-worker dim (1, ...) locally
         local_mstate = jax.tree.map(lambda x: x[0], mstate)
         (loss, (new_mstate, metrics)), grads = jax.value_and_grad(
             model.loss_fn, has_aux=True)(params, local_mstate, batch,
                                          train_cfg.label_smoothing)
         # ---- the paper's technique: fp16/bf16 compressed all-reduce ----
-        grads = compressed_psum(grads, dp_axes, wire, mean=True)
-        metrics = {k: jax.lax.pmean(v, dp_axes) for k, v in metrics.items()}
+        local_residual = (jax.tree.map(lambda x: x[0], residual)
+                          if use_ef else None)
+        grads, new_residual = sync_grads(grads, local_residual)
+        # one collective for all scalar metrics (stack -> pmean -> split)
+        # instead of one tiny all-reduce per metric — keeps the step's
+        # collective count at n_buckets + 1 in the bucketed mode
+        scalar_keys = sorted(k for k, v in metrics.items()
+                             if jnp.ndim(v) == 0)
+        if scalar_keys:
+            stacked = jax.lax.pmean(
+                jnp.stack([metrics[k].astype(jnp.float32)
+                           for k in scalar_keys]), dp_axes)
+            metrics = {**{k: jax.lax.pmean(v, dp_axes)
+                          for k, v in metrics.items()
+                          if k not in scalar_keys},
+                       **{k: stacked[i]
+                          for i, k in enumerate(scalar_keys)}}
+        else:
+            metrics = {k: jax.lax.pmean(v, dp_axes)
+                       for k, v in metrics.items()}
         new_params, new_opt, opt_metrics = optimizer.update(
             params, grads, opt)
         metrics.update(opt_metrics)
         metrics["grad_norm"] = global_norm(grads)
         new_mstate = jax.tree.map(lambda x: x[None], new_mstate)
-        return new_params, new_mstate, new_opt, metrics
+        out = (new_params, new_mstate, new_opt, metrics)
+        if use_ef:
+            out += (jax.tree.map(lambda x: x[None], new_residual),)
+        return out
 
     batch_spec = P(dp_axes)
-    state_spec = P(dp_axes)  # per-worker last-minibatch BN stats
+    state_spec = P(dp_axes)  # per-worker last-minibatch BN stats / EF
 
     def train_step(state, batch):
         in_specs = (
@@ -207,12 +273,22 @@ def make_dp_shardmap_train_step(model, optimizer: Optimizer,
             jax.tree.map(lambda _: P(), state["opt"]),
             P(),
         )
+        args = (state["params"], state["model_state"], state["opt"], batch)
+        if use_ef:
+            ef_spec = jax.tree.map(lambda _: state_spec,
+                                   state["ef_residual"])
+            in_specs += (ef_spec,)
+            out_specs += (ef_spec,)
+            args += (state["ef_residual"],)
         fn = shard_map(local_step, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, check_rep=False)
-        new_params, new_mstate, new_opt, metrics = fn(
-            state["params"], state["model_state"], state["opt"], batch)
-        return {"params": new_params, "opt": new_opt,
-                "model_state": new_mstate}, metrics
+        outs = fn(*args)
+        new_params, new_mstate, new_opt, metrics = outs[:4]
+        new_state = {"params": new_params, "opt": new_opt,
+                     "model_state": new_mstate}
+        if use_ef:
+            new_state["ef_residual"] = outs[4]
+        return new_state, metrics
 
     return train_step
 

@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Tier-1 test entrypoint (SNIPPETS.md idiom): virtual 8-device host
+# platform + src on PYTHONPATH. Multi-device tests additionally spawn
+# subprocesses with their own XLA_FLAGS, so they pass either way.
+set -euo pipefail
+cd "$(dirname "$0")"
+export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"
