@@ -2,5 +2,7 @@ from repro.checkpoint.checkpointer import (  # noqa: F401
     AsyncCheckpointer,
     list_checkpoints,
     restore,
+    restore_best,
     save,
+    save_best,
 )

@@ -106,11 +106,44 @@ class AsyncCheckpointer:
             raise err
 
     def _gc(self):
-        steps = list_checkpoints(self.directory)
-        for s in steps[:-self.keep]:
-            shutil.rmtree(os.path.join(self.directory,
-                                       f"step_{s:010d}"),
-                          ignore_errors=True)
+        _gc_dir(self.directory, self.keep)
+
+
+def _gc_dir(directory: str, keep: int):
+    """Drop all but the newest ``keep`` checkpoints in ``directory`` —
+    the single retention policy, shared by the rotating window and the
+    best-checkpoint dir (keep=1)."""
+    steps = list_checkpoints(directory)
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:010d}"),
+                      ignore_errors=True)
+
+
+BEST_DIR = "best"
+
+
+def save_best(directory: str, step: int, state: PyTree,
+              metadata: Optional[Dict] = None) -> str:
+    """Retain ``state`` as the best checkpoint so far.
+
+    Lives under ``<directory>/best/step_<n>`` — outside the rotating
+    ``keep`` window, so the best-accuracy state survives GC no matter
+    how much later training runs (DESIGN.md §7). At most one best
+    checkpoint exists (same keep=1 policy as the async path the Trainer
+    uses); the previous one is removed after the new one is atomically
+    in place.
+    """
+    bdir = os.path.join(directory, BEST_DIR)
+    path = save(bdir, step, state, metadata=metadata)
+    _gc_dir(bdir, keep=1)
+    return path
+
+
+def restore_best(directory: str, target: Optional[PyTree] = None,
+                 shardings: Optional[PyTree] = None) -> Tuple[PyTree, Dict]:
+    """Restore the retained best checkpoint (see ``save_best``)."""
+    return restore(os.path.join(directory, BEST_DIR), target=target,
+                   shardings=shardings)
 
 
 def list_checkpoints(directory: str):
@@ -154,6 +187,13 @@ def restore(directory: str, step: Optional[int] = None,
     shard_leaves = (jax.tree.leaves(shardings,
                                     is_leaf=lambda x: hasattr(x, "spec"))
                     if shardings is not None else [None] * len(flat))
+    if len(shard_leaves) != len(flat):
+        # strict zip: a mis-shaped shardings tree must error, not
+        # silently device_put the tail of the state unsharded
+        raise ValueError(
+            f"shardings tree has {len(shard_leaves)} leaves but target "
+            f"has {len(flat)}; pass a shardings tree congruent with the "
+            "state (or None)")
     for (path_k, leaf), shard in zip(flat, shard_leaves):
         key = jax.tree_util.keystr(path_k)
         if key not in arrays:

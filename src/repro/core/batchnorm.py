@@ -52,22 +52,73 @@ def bn_apply_stats(x: jax.Array, mean, var, scale, bias,
     return (x * inv.astype(x.dtype) + off.astype(x.dtype)).astype(x.dtype)
 
 
+def _is_stat(node) -> bool:
+    """A BN statistics record: dict carrying mean + var leaves."""
+    return isinstance(node, dict) and "mean" in node and "var" in node
+
+
+def _combine_moments(mean_w, var_w, reduce_mean):
+    """Average per-worker (mean, var) pairs moment-correctly.
+
+    Averaging variances directly drops the spread of the per-worker
+    means; reconstructing E[x^2] = var + mean^2 first makes the combined
+    statistics *exactly* the global-minibatch statistics when every
+    worker saw an equal shard — which is what makes shard_map-DP eval
+    logits match GSPMD eval logits (DESIGN.md §7). ``reduce_mean``
+    abstracts over host-side mean (leading worker axis) vs in-program
+    pmean.
+    """
+    mean = reduce_mean(mean_w)
+    ex2 = reduce_mean(var_w + jnp.square(mean_w))
+    var = jnp.maximum(ex2 - jnp.square(mean), 0.0)
+    return mean, var
+
+
+def _reduce_stats(state: PyTree, reduce) -> PyTree:
+    """Apply ``reduce`` to every leaf, combining (mean, var) stat
+    records moment-correctly along the way."""
+
+    def combine(d):
+        mean, var = _combine_moments(d["mean"], d["var"], reduce)
+        out = dict(d)
+        out.update(mean=mean, var=var)
+        for k in out:
+            if k not in ("mean", "var"):
+                out[k] = reduce(out[k])
+        return out
+
+    def visit(node):
+        if _is_stat(node):
+            return combine(node)
+        return jax.tree.map(reduce, node)
+
+    return jax.tree.map(visit, state, is_leaf=_is_stat)
+
+
+def combine_worker_bn_stats(state: PyTree) -> PyTree:
+    """Paper §2's pre-validation all-reduce, host/jit form: statistics
+    carry a leading per-worker axis (the shard_map DP layout); returns
+    the global statistics with that axis reduced. ``mean`` leaves are
+    plain-averaged; ``var`` leaves are combined via E[x^2] so the result
+    equals the statistics of the concatenated (global) minibatch."""
+    return _reduce_stats(state, lambda x: jnp.mean(x, axis=0))
+
+
 def finalize_bn_stats(state: PyTree,
                       axis_names: Optional[Sequence[str]] = None) -> PyTree:
     """The paper's pre-validation all-reduce of last-minibatch statistics.
 
-    Inside shard_map: pmean over ``axis_names``. Under GSPMD (or single
-    process) the stats are already global and this is the identity —
-    kept as an explicit step so the serving/validation path is the same
-    program in both modes.
+    Inside shard_map: pmean over ``axis_names`` (moment-correct for
+    mean/var stat records, see ``combine_worker_bn_stats``). Under GSPMD
+    (or single process) the stats are already global and this is the
+    identity — kept as an explicit step so the serving/validation path
+    is the same program in both modes.
     """
     if not axis_names:
         return state
 
-    def reduce(leaf):
-        return jax.lax.pmean(leaf, axis_names)
-
-    return jax.tree.map(reduce, state)
+    return _reduce_stats(state,
+                         lambda leaf: jax.lax.pmean(leaf, axis_names))
 
 
 def merge_bn_stats(states: Sequence[PyTree]) -> PyTree:

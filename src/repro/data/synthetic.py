@@ -1,18 +1,35 @@
 """Deterministic synthetic data pipelines.
 
-Determinism contract: batch(step) depends only on (seed, step) — this is
-what makes straggler backup-steps and elastic restarts possible: any host
-can regenerate any step's shard without coordination (DESIGN.md §5).
+Determinism contract: batch(step) depends only on (seed, split, step) —
+this is what makes straggler backup-steps and elastic restarts possible:
+any host can regenerate any step's shard without coordination
+(DESIGN.md §5).
+
+Held-out split (DESIGN.md §7): every pipeline takes ``split`` — the
+train split draws from seed-space indices ``{base + step}``, the val
+split from ``{base - (step + 1)}``. The two index sets are disjoint by
+construction (non-negative vs strictly negative offsets), so validation
+batches can never alias training batches, for any number of training
+steps below 2**30. Image class templates depend only on ``seed``, so
+both splits sample the *same* underlying task.
 """
 from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Any, Dict, Iterator, Optional
 
 import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
+
+SPLITS = ("train", "val")
+
+
+def _split_index(split: str, step: int) -> int:
+    """Disjoint seed-space offsets: train >= 0, val < 0."""
+    return step if split == "train" else -(step + 1)
 
 
 class SyntheticLMData:
@@ -20,15 +37,19 @@ class SyntheticLMData:
     copy/induction task) so loss curves are meaningful, not flat."""
 
     def __init__(self, cfg: ModelConfig, batch: int, seq_len: int,
-                 seed: int = 0, structured: bool = True):
+                 seed: int = 0, structured: bool = True,
+                 split: str = "train"):
+        assert split in SPLITS, split
         self.cfg = cfg
         self.batch = batch
         self.seq_len = seq_len
         self.seed = seed
         self.structured = structured
+        self.split = split
 
     def batch_at(self, step: int) -> Dict[str, np.ndarray]:
-        rng = np.random.RandomState((self.seed * 1_000_003 + step) %
+        idx = _split_index(self.split, step)
+        rng = np.random.RandomState((self.seed * 1_000_003 + idx) %
                                     (2 ** 31 - 1))
         v = self.cfg.vocab_size
         b, s = self.batch, self.seq_len
@@ -59,18 +80,23 @@ class SyntheticLMData:
 class SyntheticImageData:
     """ImageNet-like classification with class-dependent structure:
     images = class template + noise, so a ConvNet can actually learn —
-    the substrate for the paper-claims proxy experiment."""
+    the substrate for the paper-claims proxy experiment. ``noise``
+    controls difficulty (SNR): the quickstart default memorizes in a few
+    steps; the recipe/ablation proxies raise it so training is still in
+    progress at the schedule-transition epochs, like real ImageNet."""
 
     def __init__(self, num_classes: int, image_size: int, batch: int,
                  seed: int = 0, noise: float = 0.5,
-                 template_rank: int = 8):
+                 template_rank: int = 8, split: str = "train"):
+        assert split in SPLITS, split
         self.num_classes = num_classes
         self.image_size = image_size
         self.batch = batch
         self.seed = seed
         self.noise = noise
+        self.split = split
         rng = np.random.RandomState(seed)
-        # low-rank smooth class templates
+        # low-rank smooth class templates (seed-only: shared across splits)
         r = template_rank
         u = rng.randn(num_classes, image_size, r).astype(np.float32)
         w = rng.randn(num_classes, r, image_size * 3).astype(np.float32)
@@ -79,7 +105,8 @@ class SyntheticImageData:
         self.templates /= (self.templates.std() + 1e-6)
 
     def batch_at(self, step: int) -> Dict[str, np.ndarray]:
-        rng = np.random.RandomState((self.seed * 7_000_003 + step) %
+        idx = _split_index(self.split, step)
+        rng = np.random.RandomState((self.seed * 7_000_003 + idx) %
                                     (2 ** 31 - 1))
         labels = rng.randint(0, self.num_classes, size=(self.batch,))
         imgs = self.templates[labels] + self.noise * rng.randn(
@@ -89,15 +116,29 @@ class SyntheticImageData:
                 "labels": labels.astype(np.int32)}
 
 
-def make_data(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0):
+def make_data(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0,
+              split: str = "train", noise: Optional[float] = None):
     if cfg.family == "conv":
+        kw = {} if noise is None else {"noise": noise}
         return SyntheticImageData(cfg.num_classes, cfg.image_size,
-                                  shape.global_batch, seed)
-    return SyntheticLMData(cfg, shape.global_batch, shape.seq_len, seed)
+                                  shape.global_batch, seed, split=split,
+                                  **kw)
+    return SyntheticLMData(cfg, shape.global_batch, shape.seq_len, seed,
+                           split=split)
 
 
 class Prefetcher:
-    """Double-buffered background prefetch of batch_at(step) results."""
+    """Double-buffered background prefetch of batch_at(step) results.
+
+    Failure contract: if ``batch_at`` or ``transform`` raises, the
+    exception is captured and re-raised from the *consumer's* ``next()``
+    call (the daemon never dies silently, so ``__next__`` can't block
+    forever). ``close()`` is race-free against a concurrently blocked
+    ``next()``: consumers poll with a timeout and observe the closed
+    flag instead of parking indefinitely on ``Queue.get()``.
+    """
+
+    _POLL_S = 0.1
 
     def __init__(self, source, start_step: int = 0, depth: int = 2,
                  transform=None):
@@ -105,35 +146,55 @@ class Prefetcher:
         self.transform = transform
         self._q: "queue.Queue" = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
+        self._error: Optional[BaseException] = None
         self._step = start_step
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
 
     def _worker(self):
         step = self._step
-        while not self._stop.is_set():
-            batch = self.source.batch_at(step)
-            if self.transform is not None:
-                batch = self.transform(batch)
+        try:
             while not self._stop.is_set():
-                try:
-                    self._q.put((step, batch), timeout=0.1)
-                    break
-                except queue.Full:
-                    continue
-            step += 1
+                batch = self.source.batch_at(step)
+                if self.transform is not None:
+                    batch = self.transform(batch)
+                while not self._stop.is_set():
+                    try:
+                        self._q.put((step, batch), timeout=self._POLL_S)
+                        break
+                    except queue.Full:
+                        continue
+                step += 1
+        except BaseException as e:  # re-raised from __next__
+            self._error = e
 
     def __iter__(self) -> Iterator:
         return self
 
     def __next__(self):
-        return self._q.get()
+        while True:
+            try:
+                return self._q.get(timeout=self._POLL_S)
+            except queue.Empty:
+                if self._error is not None:
+                    err = self._error
+                    raise err
+                if self._stop.is_set():
+                    raise StopIteration
+                # daemon alive and healthy: keep waiting
 
     def close(self):
-        self._stop.set()
+        self._stop.set()  # wakes blocked consumers (-> StopIteration)
+        # drain so a producer blocked on a full queue can observe _stop
+        deadline = time.monotonic() + 2.0
+        while self._thread.is_alive() and time.monotonic() < deadline:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                time.sleep(0.01)
+        self._thread.join(timeout=2)
         try:
             while True:
                 self._q.get_nowait()
         except queue.Empty:
             pass
-        self._thread.join(timeout=2)

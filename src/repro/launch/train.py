@@ -35,8 +35,14 @@ from repro.distributed.sharding import make_rules, tree_shardings
 from repro.models import build_model, init_model_state
 from repro.models.common import unbox
 from repro.optim import make_optimizer
-from repro.training import LoopConfig, run_training
+from repro.training import (
+    LoopConfig,
+    Trainer,
+    TrainerConfig,
+    run_training,
+)
 from repro.training.step import (
+    finalize_worker_bn_stats,
     make_dp_shardmap_train_step,
     make_eval_step,
     make_train_step,
@@ -50,8 +56,15 @@ def build_train_setup(cfg, *, global_batch: int, seq_len: int,
                       seed: int = 0, use_fused_kernel: bool = False,
                       sync_bn: bool = False, compression: str = "bf16",
                       bucket_bytes: int = 64 * 1024 * 1024,
-                      error_feedback: bool = False):
-    """Returns (state, train_step, data, put_batch, state_shardings)."""
+                      error_feedback: bool = False,
+                      data_noise: Optional[float] = None):
+    """Returns (model, state, train_step, data, put_batch,
+    state_shardings).
+
+    ``data_noise``: difficulty of the synthetic image task (None = the
+    pipeline default); the recipe/ablation proxies raise it so training
+    is still in progress at the schedule-transition epochs.
+    """
     shape = ShapeConfig("train", seq_len, global_batch, "train")
     parallel = ParallelConfig(
         dp_axes=("data",), tp_axis="model" if mesh is not None else None,
@@ -99,16 +112,16 @@ def build_train_setup(cfg, *, global_batch: int, seq_len: int,
     put_batch = None
     if mesh is not None:
         rules = make_rules(cfg, mesh, parallel)
+        batch_sharding = NamedSharding(mesh, P(parallel.dp_axes))
+
+        def put_batch(batch):
+            return {k: jax.device_put(v, batch_sharding if
+                                      np.ndim(v) else None)
+                    for k, v in batch.items()}
+
         if dp_mode == "shardmap":
             step = make_dp_shardmap_train_step(model, optimizer, train_cfg,
                                                mesh, parallel.dp_axes)
-            batch_sharding = NamedSharding(mesh, P(parallel.dp_axes))
-
-            def put_batch(batch):
-                return {k: jax.device_put(v, batch_sharding if
-                                          np.ndim(v) else None)
-                        for k, v in batch.items()}
-
             train_step = jax.jit(step, donate_argnums=(0,))
         else:
             p_shard = tree_shardings(axes, mesh, rules)
@@ -121,27 +134,61 @@ def build_train_setup(cfg, *, global_batch: int, seq_len: int,
             }
             state = jax.device_put(state, state_shardings)
             step = make_train_step(model, optimizer, train_cfg, mesh, rules)
-            batch_sharding = NamedSharding(mesh, P(parallel.dp_axes))
-
-            def put_batch(batch):
-                return {k: jax.device_put(v, batch_sharding if
-                                          np.ndim(v) else None)
-                        for k, v in batch.items()}
-
             train_step = jax.jit(step, donate_argnums=(0,))
     else:
         step = make_train_step(model, optimizer, train_cfg)
         train_step = jax.jit(step, donate_argnums=(0,))
 
-    data = make_data(cfg, shape, seed=seed)
+    data = make_data(cfg, shape, seed=seed, noise=data_noise)
     return model, state, train_step, data, put_batch, state_shardings
+
+
+def build_eval_setup(model, cfg, *, global_batch: int, seq_len: int,
+                     dp_mode: str = "gspmd", mesh=None, seed: int = 0,
+                     data_noise: Optional[float] = None):
+    """Validation pieces for ``Trainer``: (eval_step, val_data, finalize).
+
+    The eval step is one plain-jit program for both execution modes
+    (DESIGN.md §7): under GSPMD the model_state statistics are already
+    global, under shard_map DP ``finalize_worker_bn_stats`` performs the
+    paper's pre-validation all-reduce first, and either way the step
+    sees worker-free statistics. ``val_data`` is the deterministic
+    held-out split (seed-space disjoint from train by construction).
+    """
+    shape = ShapeConfig("val", seq_len, global_batch, "train")
+    val_data = make_data(cfg, shape, seed=seed, split="val",
+                         noise=data_noise)
+    rules = None
+    eval_mesh = None
+    finalize = None
+    if mesh is not None:
+        if dp_mode == "shardmap":
+            # params/stats replicated after finalize: plain jit evals
+            finalize = jax.jit(finalize_worker_bn_stats)
+        else:
+            # GSPMD: keep the activation-sharding hints so validation
+            # stays partitioned like training (TP models especially)
+            parallel = ParallelConfig(dp_axes=("data",), tp_axis="model",
+                                      zero_1=False)
+            rules = make_rules(cfg, mesh, parallel)
+            eval_mesh = mesh
+    eval_step = jax.jit(make_eval_step(model, mesh=eval_mesh, rules=rules))
+    return eval_step, val_data, finalize
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="resnet50")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--steps", type=int, default=50,
+                    help="legacy step-driven run (no validation); "
+                         "ignored when --epochs is given")
+    ap.add_argument("--epochs", type=int, default=None,
+                    help="epoch-driven run: train "
+                         "epochs*steps-per-epoch steps with held-out "
+                         "validation at epoch boundaries (DESIGN.md §7)")
+    ap.add_argument("--eval-every-epochs", type=int, default=1)
+    ap.add_argument("--val-batches", type=int, default=4)
     ap.add_argument("--global-batch", type=int, default=32)
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--optimizer", default="rmsprop_warmup",
@@ -173,6 +220,9 @@ def main():
     if args.mesh:
         d, m = (int(x) for x in args.mesh.split("x"))
         mesh = jax.make_mesh((d, m), ("data", "model"))
+    elif args.dp_mode == "shardmap":
+        # explicit DP needs a mesh; default to pure-DP over all devices
+        mesh = jax.make_mesh((jax.device_count(), 1), ("data", "model"))
 
     opt_cfg = OptimizerConfig(kind=args.optimizer, schedule=args.schedule)
     model, state, train_step, data, put_batch, shardings = \
@@ -185,15 +235,54 @@ def main():
             bucket_bytes=args.bucket_mib * 1024 * 1024,
             error_feedback=args.error_feedback)
 
+    metadata = {"arch": args.arch, "optimizer": args.optimizer}
+    t0 = time.time()
+    if args.epochs is not None:
+        # ---- epoch-driven train/eval (the paper's actual protocol) ----
+        eval_step, val_data, finalize = build_eval_setup(
+            model, cfg, global_batch=args.global_batch,
+            seq_len=args.seq_len, dp_mode=args.dp_mode, mesh=mesh,
+            seed=args.seed)
+        total_steps = args.epochs * args.steps_per_epoch
+        tcfg = TrainerConfig(
+            epochs=args.epochs, steps_per_epoch=args.steps_per_epoch,
+            eval_every_epochs=args.eval_every_epochs,
+            val_batches=args.val_batches,
+            checkpoint_every=args.ckpt_every if args.ckpt_dir else 0,
+            checkpoint_dir=args.ckpt_dir,
+            log_every=max(1, total_steps // 20))
+        result = Trainer(train_step, state, data, tcfg,
+                         eval_step=eval_step, val_data=val_data,
+                         finalize_state=finalize, put_batch=put_batch,
+                         metadata=metadata,
+                         state_shardings=shardings).run()
+        wall = time.time() - t0
+        print(f"trained {args.epochs} epochs x {args.steps_per_epoch} "
+              f"steps in {wall:.1f}s (dp_mode={args.dp_mode}, "
+              f"resumed_from={result.resumed_from})")
+        for r in result.epoch_history:
+            top1 = r.get("top1")  # LM archs eval loss only
+            t = f"val top1 {top1:.4f} " if top1 is not None else ""
+            print(f"  epoch {r['epoch']:3d} {t}"
+                  f"val loss {r['loss']:.4f}")
+        if result.best:
+            print(f"best: top1 {result.best['top1']:.4f} at epoch "
+                  f"{result.best['epoch']}")
+        if args.log_json:
+            with open(args.log_json, "w") as f:
+                json.dump({"history": result.history,
+                           "epoch_history": result.epoch_history,
+                           "best": result.best, "wall": wall,
+                           "resumed_from": result.resumed_from}, f)
+        return
+
+    # ---- legacy step-driven run (no validation) ----
     loop_cfg = LoopConfig(total_steps=args.steps,
                           checkpoint_every=args.ckpt_every,
                           checkpoint_dir=args.ckpt_dir,
                           log_every=max(1, args.steps // 20))
-    t0 = time.time()
     result = run_training(train_step, state, data, loop_cfg,
-                          put_batch=put_batch,
-                          metadata={"arch": args.arch,
-                                    "optimizer": args.optimizer},
+                          put_batch=put_batch, metadata=metadata,
                           state_shardings=shardings)
     wall = time.time() - t0
     print(f"trained {args.steps} steps in {wall:.1f}s "

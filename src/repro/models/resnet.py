@@ -167,10 +167,14 @@ class ResNet50:
         return loss, (new_state, {"loss": loss, "accuracy": acc})
 
     def eval_fn(self, p, model_state, batch):
+        """Validation metrics with frozen (finalized) BN statistics."""
         logits, _ = self.apply(p, model_state, batch["images"], train=False)
         labels = batch["labels"]
-        return jnp.mean((jnp.argmax(logits, -1) == labels).astype(
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+        top1 = jnp.mean((jnp.argmax(logits, -1) == labels).astype(
             jnp.float32))
+        return {"top1": top1, "loss": jnp.mean(nll)}
 
 
 def _stat(c: int) -> Params:

@@ -13,6 +13,13 @@ chunks carries the state and emits per-chunk outputs, so peak memory is
 O(B * chunk^2 * H) regardless of sequence length.
 
 All math in fp32 for stability; inputs/outputs in the compute dtype.
+Accumulation is tightened two ways so large chunks (256+) stay within
+~1e-4 of the sequential oracle: the within-chunk log-decay prefix sum is
+carried in doubled fp32 (Kahan compensation, so differences of nearby
+large cumulative decays don't cancel catastrophically), and the two long
+reductions over the chunk axis (scores @ V and the K^T V state update)
+are split into sub-blocks summed pairwise instead of one flat
+``chunk``-term accumulation.
 """
 from __future__ import annotations
 
@@ -22,6 +29,40 @@ import jax
 import jax.numpy as jnp
 
 NEG = -1e30
+
+_SUB = 64  # pairwise-accumulation sub-block for the chunk-axis reductions
+
+
+def _kahan_cumsum(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Compensated inclusive cumsum over axis 1.
+
+    Returns ``(total, comp)`` with the running sum represented as the
+    doubled-fp32 value ``total - comp``; using both halves when forming
+    differences keeps the within-chunk decay exponents accurate even
+    when the absolute cumulative log decay is large.
+    """
+
+    def step(carry, xi):
+        total, comp = carry
+        y = xi - comp
+        t = total + y
+        comp = (t - total) - y
+        return (t, comp), (t, comp)
+
+    zero = jnp.zeros_like(x[:, 0])
+    _, (total, comp) = jax.lax.scan(step, (zero, zero),
+                                    jnp.moveaxis(x, 1, 0))
+    return jnp.moveaxis(total, 0, 1), jnp.moveaxis(comp, 0, 1)
+
+
+def _pairwise_sum(parts: jax.Array) -> jax.Array:
+    """Tree-sum over the leading axis (error ~log n instead of ~n)."""
+    while parts.shape[0] > 1:
+        m = parts.shape[0] // 2
+        head = parts[:m] + parts[m:2 * m]
+        parts = (head if parts.shape[0] % 2 == 0
+                 else jnp.concatenate([head, parts[2 * m:]], axis=0))
+    return parts[0]
 
 
 def chunked_gla(
@@ -52,22 +93,34 @@ def chunked_gla(
     s0 = (jnp.zeros((b, h, dv, dk), f32) if initial_state is None
           else initial_state.astype(f32))
 
+    sub = _SUB if chunk % _SUB == 0 else chunk
+    nsub = chunk // sub
+
     def step(state, inp):
         qc, kc, vc, lc = inp  # (b, chunk, ...)
-        lcum = jnp.cumsum(lc, axis=1)  # inclusive within-chunk cum log decay
-        # intra-chunk: weight(t,τ) = exp(l_t - l_τ) for τ <= t
-        rel = lcum[:, :, None, :] - lcum[:, None, :, :]  # (b, t, τ, h)
+        # inclusive within-chunk cum log decay, doubled fp32 (hi, comp)
+        lhi, lco = _kahan_cumsum(lc)
+        lcum = lhi - lco
+        # intra-chunk: weight(t,τ) = exp(l_t - l_τ) for τ <= t. Form the
+        # difference from both Kahan halves: the hi parts cancel exactly
+        # for nearby positions, the comp parts restore the low bits.
+        rel = (lhi[:, :, None, :] - lhi[:, None, :, :]) \
+            - (lco[:, :, None, :] - lco[:, None, :, :])  # (b, t, τ, h)
         rel = jnp.where(tri[None, :, :, None], rel, NEG)
         decay = jnp.exp(rel)
         scores = jnp.einsum("bthd,bshd->btsh", qc, kc)
-        y = jnp.einsum("btsh,bshv->bthv", scores * decay, vc)
+        # Σ_τ (scores·decay) v_τ, accumulated pairwise over sub-blocks
+        w = (scores * decay).reshape(b, chunk, nsub, sub, h)
+        vt = vc.reshape(b, nsub, sub, h, dv)
+        y = _pairwise_sum(jnp.einsum("btnsh,bnshv->nbthv", w, vt))
         # inter-chunk: y += exp(l_t) * S_prev q_t
         qd = qc * jnp.exp(lcum)[..., None]
         y = y + jnp.einsum("bthd,bhvd->bthv", qd, state)
         # state update: S = exp(l_Q) S_prev + Σ_τ exp(l_Q - l_τ) v_τ k_τ^T
         tail = jnp.exp(lcum[:, -1:, :] - lcum)  # (b, chunk, h)
-        new_state = state * jnp.exp(lcum[:, -1, :])[..., None, None] \
-            + jnp.einsum("bthv,bthd->bhvd", vc, kc * tail[..., None])
+        kt = (kc * tail[..., None]).reshape(b, nsub, sub, h, dk)
+        outer = _pairwise_sum(jnp.einsum("bnshv,bnshd->nbhvd", vt, kt))
+        new_state = state * jnp.exp(lcum[:, -1, :])[..., None, None] + outer
         return new_state, y
 
     final_state, ys = jax.lax.scan(step, s0, (qs, ks, vs, ls))

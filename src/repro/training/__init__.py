@@ -1,4 +1,11 @@
-from repro.training.loop import LoopConfig, LoopResult, run_training  # noqa: F401
+from repro.training.loop import (  # noqa: F401
+    LoopConfig,
+    LoopResult,
+    Trainer,
+    TrainerConfig,
+    TrainResult,
+    run_training,
+)
 from repro.training.specs import cache_specs, input_specs, param_specs  # noqa: F401
 from repro.training.step import (  # noqa: F401
     make_decode_step,

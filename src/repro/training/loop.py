@@ -1,23 +1,248 @@
-"""Training loop: jitted step + prefetching data + async checkpointing +
+"""Training loop: epoch-aware trainer interleaving jitted train steps
+with jitted validation, plus prefetching data, async checkpointing and
 fault-tolerance hooks (resume, straggler deadline accounting).
 
-The loop is deliberately thin — all heavy lifting is in the jitted step —
-so at 1000+ nodes the host-side critical path is just `device_put` of the
-next batch (prefetched) and dispatch.
+The paper's headline claim is a *validation* number, and its §2 BN
+technique only exists at validation time: the last-minibatch BN
+statistics are all-reduced across workers right before each eval
+(DESIGN.md §7). ``Trainer`` owns that interleaving for both execution
+modes — GSPMD (stats already global; ``finalize_state`` is identity)
+and shard_map DP (``finalize_worker_bn_stats`` merges the per-worker
+statistics). It also owns per-epoch top-1/loss history, best-checkpoint
+retention, and eval-state resume.
+
+The hot loop stays deliberately thin — all heavy lifting is in the
+jitted steps — so at 1000+ nodes the host-side critical path is just
+`device_put` of the next batch (prefetched) and dispatch. Validation
+runs only at epoch boundaries, off the steady-state path.
+
+``run_training`` remains as the legacy step-driven API (one epoch, no
+eval) layered on the same loop.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import numpy as np
 
 from repro.checkpoint import AsyncCheckpointer, list_checkpoints, restore
+from repro.checkpoint.checkpointer import BEST_DIR
 from repro.data.synthetic import Prefetcher
 
 PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    epochs: int = 1
+    steps_per_epoch: int = 100
+    # validation cadence: every N epochs (0 disables eval entirely);
+    # the final epoch is always evaluated when eval is enabled.
+    eval_every_epochs: int = 1
+    val_batches: int = 4
+    checkpoint_every: int = 50  # steps; 0 => final checkpoint only
+    checkpoint_dir: Optional[str] = None
+    keep_checkpoints: int = 3
+    keep_best: bool = True  # retain best-top-1 state outside the GC window
+    log_every: int = 10
+    # straggler mitigation: if a step exceeds deadline_factor x the median
+    # step time, it is logged as a straggler event; at cluster scale the
+    # launcher uses this to trigger backup-step execution (DESIGN.md §5).
+    deadline_factor: float = 3.0
+
+
+@dataclasses.dataclass
+class TrainResult:
+    state: PyTree
+    history: list  # per-step train log ({"step", "loss", "time"})
+    epoch_history: list  # per-eval {"epoch", "step", "top1", "loss", ...}
+    straggler_events: list
+    resumed_from: Optional[int]
+    best: Optional[Dict]  # {"top1", "epoch", "step"} (eval enabled only)
+
+
+class Trainer:
+    """Epoch-driven train/eval loop (DESIGN.md §7).
+
+    ``train_step``: jitted (state, batch) -> (state, metrics).
+    ``eval_step``: jitted (params, model_state, batch) -> metrics dict
+        (must contain ``top1`` for best-checkpoint tracking; see
+        ``training.step.make_eval_step``).
+    ``finalize_state``: model_state -> eval model_state, the paper's
+        pre-validation BN all-reduce. None = identity (GSPMD, where the
+        partitioner already made the statistics global); shard_map DP
+        passes ``finalize_worker_bn_stats``.
+    ``val_data``: held-out pipeline with ``batch_at(i)`` disjoint from
+        the training split (``data.synthetic`` split contract); eval
+        always replays batches ``0..val_batches-1`` so every epoch is
+        scored on the same held-out set.
+    """
+
+    def __init__(self, train_step: Callable, state: PyTree, train_data,
+                 cfg: TrainerConfig, *, eval_step: Optional[Callable] = None,
+                 val_data=None, finalize_state: Optional[Callable] = None,
+                 put_batch: Optional[Callable] = None,
+                 metadata: Optional[Dict] = None,
+                 state_shardings: Optional[PyTree] = None):
+        if cfg.eval_every_epochs and eval_step is not None \
+                and val_data is None:
+            raise ValueError("eval enabled but no val_data given")
+        self.train_step = train_step
+        self.state = state
+        self.train_data = train_data
+        self.cfg = cfg
+        self.eval_step = eval_step
+        self.val_data = val_data
+        self.finalize_state = finalize_state
+        self.put_batch = put_batch
+        self.metadata = dict(metadata or {})
+        self.state_shardings = state_shardings
+        self._val_batches = None  # built once: the held-out set is fixed
+
+    # ------------------------------------------------------------- eval
+    def _eval_enabled(self) -> bool:
+        return (self.eval_step is not None
+                and self.cfg.eval_every_epochs > 0
+                and self.cfg.val_batches > 0)
+
+    def evaluate(self, state: PyTree, epoch: int, step: int) -> Dict:
+        """One validation pass over the held-out set. Applies the
+        pre-validation BN finalize, then averages the jitted eval
+        metrics over ``val_batches`` fixed batches."""
+        mstate = state["model_state"]
+        if self.finalize_state is not None:
+            mstate = self.finalize_state(mstate)
+        if self._val_batches is None:
+            batches = [self.val_data.batch_at(i)
+                       for i in range(self.cfg.val_batches)]
+            if self.put_batch is not None:
+                batches = [self.put_batch(b) for b in batches]
+            self._val_batches = batches
+        sums: Dict[str, float] = {}
+        for batch in self._val_batches:
+            metrics = self.eval_step(state["params"], mstate, batch)
+            for k, v in metrics.items():
+                sums[k] = sums.get(k, 0.0) + float(jax.device_get(v))
+        rec = {k: v / self.cfg.val_batches for k, v in sums.items()}
+        rec.update(epoch=epoch, step=step)
+        return rec
+
+    # -------------------------------------------------------------- run
+    def _ckpt_metadata(self, eval_history: List[Dict],
+                       best: Optional[Dict]) -> Dict:
+        # snapshot, not reference: AsyncCheckpointer json.dumps metadata
+        # on a background thread while the loop keeps appending records
+        meta = dict(self.metadata)
+        meta["eval_history"] = [dict(r) for r in eval_history]
+        if best is not None:
+            meta["best"] = dict(best)
+        return meta
+
+    def run(self) -> TrainResult:
+        cfg = self.cfg
+        total_steps = cfg.epochs * cfg.steps_per_epoch
+        ckpt = (AsyncCheckpointer(cfg.checkpoint_dir, cfg.keep_checkpoints)
+                if cfg.checkpoint_dir else None)
+        # best-top-1 retention, off the hot path: snapshot on this
+        # thread, serialize off-thread; keep=1 GC leaves exactly one
+        # best checkpoint, outside the main rotating window
+        best_ckpt = (AsyncCheckpointer(
+            os.path.join(cfg.checkpoint_dir, BEST_DIR), keep=1)
+            if ckpt and self._eval_enabled() and cfg.keep_best else None)
+
+        # ---- resume (fault tolerance: newest valid manifest), restoring
+        # the eval trajectory and best-so-far alongside the arrays ----
+        state = self.state
+        start_step = 0
+        resumed_from = None
+        eval_history: List[Dict] = []
+        best: Optional[Dict] = None
+        if ckpt and list_checkpoints(cfg.checkpoint_dir):
+            state, manifest = restore(cfg.checkpoint_dir, target=state,
+                                      shardings=self.state_shardings)
+            start_step = manifest["step"]
+            resumed_from = start_step
+            eval_history = list(manifest["metadata"].get(
+                "eval_history", []))
+            best = manifest["metadata"].get("best")
+
+        prefetch = Prefetcher(self.train_data, start_step=start_step,
+                              transform=self.put_batch)
+        history = []
+        straggler_events = []
+        step_times = []
+        last_saved = start_step if resumed_from is not None else -1
+        try:
+            for step in range(start_step, total_steps):
+                t0 = time.perf_counter()  # includes data wait: that's what
+                got_step, batch = next(prefetch)  # a straggling host looks like
+                assert got_step == step, (got_step, step)
+                state, metrics = self.train_step(state, batch)
+                loss = metrics.get("loss")
+                if loss is not None:
+                    loss = float(jax.device_get(loss))  # sync point
+                dt = time.perf_counter() - t0
+                step_times.append(dt)
+                med = float(np.median(step_times[-50:]))
+                if len(step_times) > 5 and dt > cfg.deadline_factor * med:
+                    straggler_events.append({"step": step, "time": dt,
+                                             "median": med})
+                if step % cfg.log_every == 0 or step == total_steps - 1:
+                    history.append({"step": step, "loss": loss, "time": dt})
+
+                done = step + 1
+                # ---- epoch boundary: the paper's eval path ----
+                if self._eval_enabled() and done % cfg.steps_per_epoch == 0:
+                    epoch = done // cfg.steps_per_epoch
+                    if (epoch % cfg.eval_every_epochs == 0
+                            or epoch == cfg.epochs):
+                        rec = self.evaluate(state, epoch, done)
+                        eval_history.append(rec)
+                        top1 = rec.get("top1")
+                        if top1 is not None and (
+                                best is None or top1 > best["top1"]):
+                            best = {"top1": top1, "epoch": epoch,
+                                    "step": done}
+                            if best_ckpt:
+                                best_ckpt.save(
+                                    done, state,
+                                    metadata=self._ckpt_metadata(
+                                        eval_history, best))
+                # eval before checkpoint so a resume replays from a
+                # manifest that already contains this epoch's record
+                if ckpt and cfg.checkpoint_every \
+                        and done % cfg.checkpoint_every == 0:
+                    ckpt.save(done, state,
+                              metadata=self._ckpt_metadata(eval_history,
+                                                           best))
+                    last_saved = done
+            # final checkpoint — skipped when the periodic save above
+            # already wrote this exact step (previously the same step was
+            # saved async then immediately re-saved blocking, rmtree-ing
+            # the fresh directory)
+            if ckpt and last_saved != total_steps:
+                ckpt.save(total_steps, state,
+                          metadata=self._ckpt_metadata(eval_history, best),
+                          block=True)
+        finally:
+            prefetch.close()
+            if best_ckpt:
+                best_ckpt.wait()
+            if ckpt:
+                ckpt.wait()
+        return TrainResult(state=state, history=history,
+                           epoch_history=eval_history,
+                           straggler_events=straggler_events,
+                           resumed_from=resumed_from, best=best)
+
+
+# ---------------------------------------------------------------------------
+# Legacy step-driven API (pre-epoch callers: examples, elastic tests)
+# ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass
@@ -27,9 +252,6 @@ class LoopConfig:
     checkpoint_dir: Optional[str] = None
     keep_checkpoints: int = 3
     log_every: int = 10
-    # straggler mitigation: if a step exceeds deadline_factor x the median
-    # step time, it is logged as a straggler event; at cluster scale the
-    # launcher uses this to trigger backup-step execution (DESIGN.md §5).
     deadline_factor: float = 3.0
 
 
@@ -50,50 +272,18 @@ def run_training(
     metadata: Optional[Dict] = None,
     state_shardings: Optional[PyTree] = None,
 ) -> LoopResult:
-    ckpt = (AsyncCheckpointer(loop_cfg.checkpoint_dir,
-                              loop_cfg.keep_checkpoints)
-            if loop_cfg.checkpoint_dir else None)
-
-    # ---- resume (fault tolerance: restart from newest valid manifest) ----
-    start_step = 0
-    resumed_from = None
-    if ckpt and list_checkpoints(loop_cfg.checkpoint_dir):
-        state, manifest = restore(loop_cfg.checkpoint_dir, target=state,
-                                  shardings=state_shardings)
-        start_step = manifest["step"]
-        resumed_from = start_step
-
-    prefetch = Prefetcher(data, start_step=start_step, transform=put_batch)
-    history = []
-    straggler_events = []
-    step_times = []
-    try:
-        for step in range(start_step, loop_cfg.total_steps):
-            t0 = time.perf_counter()  # includes data wait: that's what a
-            got_step, batch = next(prefetch)  # straggling host looks like
-            assert got_step == step, (got_step, step)
-            state, metrics = train_step(state, batch)
-            loss = metrics.get("loss")
-            if loss is not None:
-                loss = float(jax.device_get(loss))  # sync point
-            dt = time.perf_counter() - t0
-            step_times.append(dt)
-            med = float(np.median(step_times[-50:]))
-            if len(step_times) > 5 and dt > loop_cfg.deadline_factor * med:
-                straggler_events.append({"step": step, "time": dt,
-                                         "median": med})
-            if step % loop_cfg.log_every == 0 or step == \
-                    loop_cfg.total_steps - 1:
-                history.append({"step": step, "loss": loss, "time": dt})
-            if ckpt and (step + 1) % loop_cfg.checkpoint_every == 0:
-                ckpt.save(step + 1, state, metadata=metadata)
-        if ckpt:
-            ckpt.save(loop_cfg.total_steps, state, metadata=metadata,
-                      block=True)
-    finally:
-        prefetch.close()
-        if ckpt:
-            ckpt.wait()
-    return LoopResult(state=state, history=history,
-                      straggler_events=straggler_events,
-                      resumed_from=resumed_from)
+    """Step-counter training without validation: one ``Trainer`` epoch."""
+    cfg = TrainerConfig(
+        epochs=1, steps_per_epoch=loop_cfg.total_steps,
+        eval_every_epochs=0, val_batches=0,
+        checkpoint_every=loop_cfg.checkpoint_every,
+        checkpoint_dir=loop_cfg.checkpoint_dir,
+        keep_checkpoints=loop_cfg.keep_checkpoints,
+        log_every=loop_cfg.log_every,
+        deadline_factor=loop_cfg.deadline_factor)
+    result = Trainer(train_step, state, data, cfg, put_batch=put_batch,
+                     metadata=metadata,
+                     state_shardings=state_shardings).run()
+    return LoopResult(state=result.state, history=result.history,
+                      straggler_events=result.straggler_events,
+                      resumed_from=result.resumed_from)

@@ -118,7 +118,13 @@ def make_train_step(model, optimizer: Optimizer, train_cfg: TrainConfig,
                     state["params"])
                 (grads, new_mstate), metrics_seq = jax.lax.scan(
                     acc_step, (g0, state["model_state"]), mb)
-                metrics = jax.tree.map(lambda m: m[-1], metrics_seq)
+                # average across microbatches (equal sizes, mean losses)
+                # so the logged loss is the full-batch loss — reporting
+                # only the last microbatch would make the logged curve
+                # depend on the accumulation factor.
+                metrics = jax.tree.map(
+                    lambda m: jnp.mean(m.astype(jnp.float32), axis=0),
+                    metrics_seq)
 
             grads = simulate_wire_cast(grads, wire)
             if grad_constraint is not None:
@@ -135,17 +141,29 @@ def make_train_step(model, optimizer: Optimizer, train_cfg: TrainConfig,
     return train_step
 
 
-def make_eval_step(model, train_cfg: TrainConfig,
+def make_eval_step(model, train_cfg: Optional[TrainConfig] = None,
                    mesh: Optional[Mesh] = None,
                    rules: Optional[Dict] = None):
-    def eval_step(params, model_state, batch):
+    """Validation step: (params, model_state, batch) -> metrics dict.
+
+    ``model_state`` must already be finalized (paper §2: BN statistics
+    all-reduced across workers before validation — identity under GSPMD,
+    ``finalize_worker_bn_stats`` under shard_map DP; DESIGN.md §7). The
+    step itself is mode-agnostic: a plain jit over (possibly sharded)
+    inputs, so the same compiled program serves both execution modes.
+    """
+    del train_cfg  # schedules don't enter the eval path
+
+    def eval_step(params, model_state, batch) -> Dict:
         ctx = (activation_sharding(mesh, rules) if mesh is not None
                else contextlib.nullcontext())
         with ctx:
             if hasattr(model, "eval_fn"):
                 return model.eval_fn(params, model_state, batch)
             loss, (_, metrics) = model.loss_fn(params, model_state, batch)
-            return loss
+            out = {k: v for k, v in metrics.items() if jnp.ndim(v) == 0}
+            out["loss"] = loss
+            return out
 
     return eval_step
 
@@ -300,7 +318,12 @@ def replicate_model_state(state: PyTree, n_workers: int) -> PyTree:
 
 
 def finalize_worker_bn_stats(state: PyTree) -> PyTree:
-    """Paper §2: average the per-worker last-minibatch BN statistics
+    """Paper §2: all-reduce the per-worker last-minibatch BN statistics
     before validation (the all-reduce happens when XLA gathers the
-    worker-sharded stats for the mean)."""
-    return jax.tree.map(lambda x: jnp.mean(x, axis=0), state)
+    worker-sharded stats for the mean). Variances are combined
+    moment-correctly (via E[x^2]) so the result equals the global-batch
+    statistics — see ``core.batchnorm.combine_worker_bn_stats`` and
+    DESIGN.md §7."""
+    from repro.core.batchnorm import combine_worker_bn_stats
+
+    return combine_worker_bn_stats(state)

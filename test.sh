@@ -2,6 +2,9 @@
 # Tier-1 test entrypoint (SNIPPETS.md idiom): virtual 8-device host
 # platform + src on PYTHONPATH. Multi-device tests additionally spawn
 # subprocesses with their own XLA_FLAGS, so they pass either way.
+# Collects the whole tests/ tree — including the epoch-driven trainer /
+# validation suite (tests/test_trainer.py) and the loop/prefetcher/
+# checkpoint regression tests — as tier-1.
 set -euo pipefail
 cd "$(dirname "$0")"
 export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"

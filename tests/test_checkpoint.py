@@ -59,6 +59,43 @@ def test_async_checkpointer_gc_and_wait(tmp_path, key):
     assert list_checkpoints(str(tmp_path)) == [20, 30]
 
 
+def test_restore_strict_shardings_tree(tmp_path, key):
+    """Regression: a shardings tree with fewer leaves than the target
+    used to be zip-truncated, silently device_putting the tail of the
+    state unsharded. It must error instead."""
+    import pytest
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    state = {"a": jnp.zeros((3,)), "b": jnp.zeros((3,))}
+    save(str(tmp_path), 1, state)
+    mesh = jax.make_mesh((1,), ("data",))
+    short = {"a": NamedSharding(mesh, P())}  # missing "b"
+    with pytest.raises(ValueError, match="shardings tree"):
+        restore(str(tmp_path), target=state, shardings=short)
+    # congruent shardings still restore fine
+    full = {"a": NamedSharding(mesh, P()), "b": NamedSharding(mesh, P())}
+    got, _ = restore(str(tmp_path), target=state, shardings=full)
+    assert jax.tree.leaves(got)[0].sharding == full["a"]
+
+
+def test_save_best_single_retained(tmp_path, key):
+    from repro.checkpoint import restore_best, save_best
+    state = _state(key)
+    save_best(str(tmp_path), 5, state, metadata={"top1": 0.4})
+    save_best(str(tmp_path), 9, _state(key, scale=2.0),
+              metadata={"top1": 0.7})
+    got, manifest = restore_best(str(tmp_path), target=state)
+    assert manifest["step"] == 9
+    assert manifest["metadata"]["top1"] == 0.7
+    assert list_checkpoints(str(tmp_path / "best")) == [9]
+    # best lives outside the rotating window: untouched by main-dir GC
+    ck = AsyncCheckpointer(str(tmp_path), keep=1)
+    for step in (10, 20):
+        ck.save(step, state)
+    ck.wait()
+    assert list_checkpoints(str(tmp_path)) == [20]
+    assert list_checkpoints(str(tmp_path / "best")) == [9]
+
+
 def test_async_snapshot_isolated_from_donation(tmp_path, key):
     """The snapshot must capture values at call time even if the caller
     mutates/replaces buffers right after (donation semantics)."""

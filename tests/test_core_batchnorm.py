@@ -6,6 +6,7 @@ import numpy as np
 from repro.core.batchnorm import (
     bn_apply_stats,
     bn_batch_stats,
+    combine_worker_bn_stats,
     finalize_bn_stats,
     merge_bn_stats,
 )
@@ -41,6 +42,29 @@ def test_merge_bn_stats_host_side(key):
     merged = merge_bn_stats(states)
     np.testing.assert_allclose(
         merged["m"], sum(np.asarray(s["m"]) for s in states) / 3, rtol=1e-6)
+
+
+def test_combine_worker_stats_reconstructs_global(key):
+    """The pre-validation all-reduce must yield the statistics of the
+    *concatenated* global minibatch, not a naive average of variances:
+    E[x^2] is reconstructed per worker before combining (paper §2,
+    DESIGN.md §7)."""
+    x = jax.random.normal(key, (8, 4, 6, 6, 16)) * 2.0 + 1.0  # 8 workers
+    per_worker = [bn_batch_stats(x[w]) for w in range(8)]
+    state = {"bn": {
+        "mean": jnp.stack([m for m, _ in per_worker]),
+        "var": jnp.stack([v for _, v in per_worker]),
+        "count": jnp.ones((8,)),
+    }}
+    combined = combine_worker_bn_stats(state)
+    gmean, gvar = bn_batch_stats(x.reshape(-1, 6, 6, 16))
+    np.testing.assert_allclose(combined["bn"]["mean"], gmean, rtol=1e-5)
+    np.testing.assert_allclose(combined["bn"]["var"], gvar,
+                               rtol=1e-4, atol=1e-6)
+    # naive variance averaging would lose the spread of worker means
+    naive = np.asarray(state["bn"]["var"]).mean(0)
+    assert np.abs(naive - np.asarray(gvar)).max() > 1e-3
+    np.testing.assert_allclose(combined["bn"]["count"], 1.0)
 
 
 def test_no_moving_average_semantics(key):

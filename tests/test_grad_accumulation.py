@@ -48,6 +48,21 @@ def test_microbatched_step_matches_full_batch():
                                    rtol=2e-2, atol=2e-4)
 
 
+def test_microbatch_metrics_are_full_batch_average():
+    """Regression: the accumulation scan used to report only the LAST
+    microbatch's metrics, so the logged loss depended on the microbatch
+    count. Mean-of-equal-microbatch-means == full-batch mean."""
+    cfg, s1, step1 = _setup(microbatches=1)
+    _, s4, step4 = _setup(microbatches=4)
+    batch = _batch(cfg)
+    _, m1 = step1(s1, batch)
+    _, m4 = step4(s4, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(m1["moe_aux"]), float(m4["moe_aux"]),
+                               rtol=1e-4, atol=1e-7)
+
+
 def test_bf16_optimizer_state_trains():
     opt_cfg = OptimizerConfig(state_dtype="bfloat16")
     cfg, state, step = _setup(opt_cfg=opt_cfg)

@@ -1,9 +1,12 @@
-"""Fault tolerance at the loop level: resume, determinism, stragglers."""
+"""Fault tolerance at the loop level: resume, determinism, stragglers,
+prefetcher failure propagation, checkpoint-save dedup."""
+import threading
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import OptimizerConfig, get_config, reduced_config
 from repro.launch.train import build_train_setup
@@ -61,6 +64,94 @@ def test_straggler_event_detection(tmp_path):
     res = run_training(step_fn, state, SlowData(data),
                        LoopConfig(total_steps=20, deadline_factor=3.0))
     assert any(e["step"] == 15 for e in res.straggler_events)
+
+
+def test_prefetcher_propagates_worker_error():
+    """Regression: a raising batch_at used to kill the daemon silently,
+    leaving the consumer blocked forever on Queue.get()."""
+    from repro.data import Prefetcher
+
+    class Bad:
+        def batch_at(self, step):
+            if step >= 3:
+                raise ValueError("boom at step 3")
+            return {"x": np.zeros(2, np.float32)}
+
+    p = Prefetcher(Bad())
+    try:
+        with pytest.raises(ValueError, match="boom at step 3"):
+            for _ in range(10):
+                next(p)
+    finally:
+        p.close()
+
+
+def test_prefetcher_transform_error_propagates():
+    from repro.data import Prefetcher
+
+    class Ok:
+        def batch_at(self, step):
+            return {"x": np.zeros(2, np.float32)}
+
+    def bad_transform(batch):
+        raise RuntimeError("device_put failed")
+
+    p = Prefetcher(Ok(), transform=bad_transform)
+    try:
+        with pytest.raises(RuntimeError, match="device_put failed"):
+            next(p)
+    finally:
+        p.close()
+
+
+def test_prefetcher_close_unblocks_pending_next():
+    """Regression: close() must not race a consumer parked in next()."""
+    from repro.data import Prefetcher
+
+    class Slow:
+        def batch_at(self, step):
+            time.sleep(30.0)  # never yields a batch in test time
+            return {}
+
+    p = Prefetcher(Slow())
+    got = {}
+
+    def consume():
+        try:
+            next(p)
+            got["out"] = "batch"
+        except StopIteration:
+            got["out"] = "stopped"
+
+    t = threading.Thread(target=consume)
+    t.start()
+    time.sleep(0.2)  # consumer is now blocked waiting for a batch
+    p.close()
+    t.join(timeout=5)
+    assert not t.is_alive()
+    assert got["out"] == "stopped"
+
+
+def test_no_duplicate_final_checkpoint_save(tmp_path, monkeypatch):
+    """Regression: when total_steps %% checkpoint_every == 0 the final
+    step was saved async then immediately re-saved blocking (rmtree-ing
+    the fresh directory). Each step must be serialized exactly once."""
+    import repro.checkpoint.checkpointer as cp
+    saved = []
+    real_save = cp.save
+
+    def counting_save(directory, step, state, metadata=None):
+        saved.append(step)
+        return real_save(directory, step, state, metadata)
+
+    monkeypatch.setattr(cp, "save", counting_save)
+    model, state, step_fn, data, _, _ = _setup()
+    run_training(step_fn, state, data,
+                 LoopConfig(total_steps=10, checkpoint_every=5,
+                            checkpoint_dir=str(tmp_path / "ck")))
+    assert sorted(saved) == [5, 10], saved
+    from repro.checkpoint import list_checkpoints
+    assert list_checkpoints(str(tmp_path / "ck")) == [5, 10]
 
 
 def test_data_determinism():
