@@ -6,13 +6,18 @@ host-device mesh and report the HLO-verified collective count, bytes per
 collective, and wire dtype next to the wall-clock numbers.
 
     python benchmarks/comm_bench.py [--devices 8] [--iters 20] \
-        [--archs resnet50,llama3.2-1b] [--full] [--bucket-mib 64]
+        [--archs resnet50,llama3.2-1b] [--full] [--bucket-mib 64] \
+        [--quick] [--out BENCH_comm.json]
+
+``--quick`` is the CI smoke config (ResNet-50 only, few iterations) and
+``--out`` writes the table as JSON so the run leaves an artifact.
 
 By default the LM configs are reduced (a 1.2B-param fp32 gradient tree
 does not fit a CPU host); ResNet-50 runs at full size (25.5M params —
 the paper's own workload). ``--full`` lifts the reduction everywhere.
 """
 import argparse
+import json
 import os
 import time
 
@@ -86,7 +91,14 @@ def main():
     ap.add_argument("--bucket-mib", type=int, default=64)
     ap.add_argument("--full", action="store_true",
                     help="full-size LM configs (needs a lot of host RAM)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke config: ResNet-50 only, 5 iterations")
+    ap.add_argument("--out", default=None,
+                    help="also write the table as JSON (CI artifact)")
     args = ap.parse_args()
+    if args.quick:
+        args.archs = "resnet50"
+        args.iters = min(args.iters, 5)
 
     n_dev = jax.device_count()
     mesh = jax.make_mesh((n_dev,), ("data",))
@@ -125,6 +137,21 @@ def main():
         if len(d) == 2:
             print(f"{name}: bucketed is {d['per-leaf'] / d['bucketed']:.2f}x"
                   f" per-leaf wall-clock on {n_dev} host devices")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({
+                "bench": "comm_bench",
+                "devices": n_dev,
+                "wire": args.wire,
+                "bucket_bytes": bucket_bytes,
+                "rows": [
+                    {"arch": name, "mode": mode, "leaves": leaves,
+                     "collectives_per_step": colls,
+                     "mib_per_collective": round(mib, 3),
+                     "wire_dtypes": dts, "ms_per_sync": round(ms, 3)}
+                    for name, mode, leaves, colls, mib, dts, ms in rows],
+            }, f, indent=1)
+        print(f"wrote {args.out}")
     print("\nNOTE: host-mesh 'devices' share one memory system, so this "
           "measures the collective-count/launch structure, not real "
           "interconnect time: the HLO columns (colls, MiB/coll, dtype) "

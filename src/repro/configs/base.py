@@ -297,6 +297,10 @@ class ParallelConfig:
     compression: Optional[str] = "bf16"
     bucket_bytes: int = 64 * 1024 * 1024  # bucketed sync: bytes/collective
     error_feedback: bool = False  # thread EF residuals through explicit sync
+    # launch each bucket's all-reduce as soon as its leaves are produced
+    # by the backward pass (ready-order bucketing + staged VJP,
+    # DESIGN.md §8); shard_map DP only, requires a staged model
+    overlap_comm: bool = False
     remat: str = "block"  # none | block  (activation checkpoint per layer)
     sequence_sharding: bool = False  # shard seq dim of activations (SP)
     kv_seq_sharding: bool = False  # serve: shard KV cache seq on model
@@ -311,6 +315,10 @@ class TrainConfig:
     steps_per_epoch: int = 40  # ImageNet@32k: 1.28M/32768 = 40 (paper)
     seed: int = 0
     label_smoothing: float = 0.0
+    # GSPMD-path grad-norm logging costs a full extra tree reduction per
+    # step, so it is opt-in; the explicit bucketed/overlapped sync paths
+    # get the norm for free from the packed stream (DESIGN.md §8)
+    log_grad_norm: bool = False
 
 
 # ---------------------------------------------------------------------------

@@ -27,6 +27,7 @@ default (interpret-mode Pallas is Python-speed).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
@@ -111,9 +112,7 @@ def plan_buckets(grads: PyTree,
     slots: List[LeafSlot] = []
     offset = 0
     for leaf in leaves:
-        size = 1
-        for d in leaf.shape:
-            size *= d
+        size = math.prod(leaf.shape)
         slots.append(LeafSlot(offset=offset, size=size,
                               shape=tuple(leaf.shape), dtype=leaf.dtype))
         offset += size
@@ -129,16 +128,16 @@ def _kernel_on(use_kernel: Optional[bool]) -> bool:
     return use_kernel
 
 
-def pack(grads: PyTree, plan: BucketPlan,
-         use_kernel: Optional[bool] = None) -> List[jax.Array]:
-    """Gradient pytree -> list of ``n_buckets`` wire-dtype bucket arrays.
-
-    Cast happens on the whole stream (fused Pallas cast+copy when
-    ``use_kernel``), which is elementwise-identical to casting each leaf
-    before concatenation — the bitwise guarantee the tests pin down.
-    """
-    leaves = plan.treedef.flatten_up_to(grads)
-    sdt = plan.stream_dtype
+def _cast_stream(leaves: List[jax.Array], sdt,
+                 use_kernel: Optional[bool]) -> jax.Array:
+    """Flatten leaves into one wire-dtype stream. The cast happens on
+    the whole stream (fused Pallas cast+copy when ``use_kernel``),
+    which is elementwise-identical to casting each leaf before
+    concatenation — the bitwise guarantee the tests pin down. Shared by
+    ``pack`` (full tree) and ``pack_bucket`` (one stage), so the two
+    paths can never drift apart."""
+    if not leaves:
+        return jnp.zeros((0,), sdt)
     same_dtype = all(l.dtype == leaves[0].dtype for l in leaves)
     if same_dtype:
         stream = jnp.concatenate([l.reshape(-1) for l in leaves])
@@ -148,24 +147,39 @@ def pack(grads: PyTree, plan: BucketPlan,
                 stream = pack_cast(stream, sdt)
             else:
                 stream = stream.astype(sdt)
-    else:
-        stream = jnp.concatenate(
-            [l.reshape(-1).astype(sdt) for l in leaves])
+        return stream
+    return jnp.concatenate([l.reshape(-1).astype(sdt) for l in leaves])
+
+
+def pack(grads: PyTree, plan: BucketPlan,
+         use_kernel: Optional[bool] = None) -> List[jax.Array]:
+    """Gradient pytree -> list of ``n_buckets`` wire-dtype bucket arrays
+    (``_cast_stream`` + fixed-offset slicing)."""
+    leaves = plan.treedef.flatten_up_to(grads)
+    stream = _cast_stream(leaves, plan.stream_dtype, use_kernel)
     bounds = [plan.bucket_bounds(i) for i in range(plan.n_buckets)]
     return [jax.lax.slice(stream, (lo,), (hi,)) for lo, hi in bounds]
 
 
 def unpack(buckets: Sequence[jax.Array], plan: BucketPlan,
            use_kernel: Optional[bool] = None,
-           denom: Optional[int] = None) -> PyTree:
+           denom: Optional[int] = None,
+           with_sq_norm: bool = False):
     """Bucket arrays -> gradient pytree (original shapes/dtypes).
 
     ``denom`` (the worker count for the mean) divides after the cast back
     to the accumulation dtype — the same cast-then-divide order (and the
     same division, not a reciprocal multiply) as ``compressed_psum``, so
     the two paths agree bitwise.
+
+    ``with_sq_norm=True`` additionally returns the squared L2 norm of
+    the whole (cast-back, divided) gradient stream, computed in one
+    fused pass over the contiguous stream — this is how the sync paths
+    report ``grad_norm`` without a second full-tree reduction
+    (DESIGN.md §8).
     """
     stream = jnp.concatenate(list(buckets))
+    sq_norm = None
     acc_dtypes = {s.dtype for s in plan.slots}
     if len(acc_dtypes) == 1:
         acc = next(iter(acc_dtypes))
@@ -177,6 +191,8 @@ def unpack(buckets: Sequence[jax.Array], plan: BucketPlan,
                 stream = stream.astype(acc)
         if denom is not None:
             stream = stream / denom
+        if with_sq_norm:
+            sq_norm = jnp.sum(jnp.square(stream.astype(jnp.float32)))
         leaves = [jax.lax.slice(stream, (s.offset,),
                                 (s.offset + s.size,)).reshape(s.shape)
                   for s in plan.slots]
@@ -189,7 +205,11 @@ def unpack(buckets: Sequence[jax.Array], plan: BucketPlan,
             if denom is not None:
                 leaf = leaf / denom
             leaves.append(leaf.reshape(s.shape))
-    return jax.tree.unflatten(plan.treedef, leaves)
+        if with_sq_norm:
+            sq_norm = sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                          for l in leaves)
+    tree = jax.tree.unflatten(plan.treedef, leaves)
+    return (tree, sq_norm) if with_sq_norm else tree
 
 
 def bucketed_psum(grads: PyTree, axis_names: Sequence[str],
@@ -197,13 +217,16 @@ def bucketed_psum(grads: PyTree, axis_names: Sequence[str],
                   bucket_bytes: int = DEFAULT_BUCKET_BYTES,
                   mean: bool = True,
                   plan: Optional[BucketPlan] = None,
-                  use_kernel: Optional[bool] = None) -> PyTree:
+                  use_kernel: Optional[bool] = None,
+                  with_sq_norm: bool = False):
     """Drop-in for ``compressed_psum`` issuing one psum per bucket.
 
     Same contract: cast each gradient element to the wire dtype, sum over
     the data axes, cast back, optionally divide by the worker count —
     but the interconnect sees ``plan.n_buckets`` large collectives
-    instead of one per leaf.
+    instead of one per leaf. ``with_sq_norm=True`` returns
+    ``(grads, sq_norm)`` with the synced gradients' squared L2 norm from
+    one pass over the stream (see ``unpack``).
     """
     if plan is None:
         plan = plan_buckets(grads, bucket_bytes, wire)
@@ -212,7 +235,7 @@ def bucketed_psum(grads: PyTree, axis_names: Sequence[str],
     buckets = pack(grads, plan, use_kernel=use_kernel)
     synced = [jax.lax.psum(b, tuple(axis_names)) for b in buckets]
     return unpack(synced, plan, use_kernel=use_kernel,
-                  denom=n if mean else None)
+                  denom=n if mean else None, with_sq_norm=with_sq_norm)
 
 
 def bucketed_psum_ef(grads: PyTree, residual: PyTree,
@@ -221,15 +244,137 @@ def bucketed_psum_ef(grads: PyTree, residual: PyTree,
                      bucket_bytes: int = DEFAULT_BUCKET_BYTES,
                      mean: bool = True,
                      plan: Optional[BucketPlan] = None,
-                     use_kernel: Optional[bool] = None
-                     ) -> Tuple[PyTree, PyTree]:
+                     use_kernel: Optional[bool] = None,
+                     with_sq_norm: bool = False):
     """Bucketed psum with error feedback (core/compression.py) threaded
     through: q = Q(g + r) is what gets packed and reduced; r' stays
     worker-local. The residual update is identical to the per-leaf
     ``compressed_psum_ef`` path — EF happens before packing, so bucketing
-    cannot change it (asserted by the bucketing tests)."""
+    cannot change it (asserted by the bucketing tests). With
+    ``with_sq_norm`` returns ``(synced, new_residual, sq_norm)``."""
     quant, new_residual = apply_error_feedback(grads, residual, wire)
-    synced = bucketed_psum(quant, axis_names, wire=wire,
-                           bucket_bytes=bucket_bytes, mean=mean,
-                           plan=plan, use_kernel=use_kernel)
-    return synced, new_residual
+    out = bucketed_psum(quant, axis_names, wire=wire,
+                        bucket_bytes=bucket_bytes, mean=mean,
+                        plan=plan, use_kernel=use_kernel,
+                        with_sq_norm=with_sq_norm)
+    if with_sq_norm:
+        synced, sq_norm = out
+        return synced, new_residual, sq_norm
+    return out, new_residual
+
+
+# ---------------------------------------------------------------------------
+# Ready-order bucketing (backward-overlapped sync, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ReadyBucketPlan:
+    """A ``BucketPlan`` whose stream is laid out in backward-completion
+    order: the stage trees are given in the order the backward pass
+    *produces* them (last forward segment first), so every bucket's
+    element range is a contiguous run of already-materialized gradients
+    and the bucket closes the moment its completing stage's VJP finishes
+    — not when the full backward ends.
+
+    ``ready_stage[b]`` is the index (into the ready-ordered stage list)
+    of the stage whose gradients complete bucket ``b``; it is
+    non-decreasing in ``b`` by construction.
+    """
+
+    base: BucketPlan  # treedef = tuple(stage trees, ready order)
+    stage_ends: Tuple[int, ...]  # cumulative element end offset per stage
+    ready_stage: Tuple[int, ...]  # per bucket
+
+    @property
+    def n_buckets(self) -> int:
+        return self.base.n_buckets
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stage_ends)
+
+    def buckets_ready_at(self, stage_idx: int) -> Tuple[int, ...]:
+        return tuple(b for b, s in enumerate(self.ready_stage)
+                     if s == stage_idx)
+
+    def describe(self) -> str:
+        return (f"{self.base.describe()} over {self.n_stages} stages, "
+                f"ready stages {list(self.ready_stage)}")
+
+
+def plan_ready_buckets(stage_trees: Sequence[PyTree],
+                       bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                       wire: Optional[str] = "bf16") -> ReadyBucketPlan:
+    """Lay out per-stage gradient trees (given in backward-completion
+    order) as one contiguous stream cut into fixed-size buckets.
+
+    The element values and the per-bucket psum contract are identical to
+    ``plan_buckets`` — only *where* each leaf sits in the stream changes
+    (completion order instead of pytree order), which is exactly what
+    makes overlap possible and exactly what cannot change numerics
+    (elementwise cast/sum/cast/divide is position-independent)."""
+    stage_trees = tuple(stage_trees)
+    if not stage_trees:
+        raise ValueError("need at least one stage tree")
+    base = plan_buckets(stage_trees, bucket_bytes, wire)
+    ends: List[int] = []
+    off = 0
+    for t in stage_trees:
+        off += sum(math.prod(l.shape) for l in jax.tree.leaves(t))
+        ends.append(off)
+    assert off == base.total_elems
+    ready = []
+    for b in range(base.n_buckets):
+        _, hi = base.bucket_bounds(b)
+        # first stage whose cumulative end covers the bucket's last elem
+        stage = next(i for i, e in enumerate(ends) if e >= hi)
+        ready.append(stage)
+    return ReadyBucketPlan(base=base, stage_ends=tuple(ends),
+                           ready_stage=tuple(ready))
+
+
+def pack_bucket(plan: ReadyBucketPlan, stage_idx: int,
+                stage_tree: PyTree, carry: Optional[jax.Array] = None,
+                use_kernel: Optional[bool] = None
+                ) -> Tuple[List[Tuple[int, jax.Array]], jax.Array]:
+    """Feed stage ``stage_idx``'s just-materialized gradients; returns
+    ``(ready, carry')`` where ``ready`` is the list of
+    ``(bucket_id, wire_array)`` buckets that *closed* at this stage (its
+    gradients were their last missing elements) and ``carry'`` is the
+    unemitted tail awaiting later stages.
+
+    Stages must be fed in ready order (0, 1, ...). All shapes are static
+    — the carry length after each stage is a plan constant — so the
+    emission loop unrolls cleanly under jit inside the backward chain
+    (training/step.py:make_dp_overlap_train_step, DESIGN.md §8)."""
+    flat = _cast_stream(jax.tree.leaves(stage_tree),
+                        plan.base.stream_dtype, use_kernel)
+    carry_len = 0 if carry is None else carry.shape[0]
+    fed_end = plan.stage_ends[stage_idx]
+    flat_start = fed_end - flat.shape[0]
+    stream_start = flat_start - carry_len
+
+    # lazily materialize carry++flat only for carry-spanning buckets;
+    # buckets interior to this stage slice straight out of ``flat``
+    joined = None
+
+    def view(lo, hi):
+        nonlocal joined
+        if lo >= flat_start:
+            return jax.lax.slice(flat, (lo - flat_start,),
+                                 (hi - flat_start,))
+        if joined is None:
+            joined = jnp.concatenate([carry, flat])
+        return jax.lax.slice(joined, (lo - stream_start,),
+                             (hi - stream_start,))
+
+    ready = []
+    emitted_end = stream_start
+    for b in plan.buckets_ready_at(stage_idx):
+        lo, hi = plan.base.bucket_bounds(b)
+        assert lo >= stream_start and hi <= fed_end, (b, lo, hi)
+        ready.append((b, view(lo, hi)))
+        emitted_end = hi
+    new_carry = view(emitted_end, fed_end)
+    return ready, new_carry

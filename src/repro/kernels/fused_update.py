@@ -43,18 +43,32 @@ def _kernel(scalars_ref, g_ref, p_ref, d_ref, m_ref,
 
 def fused_update_2d(g, p, d, m, scalars, *, mu1, mu2, eps, eta_rmsprop,
                     weight_decay, interpret=True, block_rows=BLOCK_ROWS):
-    """g/p/d/m: (rows, 128) fp32; scalars: (1, 2) [eta, alpha_sgd]."""
+    """g/p/d/m: (rows, 128) fp32; scalars: (1, 2) [eta, alpha_sgd].
+
+    Arbitrary row counts are supported: the streams are zero-padded (m
+    with ones, so sqrt/eps stays benign) up to a ``block_rows`` multiple
+    and the outputs sliced back — full-width tiles for any parameter
+    count instead of degrading to tiny blocks or asserting.
+    """
     rows = g.shape[0]
     block_rows = min(block_rows, rows)
-    assert rows % block_rows == 0
-    grid = (rows // block_rows,)
+    pad = (-rows) % block_rows
+    if pad:
+        zrow = ((0, pad), (0, 0))
+        g = jnp.pad(g, zrow)
+        p = jnp.pad(p, zrow)
+        d = jnp.pad(d, zrow)
+        m = jnp.pad(m, zrow, constant_values=1.0)
+    padded_rows = rows + pad
+    grid = (padded_rows // block_rows,)
     tile = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
     scalar_spec = pl.BlockSpec((1, 2), lambda i: (0, 0))
     kernel = functools.partial(
         _kernel, mu1=mu1, mu2=mu2, eps=eps, eta_rmsprop=eta_rmsprop,
         weight_decay=weight_decay)
-    out_shape = [jax.ShapeDtypeStruct(g.shape, jnp.float32)] * 3
-    return pl.pallas_call(
+    out_shape = [jax.ShapeDtypeStruct((padded_rows, LANES),
+                                      jnp.float32)] * 3
+    outs = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[scalar_spec, tile, tile, tile, tile],
@@ -62,3 +76,6 @@ def fused_update_2d(g, p, d, m, scalars, *, mu1, mu2, eps, eta_rmsprop,
         out_shape=out_shape,
         interpret=interpret,
     )(scalars, g, p, d, m)
+    if pad:
+        outs = [o[:rows] for o in outs]
+    return tuple(outs)

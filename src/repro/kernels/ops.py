@@ -47,16 +47,12 @@ def fused_hybrid_update(g, p, d, m, h, weight_decay: float = 0.0) -> Tuple:
 
     scalars = jnp.stack([jnp.asarray(h.eta, jnp.float32),
                          jnp.asarray(h.alpha_sgd, jnp.float32)]).reshape(1, 2)
-    block_rows = rows
-    for cand in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
-        if rows % cand == 0:
-            block_rows = cand
-            break
+    # fused_update_2d pads the row stream to a block multiple internally,
+    # so any row count gets full-width tiles (no divisor search needed)
     p_new, d_new, m_new = _fu.fused_update_2d(
         flat(g), flat(p), flat(d), flat(m), scalars,
         mu1=h.mu1, mu2=h.mu2, eps=h.eps, eta_rmsprop=h.eta_rmsprop,
-        weight_decay=weight_decay, interpret=_interpret(),
-        block_rows=block_rows)
+        weight_decay=weight_decay, interpret=_interpret())
 
     def unflat(x, dtype):
         return x.reshape(-1)[:n].reshape(orig_shape).astype(dtype)

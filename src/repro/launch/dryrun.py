@@ -101,7 +101,8 @@ def lower_cell(arch: str, shape_name: str, mesh: Mesh, *,
                dp_mode: str = "gspmd",
                opt_cfg: Optional[OptimizerConfig] = None,
                microbatches: int = 1,
-               compression: Optional[str] = "__default__"):
+               compression: Optional[str] = "__default__",
+               overlap_comm: bool = False):
     """Build + lower + compile one cell. Returns (record, compiled)."""
     cfg = get_config(arch)
     shp = {s.name: s for s in shapes_for(cfg)}[shape_name]
@@ -118,6 +119,11 @@ def lower_cell(arch: str, shape_name: str, mesh: Mesh, *,
                 "bucketed compression requires --dp-mode shardmap; "
                 f"got dp_mode={dp_mode!r} with {compression!r}")
         parallel = dataclasses.replace(parallel, compression=compression)
+    if overlap_comm:
+        if dp_mode != "shardmap":
+            raise ValueError("--overlap-comm requires --dp-mode shardmap "
+                             "(DESIGN.md §8)")
+        parallel = dataclasses.replace(parallel, overlap_comm=True)
     rules = make_rules(cfg, mesh, parallel)
     compute_dtype = jnp.bfloat16
 
@@ -130,6 +136,7 @@ def lower_cell(arch: str, shape_name: str, mesh: Mesh, *,
         # paper-faithful explicit DP: per-worker fwd/bwd + compressed
         # psum of gradients + replicated optimizer (pure-DP models)
         from repro.training.step import (
+            make_dp_overlap_train_step,
             make_dp_shardmap_train_step,
             replicate_model_state,
         )
@@ -161,8 +168,10 @@ def lower_cell(arch: str, shape_name: str, mesh: Mesh, *,
         }
         b_shard = jax.tree.map(
             lambda v: dp_shard if v.ndim else repl, batch)
-        step = make_dp_shardmap_train_step(model, optimizer, train_cfg,
-                                           mesh, parallel.dp_axes)
+        step_builder = (make_dp_overlap_train_step if parallel.overlap_comm
+                        else make_dp_shardmap_train_step)
+        step = step_builder(model, optimizer, train_cfg, mesh,
+                            parallel.dp_axes)
         jitted = jax.jit(step, in_shardings=(state_shard, b_shard),
                          out_shardings=(state_shard, None),
                          donate_argnums=(0,) if donate else ())
@@ -356,8 +365,10 @@ def analyze_compiled(arch, shp, cfg, mesh, compiled, resident
         "collective_dtypes": a.collective_dtypes,
         "collective_total_bytes": a.total_collective_bytes,
         # collective count / bytes-per-collective / wire dtype — verifies
-        # the bucketed sync fusion from HLO (DESIGN.md §6)
-        "comm_report": comm_report(a),
+        # the bucketed sync fusion from HLO (DESIGN.md §6); the embedded
+        # interleave section proves (or refutes) that collectives overlap
+        # the backward compute in scheduled program order (DESIGN.md §8)
+        "comm_report": comm_report(a, hlo_text=hlo),
         "trip_counts_found": len(a.trip_counts),
         "resident_bytes_per_device": resident_bytes,
         "fits_v5e_16g": sum(resident_bytes.values()) < V5E_HBM_BYTES,
@@ -381,13 +392,15 @@ def analyze_compiled(arch, shp, cfg, mesh, compiled, resident
 
 def run_cells(archs, shapes, *, multi_pod=False, out_dir="results/dryrun",
               force=False, attention_impl="chunked", dp_mode="gspmd",
-              compression="__default__"):
+              compression="__default__", overlap_comm=False):
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
     if dp_mode != "gspmd":
         mesh_tag += f"__{dp_mode}"
     if compression != "__default__":
         mesh_tag += f"__{compression or 'nowire'}"
+    if overlap_comm:
+        mesh_tag += "__overlap"
     os.makedirs(out_dir, exist_ok=True)
     results = []
     for arch in archs:
@@ -408,7 +421,8 @@ def run_cells(archs, shapes, *, multi_pod=False, out_dir="results/dryrun",
                 rec, compiled = lower_cell(arch, shape_name, mesh,
                                            attention_impl=attention_impl,
                                            dp_mode=dp_mode,
-                                           compression=compression)
+                                           compression=compression,
+                                           overlap_comm=overlap_comm)
                 del compiled
             except Exception as e:
                 rec = {"arch": arch, "shape": shape_name, "status": "error",
@@ -429,6 +443,13 @@ def run_cells(archs, shapes, *, multi_pod=False, out_dir="results/dryrun",
                           "%.2f MiB/collective mean" % (
                               cr["total_executions_per_step"],
                               cr["mean_bytes_per_collective"] / 2**20))
+                    il = cr.get("interleave", {})
+                    if il.get("n_collectives"):
+                        print("  interleave: %s (%d/%d conv+dot after "
+                              "first collective)" % (
+                                  il["interleaved"],
+                                  il.get("compute_ops_after_first", 0),
+                                  il.get("compute_ops_total", 0)))
             print(f"[done]   {arch} {shape_name} {mesh_tag}: {status} "
                   f"{extra}", flush=True)
             results.append(rec)
@@ -451,6 +472,9 @@ def main():
     ap.add_argument("--compression", default="__default__",
                     help="override gradient sync: none|bf16|f16|"
                          "bf16+bucketed|f16+bucketed (DESIGN.md §2/§6)")
+    ap.add_argument("--overlap-comm", action="store_true",
+                    help="backward-overlapped bucketed sync (needs "
+                         "--dp-mode shardmap, DESIGN.md §8)")
     args = ap.parse_args()
 
     if args.arch == "all":
@@ -462,7 +486,8 @@ def main():
     for mp in meshes:
         run_cells(archs, shapes, multi_pod=mp, out_dir=args.out,
                   force=args.force, attention_impl=args.attention_impl,
-                  dp_mode=args.dp_mode, compression=args.compression)
+                  dp_mode=args.dp_mode, compression=args.compression,
+                  overlap_comm=args.overlap_comm)
 
 
 if __name__ == "__main__":

@@ -57,6 +57,7 @@ def build_train_setup(cfg, *, global_batch: int, seq_len: int,
                       sync_bn: bool = False, compression: str = "bf16",
                       bucket_bytes: int = 64 * 1024 * 1024,
                       error_feedback: bool = False,
+                      overlap_comm: bool = False,
                       data_noise: Optional[float] = None):
     """Returns (model, state, train_step, data, put_batch,
     state_shardings).
@@ -69,7 +70,13 @@ def build_train_setup(cfg, *, global_batch: int, seq_len: int,
     parallel = ParallelConfig(
         dp_axes=("data",), tp_axis="model" if mesh is not None else None,
         compression=compression, bucket_bytes=bucket_bytes,
-        error_feedback=error_feedback, zero_1=False)
+        error_feedback=error_feedback, overlap_comm=overlap_comm,
+        zero_1=False)
+    if overlap_comm and dp_mode != "shardmap":
+        raise ValueError(
+            "overlap_comm launches explicit per-bucket collectives inside "
+            "the backward pass, which only exists in the shard_map DP "
+            "mode (dp_mode='shardmap', DESIGN.md §8)")
     if cfg.family == "conv" and dp_mode == "shardmap" and sync_bn:
         from repro.models.resnet import ResNet50
         model = ResNet50(cfg, compute_dtype=compute_dtype,
@@ -120,8 +127,13 @@ def build_train_setup(cfg, *, global_batch: int, seq_len: int,
                     for k, v in batch.items()}
 
         if dp_mode == "shardmap":
-            step = make_dp_shardmap_train_step(model, optimizer, train_cfg,
-                                               mesh, parallel.dp_axes)
+            if overlap_comm:
+                from repro.training.step import make_dp_overlap_train_step
+                step = make_dp_overlap_train_step(
+                    model, optimizer, train_cfg, mesh, parallel.dp_axes)
+            else:
+                step = make_dp_shardmap_train_step(
+                    model, optimizer, train_cfg, mesh, parallel.dp_axes)
             train_step = jax.jit(step, donate_argnums=(0,))
         else:
             p_shard = tree_shardings(axes, mesh, rules)
@@ -208,6 +220,10 @@ def main():
     ap.add_argument("--bucket-mib", type=int, default=64,
                     help="bucket size in MiB for the +bucketed modes")
     ap.add_argument("--error-feedback", action="store_true")
+    ap.add_argument("--overlap-comm", action="store_true",
+                    help="launch each gradient bucket's all-reduce as "
+                         "soon as the backward pass produces its leaves "
+                         "(shard_map DP only, DESIGN.md §8)")
     ap.add_argument("--use-fused-kernel", action="store_true")
     ap.add_argument("--log-json", default=None)
     ap.add_argument("--seed", type=int, default=0)
@@ -233,7 +249,8 @@ def main():
             use_fused_kernel=args.use_fused_kernel,
             compression=args.compression,
             bucket_bytes=args.bucket_mib * 1024 * 1024,
-            error_feedback=args.error_feedback)
+            error_feedback=args.error_feedback,
+            overlap_comm=args.overlap_comm)
 
     metadata = {"arch": args.arch, "optimizer": args.optimizer}
     t0 = time.time()

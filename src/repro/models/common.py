@@ -145,6 +145,83 @@ def norm_init(kind: str, d: int, stacked: int = 0) -> Dict[str, Boxed]:
 
 
 # ---------------------------------------------------------------------------
+# Staged apply (backward-overlapped gradient sync, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StagedLoss:
+    """A model's loss decomposed into K chained segments.
+
+    The overlap train step (``training/step.py:make_dp_overlap_train_step``)
+    takes the VJP of each segment independently so gradients materialize
+    in reverse-segment order, letting it launch a gradient bucket's
+    all-reduce the moment the bucket's last leaf exists instead of after
+    the full backward pass (DESIGN.md §8).
+
+    Contract:
+      * ``seg_fns[i](seg_params[i], carry) -> (carry', aux)`` — the carry
+        is an arbitrary differentiable pytree threaded between segments
+        (activations, accumulated aux losses, and — for tied embeddings —
+        the shared table, so its gradient sums across uses exactly as in
+        the monolithic backward). The final segment's carry' is the
+        scalar loss.
+      * every parameter leaf lives in exactly ONE segment, so
+        ``merge_grads`` is a pure structural inverse of ``split_tree``
+        (no cross-segment additions — that is what the carry is for).
+      * ``finalize_aux(aux_list) -> (new_model_state, metrics)``.
+    """
+
+    names: Tuple[str, ...]
+    seg_params: Tuple[PyTree, ...]
+    seg_fns: Tuple[Callable, ...]
+    x0: Any
+    merge_grads: Callable  # list of per-segment grad trees (fwd order) -> full
+    split_tree: Callable  # full params-structured tree -> list of seg trees
+    finalize_aux: Callable  # list of aux (fwd order) -> (new_state, metrics)
+
+    def __len__(self) -> int:
+        return len(self.seg_fns)
+
+
+def staged_forward(staged: StagedLoss):
+    """Forward pass as a chain of per-segment VJPs.
+
+    Returns ``(loss, vjp_fns, aux_list)``; ``vjp_fns[i](ct)`` yields
+    ``(seg_param_grads, carry_cotangent)``. Chaining these from the last
+    segment backwards reproduces exactly the primitives reverse-mode AD
+    emits for the monolithic loss — same ops, same order per segment —
+    which is why the overlapped step's gradients are bitwise-identical
+    to the monolithic path (asserted in tests/test_overlap.py).
+    """
+    carry = staged.x0
+    vjps = []
+    auxes = []
+    for sp, fn in zip(staged.seg_params, staged.seg_fns):
+        carry, vjp_fn, aux = jax.vjp(fn, sp, carry, has_aux=True)
+        vjps.append(vjp_fn)
+        auxes.append(aux)
+    return carry, vjps, auxes
+
+
+def staged_value_and_grad(staged: StagedLoss):
+    """Reference driver: run the chained VJPs without overlap.
+
+    Returns ``(loss, (new_state, metrics), grads)`` with ``grads`` in the
+    full parameter structure — the oracle the overlap step is verified
+    against segment-by-segment.
+    """
+    loss, vjps, auxes = staged_forward(staged)
+    ct: Any = jnp.ones_like(loss)
+    seg_grads = [None] * len(vjps)
+    for i in reversed(range(len(vjps))):
+        g_seg, ct = vjps[i](ct)
+        seg_grads[i] = g_seg
+    new_state, metrics = staged.finalize_aux(auxes)
+    return loss, (new_state, metrics), staged.merge_grads(seg_grads)
+
+
+# ---------------------------------------------------------------------------
 # Misc
 # ---------------------------------------------------------------------------
 

@@ -115,48 +115,51 @@ class ResNet50:
             var = state[name]["var"]
         return bn_apply_stats(x, mean, var, p_bn["scale"], p_bn["bias"])
 
-    def apply(self, p: Params, state: Params, images: jax.Array,
-              train: bool = True) -> Tuple[jax.Array, Params]:
+    # Per-segment forwards: apply() composes them sequentially; the
+    # overlap train step VJPs them independently (loss_segments below,
+    # DESIGN.md §8) — one source of truth for both execution paths.
+    def _stem_fwd(self, p_stem, images, state, train: bool):
         x = images.astype(self.compute_dtype)
         x = constrain(x, ("batch", None, None, None))
         new_state: Params = {}
-        x = conv(x, p["stem"]["conv"], stride=2)
-        x = jax.nn.relu(self._bn(p["stem"]["bn"], x, "stem/bn", state,
+        x = conv(x, p_stem["conv"], stride=2)
+        x = jax.nn.relu(self._bn(p_stem["bn"], x, "stem/bn", state,
                                  new_state, train))
         x = jax.lax.reduce_window(
             x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME")
-        for si in range(len(self.cfg.conv_stages)):
-            stage = p[f"stage{si}"]
-            for bi in range(self.cfg.conv_stages[si]):
-                blk = stage[f"block{bi}"]
-                pre = f"stage{si}/block{bi}"
-                stride = 2 if (bi == 0 and si > 0) else 1
-                out = conv(x, blk["conv1"])
-                out = jax.nn.relu(self._bn(blk["bn1"], out, f"{pre}/bn1",
-                                           state, new_state, train))
-                out = conv(out, blk["conv2"], stride=stride)
-                out = jax.nn.relu(self._bn(blk["bn2"], out, f"{pre}/bn2",
-                                           state, new_state, train))
-                out = conv(out, blk["conv3"])
-                out = self._bn(blk["bn3"], out, f"{pre}/bn3", state,
-                               new_state, train)
-                if bi == 0:
-                    sc = conv(x, blk["proj"], stride=stride)
-                    sc = self._bn(blk["proj_bn"], sc, f"{pre}/proj_bn",
-                                  state, new_state, train)
-                else:
-                    sc = x
-                x = jax.nn.relu(out + sc)
-        x = jnp.mean(x, axis=(1, 2))
-        logits = x @ p["fc"]["w"].astype(x.dtype) + p["fc"]["b"].astype(
-            x.dtype)
-        return logits.astype(jnp.float32), (new_state if train else state)
+        return x, new_state
 
-    # ------------------------------------------------------------ losses
-    def loss_fn(self, p, model_state, batch, label_smoothing=0.0):
-        logits, new_state = self.apply(p, model_state, batch["images"],
-                                       train=True)
-        labels = batch["labels"]
+    def _stage_fwd(self, si: int, p_stage, x, state, train: bool):
+        new_state: Params = {}
+        for bi in range(self.cfg.conv_stages[si]):
+            blk = p_stage[f"block{bi}"]
+            pre = f"stage{si}/block{bi}"
+            stride = 2 if (bi == 0 and si > 0) else 1
+            out = conv(x, blk["conv1"])
+            out = jax.nn.relu(self._bn(blk["bn1"], out, f"{pre}/bn1",
+                                       state, new_state, train))
+            out = conv(out, blk["conv2"], stride=stride)
+            out = jax.nn.relu(self._bn(blk["bn2"], out, f"{pre}/bn2",
+                                       state, new_state, train))
+            out = conv(out, blk["conv3"])
+            out = self._bn(blk["bn3"], out, f"{pre}/bn3", state,
+                           new_state, train)
+            if bi == 0:
+                sc = conv(x, blk["proj"], stride=stride)
+                sc = self._bn(blk["proj_bn"], sc, f"{pre}/proj_bn",
+                              state, new_state, train)
+            else:
+                sc = x
+            x = jax.nn.relu(out + sc)
+        return x, new_state
+
+    def _head_logits(self, p_fc, x):
+        x = jnp.mean(x, axis=(1, 2))
+        logits = x @ p_fc["w"].astype(x.dtype) + p_fc["b"].astype(x.dtype)
+        return logits.astype(jnp.float32)
+
+    @staticmethod
+    def _softmax_xent(logits, labels, label_smoothing: float):
         logp = jax.nn.log_softmax(logits)
         nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
         if label_smoothing:
@@ -164,7 +167,78 @@ class ResNet50:
                 logp, axis=-1)
         loss = jnp.mean(nll)
         acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+        return loss, acc
+
+    def apply(self, p: Params, state: Params, images: jax.Array,
+              train: bool = True) -> Tuple[jax.Array, Params]:
+        new_state: Params = {}
+        x, frag = self._stem_fwd(p["stem"], images, state, train)
+        new_state.update(frag)
+        for si in range(len(self.cfg.conv_stages)):
+            x, frag = self._stage_fwd(si, p[f"stage{si}"], x, state, train)
+            new_state.update(frag)
+        logits = self._head_logits(p["fc"], x)
+        return logits, (new_state if train else state)
+
+    # ------------------------------------------------------------ losses
+    def loss_fn(self, p, model_state, batch, label_smoothing=0.0):
+        logits, new_state = self.apply(p, model_state, batch["images"],
+                                       train=True)
+        loss, acc = self._softmax_xent(logits, batch["labels"],
+                                       label_smoothing)
         return loss, (new_state, {"loss": loss, "accuracy": acc})
+
+    # ----------------------------------------------------- staged apply
+    def loss_segments(self, params: Params, model_state: Params,
+                      batch, label_smoothing: float = 0.0
+                      ) -> common.StagedLoss:
+        """K = 2 + n_stages segments: stem / stage0..stageN / fc+loss.
+
+        Segment boundaries coincide with the top-level parameter keys,
+        so split/merge are plain dict projections (DESIGN.md §8). Each
+        segment is the same helper ``apply`` composes, so the staged
+        forward traces the identical primitive sequence.
+        """
+        n_stages = len(self.cfg.conv_stages)
+        names = ("stem",) + tuple(f"stage{si}" for si in range(n_stages)) \
+            + ("fc",)
+
+        def stem_fn(sp, images):
+            x, frag = self._stem_fwd(sp, images, model_state, True)
+            return x, frag
+
+        def make_stage_fn(si):
+            def stage_fn(sp, x):
+                return self._stage_fwd(si, sp, x, model_state, True)
+            return stage_fn
+
+        def head_fn(sp, x):
+            logits = self._head_logits(sp, x)
+            loss, acc = self._softmax_xent(logits, batch["labels"],
+                                           label_smoothing)
+            return loss, ({}, {"loss": loss, "accuracy": acc})
+
+        seg_fns = (stem_fn,) + tuple(make_stage_fn(si)
+                                     for si in range(n_stages)) + (head_fn,)
+
+        def split_tree(tree):
+            return [tree[k] for k in names]
+
+        def merge_grads(seg_grads):
+            return dict(zip(names, seg_grads))
+
+        def finalize_aux(auxes):
+            new_state: Params = {}
+            for frag in auxes[:-1]:
+                new_state.update(frag)
+            state_frag, metrics = auxes[-1]
+            new_state.update(state_frag)
+            return new_state, metrics
+
+        return common.StagedLoss(
+            names=names, seg_params=tuple(split_tree(params)),
+            seg_fns=seg_fns, x0=batch["images"], merge_grads=merge_grads,
+            split_tree=split_tree, finalize_aux=finalize_aux)
 
     def eval_fn(self, p, model_state, batch):
         """Validation metrics with frozen (finalized) BN statistics."""

@@ -24,11 +24,15 @@ Params = Dict[str, Any]
 
 class TransformerLM:
     def __init__(self, cfg: ModelConfig, compute_dtype=jnp.bfloat16,
-                 attention_impl: str = "chunked", remat: bool = True):
+                 attention_impl: str = "chunked", remat: bool = True,
+                 comm_stages: int = 4):
         self.cfg = cfg
         self.compute_dtype = compute_dtype
         self.attention_impl = attention_impl
         self.remat = remat
+        # how many slices loss_segments cuts the layer scan into — the
+        # granularity of backward-overlapped gradient sync (DESIGN.md §8)
+        self.comm_stages = comm_stages
         self.group = cfg.moe_layer_every if cfg.n_experts else 1
         assert cfg.n_layers % self.group == 0
         self.n_groups = cfg.n_layers // self.group
@@ -85,17 +89,22 @@ class TransformerLM:
             mlp_out, aux = layers.mlp_apply(sub_p["mlp"], h, cfg), 0.0
         return x + mlp_out, new_cache, aux
 
-    def _scan_layers(self, p: Params, x, positions, mode: str,
-                     cache: Optional[Params], cache_index):
-        """lax.scan over layer groups. cache leaves: (G, B, S, KV, Dh)."""
+    def _scan_layers(self, sub_params: Params, x, positions, mode: str,
+                     cache: Optional[Params], cache_index, aux0=0.0):
+        """lax.scan over layer groups. cache leaves: (G, B, S, KV, Dh).
+
+        ``sub_params`` is the stacked {"sub{j}": ...} dict — the full
+        stack in the monolithic forward, a leading-dim slice of it in a
+        staged segment (loss_segments, DESIGN.md §8). ``aux0`` seeds the
+        MoE aux accumulator so it threads across segment boundaries."""
 
         def group_fn(carry, scanned):
             x, aux_acc = carry
-            sub_params, sub_caches = scanned
+            sub_p, sub_caches = scanned
             new_caches = {}
             for j in range(self.group):
                 c = sub_caches[f"sub{j}"] if sub_caches is not None else None
-                x, nc, aux = self._block(sub_params[f"sub{j}"], x, positions,
+                x, nc, aux = self._block(sub_p[f"sub{j}"], x, positions,
                                          mode, j, c, cache_index)
                 if nc is not None:
                     new_caches[f"sub{j}"] = nc
@@ -105,9 +114,8 @@ class TransformerLM:
         if self.remat and mode == "train":
             fn = jax.checkpoint(
                 group_fn, policy=jax.checkpoint_policies.nothing_saveable)
-        sub_params = {f"sub{j}": p[f"sub{j}"] for j in range(self.group)}
         (x, aux), new_cache = jax.lax.scan(
-            fn, (x, 0.0), (sub_params, cache))
+            fn, (x, aux0), (sub_params, cache))
         return x, aux, new_cache
 
     # ---------------------------------------------------------------- fwd
@@ -136,8 +144,9 @@ class TransformerLM:
             positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
             if cache is not None and cache_index is None:
                 cache_index = 0
-        x, aux, new_cache = self._scan_layers(p, x, positions, mode, cache,
-                                              cache_index)
+        sub_params = {f"sub{j}": p[f"sub{j}"] for j in range(self.group)}
+        x, aux, new_cache = self._scan_layers(sub_params, x, positions,
+                                              mode, cache, cache_index)
         x = apply_norm(p["final_norm"], x, cfg.norm, cfg.norm_eps)
         if n_patches:
             x = x[:, n_patches:, :]
@@ -155,6 +164,101 @@ class TransformerLM:
         total = loss + 0.01 * moe_aux
         metrics = {"loss": loss, "moe_aux": moe_aux, "tokens": n_tok}
         return total, (model_state, metrics)
+
+    # ----------------------------------------------------- staged apply
+    def loss_segments(self, params: Params, model_state: Params,
+                      batch: Dict, label_smoothing: float = 0.0
+                      ) -> common.StagedLoss:
+        """Segments: embed / <=``comm_stages`` layer-group slices / head.
+
+        The layer scan is cut into leading-dim slices of the stacked
+        "sub{j}" params — each segment scans its slice with the same
+        (remat'd) group body, so the staged forward computes exactly the
+        monolithic forward's per-layer ops (DESIGN.md §8). The carry is
+        ``(x, moe_aux)``; with tied embeddings the shared table rides in
+        the carry too, so its two gradient contributions (token lookup +
+        LM head) sum through the VJP chain exactly as in the monolithic
+        backward — every param leaf stays owned by exactly one segment.
+        """
+        cfg = self.cfg
+        tied = cfg.tie_embeddings
+        tokens = batch["tokens"]
+        patches = batch.get("patches")
+        n_patches = 0 if patches is None else patches.shape[1]
+        n_lseg = max(1, min(self.comm_stages, self.n_groups))
+        bounds = [round(i * self.n_groups / n_lseg)
+                  for i in range(n_lseg + 1)]
+        emb_keys = ["embed"] + (["vision_proj"] if "vision_proj" in params
+                                else [])
+        head_keys = ["final_norm"] + ([] if tied else ["head"])
+        names = ("embed",) + tuple(f"layers{lo}_{hi}" for lo, hi in
+                                   zip(bounds, bounds[1:])) + ("head",)
+
+        def embed_fn(sp, _x0):
+            x = layers.embed(sp["embed"], tokens, self.compute_dtype)
+            if patches is not None:
+                pe = patches.astype(self.compute_dtype) @ \
+                    sp["vision_proj"].astype(self.compute_dtype)
+                x = jnp.concatenate([pe, x], axis=1)
+            carry = (x, jnp.zeros((), jnp.float32))
+            if tied:
+                carry += (sp["embed"]["table"],)
+            return carry, None
+
+        def make_layer_fn():
+            def layer_fn(sp, carry):
+                x, aux = carry[0], carry[1]
+                b, s, _ = x.shape
+                positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+                x, aux, _ = self._scan_layers(sp, x, positions, "train",
+                                              None, None, aux0=aux)
+                return (x, aux) + carry[2:], None
+            return layer_fn
+
+        def head_fn(sp, carry):
+            x, moe_aux = carry[0], carry[1]
+            x = apply_norm(sp["final_norm"], x, cfg.norm, cfg.norm_eps)
+            if n_patches:
+                x = x[:, n_patches:, :]
+            w = carry[2] if tied else sp["head"]
+            logits = layers.lm_head(w, x, tied)
+            loss, n_tok = common.cross_entropy_loss(
+                logits, batch["targets"], label_smoothing=label_smoothing)
+            total = loss + 0.01 * moe_aux
+            return total, ({}, {"loss": loss, "moe_aux": moe_aux,
+                                "tokens": n_tok})
+
+        seg_fns = (embed_fn,) + tuple(make_layer_fn()
+                                      for _ in range(n_lseg)) + (head_fn,)
+
+        def split_tree(tree):
+            segs = [{k: tree[k] for k in emb_keys}]
+            for lo, hi in zip(bounds, bounds[1:]):
+                segs.append({
+                    f"sub{j}": jax.tree.map(lambda a: a[lo:hi],
+                                            tree[f"sub{j}"])
+                    for j in range(self.group)})
+            segs.append({k: tree[k] for k in head_keys})
+            return segs
+
+        def merge_grads(seg_grads):
+            full = dict(seg_grads[0])
+            full.update(seg_grads[-1])
+            for j in range(self.group):
+                full[f"sub{j}"] = jax.tree.map(
+                    lambda *s: jnp.concatenate(s, axis=0),
+                    *[sg[f"sub{j}"] for sg in seg_grads[1:-1]])
+            return full
+
+        def finalize_aux(auxes):
+            _state_frag, metrics = auxes[-1]
+            return model_state, metrics
+
+        return common.StagedLoss(
+            names=names, seg_params=tuple(split_tree(params)),
+            seg_fns=seg_fns, x0=jnp.zeros((), jnp.float32),
+            merge_grads=merge_grads, split_tree=split_tree,
+            finalize_aux=finalize_aux)
 
     # ---------------------------------------------------------------- serve
     def cache_shape(self, batch: int, max_seq: int, dtype=jnp.bfloat16):

@@ -18,11 +18,18 @@ format; ``dp_mode`` selects the mechanism):
     per-leaf, with ~leaf-count fewer collectives. Error-feedback
     residuals (``ParallelConfig.error_feedback``) thread through either
     explicit path.
+  * shard_map DP overlapped (``ParallelConfig.overlap_comm``): the
+    backward pass is split into per-segment VJPs (models expose
+    ``loss_segments``) and each ready-order bucket's psum is launched
+    the moment the bucket's last gradient leaf materializes, pipelined
+    one segment deep so communication hides behind the remaining
+    backward compute (DESIGN.md §8). Bitwise-identical gradients to the
+    non-overlapped bucketed path.
 """
 from __future__ import annotations
 
 import contextlib
-from typing import Any, Callable, Dict, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -133,7 +140,9 @@ def make_train_step(model, optimizer: Optimizer, train_cfg: TrainConfig,
                 state["params"], grads, state["opt"])
         metrics = dict(metrics)
         metrics.update(opt_metrics)
-        metrics["grad_norm"] = global_norm(grads)
+        if train_cfg.log_grad_norm:
+            # opt-in: a full extra tree reduction per step (DESIGN.md §8)
+            metrics["grad_norm"] = global_norm(grads)
         new_state = {"params": new_params, "opt": new_opt,
                      "model_state": new_mstate}
         return new_state, metrics
@@ -198,85 +207,29 @@ def make_decode_step(model, mesh=None, rules=None):
 # ---------------------------------------------------------------------------
 
 
-def make_dp_shardmap_train_step(model, optimizer: Optimizer,
-                                train_cfg: TrainConfig, mesh: Mesh,
-                                dp_axes: Sequence[str]):
-    """Synchronous data-parallel step exactly as the paper's system:
-    per-worker forward/backward, **half-precision all-reduce of
-    gradients**, replicated optimizer update. Model must be pure-DP
-    (params replicated), e.g. ResNet-50 or small LMs.
+def _pmean_metrics(metrics: Dict, dp_axes: Sequence[str]) -> Dict:
+    """One collective for all scalar metrics (stack -> pmean -> split)
+    instead of one tiny all-reduce per metric — keeps the step's
+    collective count at n_buckets + 1 in the bucketed modes."""
+    scalar_keys = sorted(k for k, v in metrics.items() if jnp.ndim(v) == 0)
+    if not scalar_keys:
+        return {k: jax.lax.pmean(v, dp_axes) for k, v in metrics.items()}
+    stacked = jax.lax.pmean(
+        jnp.stack([metrics[k].astype(jnp.float32) for k in scalar_keys]),
+        dp_axes)
+    return {**{k: jax.lax.pmean(v, dp_axes) for k, v in metrics.items()
+               if k not in scalar_keys},
+            **{k: stacked[i] for i, k in enumerate(scalar_keys)}}
 
-    ``compression="<wire>+bucketed"`` swaps the per-leaf psum for the
-    bucketed subsystem (one collective per ``bucket_bytes`` of wire
-    traffic, DESIGN.md §6); ``error_feedback=True`` threads rounding
-    residuals through either sync path (state gains an ``ef_residual``
-    entry, per-worker like the BN stats).
-    """
+
+def _wrap_dp_step(local_step, mesh: Mesh, dp_axes: Sequence[str],
+                  use_ef: bool):
+    """shard_map plumbing shared by the explicit-DP step builders:
+    params/opt replicated, model_state (and EF residual) per-worker."""
     from jax.experimental.shard_map import shard_map
 
-    from repro.distributed.bucketing import bucketed_psum, bucketed_psum_ef
-
-    parallel = train_cfg.parallel
-    wire, bucketed = parse_compression(parallel.compression)
-    use_ef = parallel.error_feedback
-    if use_ef and wire is None:
-        raise ValueError("error_feedback requires a wire dtype "
-                         f"(compression={parallel.compression!r})")
-    dp_axes = tuple(dp_axes)
-
-    def sync_grads(grads, residual):
-        """One of the four (per-leaf|bucketed) x (plain|EF) sync paths."""
-        if use_ef:
-            if bucketed:
-                return bucketed_psum_ef(
-                    grads, residual, dp_axes, wire=wire,
-                    bucket_bytes=parallel.bucket_bytes)
-            return compressed_psum_ef(grads, residual, dp_axes, wire)
-        if bucketed:
-            return bucketed_psum(grads, dp_axes, wire=wire,
-                                 bucket_bytes=parallel.bucket_bytes,
-                                 mean=True), None
-        return compressed_psum(grads, dp_axes, wire, mean=True), None
-
-    def local_step(params, mstate, opt, batch, residual=None):
-        # mstate leaves carry a leading per-worker dim (1, ...) locally
-        local_mstate = jax.tree.map(lambda x: x[0], mstate)
-        (loss, (new_mstate, metrics)), grads = jax.value_and_grad(
-            model.loss_fn, has_aux=True)(params, local_mstate, batch,
-                                         train_cfg.label_smoothing)
-        # ---- the paper's technique: fp16/bf16 compressed all-reduce ----
-        local_residual = (jax.tree.map(lambda x: x[0], residual)
-                          if use_ef else None)
-        grads, new_residual = sync_grads(grads, local_residual)
-        # one collective for all scalar metrics (stack -> pmean -> split)
-        # instead of one tiny all-reduce per metric — keeps the step's
-        # collective count at n_buckets + 1 in the bucketed mode
-        scalar_keys = sorted(k for k, v in metrics.items()
-                             if jnp.ndim(v) == 0)
-        if scalar_keys:
-            stacked = jax.lax.pmean(
-                jnp.stack([metrics[k].astype(jnp.float32)
-                           for k in scalar_keys]), dp_axes)
-            metrics = {**{k: jax.lax.pmean(v, dp_axes)
-                          for k, v in metrics.items()
-                          if k not in scalar_keys},
-                       **{k: stacked[i]
-                          for i, k in enumerate(scalar_keys)}}
-        else:
-            metrics = {k: jax.lax.pmean(v, dp_axes)
-                       for k, v in metrics.items()}
-        new_params, new_opt, opt_metrics = optimizer.update(
-            params, grads, opt)
-        metrics.update(opt_metrics)
-        metrics["grad_norm"] = global_norm(grads)
-        new_mstate = jax.tree.map(lambda x: x[None], new_mstate)
-        out = (new_params, new_mstate, new_opt, metrics)
-        if use_ef:
-            out += (jax.tree.map(lambda x: x[None], new_residual),)
-        return out
-
-    batch_spec = P(dp_axes)
-    state_spec = P(dp_axes)  # per-worker last-minibatch BN stats / EF
+    batch_spec = P(tuple(dp_axes))
+    state_spec = P(tuple(dp_axes))  # per-worker last-minibatch BN / EF
 
     def train_step(state, batch):
         in_specs = (
@@ -309,6 +262,182 @@ def make_dp_shardmap_train_step(model, optimizer: Optimizer,
         return new_state, metrics
 
     return train_step
+
+
+def make_dp_shardmap_train_step(model, optimizer: Optimizer,
+                                train_cfg: TrainConfig, mesh: Mesh,
+                                dp_axes: Sequence[str]):
+    """Synchronous data-parallel step exactly as the paper's system:
+    per-worker forward/backward, **half-precision all-reduce of
+    gradients**, replicated optimizer update. Model must be pure-DP
+    (params replicated), e.g. ResNet-50 or small LMs.
+
+    ``compression="<wire>+bucketed"`` swaps the per-leaf psum for the
+    bucketed subsystem (one collective per ``bucket_bytes`` of wire
+    traffic, DESIGN.md §6); ``error_feedback=True`` threads rounding
+    residuals through either sync path (state gains an ``ef_residual``
+    entry, per-worker like the BN stats).
+    """
+    from repro.distributed.bucketing import bucketed_psum, bucketed_psum_ef
+
+    parallel = train_cfg.parallel
+    wire, bucketed = parse_compression(parallel.compression)
+    use_ef = parallel.error_feedback
+    if use_ef and wire is None:
+        raise ValueError("error_feedback requires a wire dtype "
+                         f"(compression={parallel.compression!r})")
+    dp_axes = tuple(dp_axes)
+
+    def sync_grads(grads, residual):
+        """One of the four (per-leaf|bucketed) x (plain|EF) sync paths.
+
+        Returns (synced, new_residual, sq_norm). The bucketed paths get
+        the squared grad norm from one pass over the packed stream
+        instead of a second full-tree reduction (DESIGN.md §8)."""
+        if use_ef:
+            if bucketed:
+                return bucketed_psum_ef(
+                    grads, residual, dp_axes, wire=wire,
+                    bucket_bytes=parallel.bucket_bytes, with_sq_norm=True)
+            synced, new_residual = compressed_psum_ef(
+                grads, residual, dp_axes, wire)
+            return synced, new_residual, None
+        if bucketed:
+            synced, sq = bucketed_psum(grads, dp_axes, wire=wire,
+                                       bucket_bytes=parallel.bucket_bytes,
+                                       mean=True, with_sq_norm=True)
+            return synced, None, sq
+        return compressed_psum(grads, dp_axes, wire, mean=True), None, None
+
+    def local_step(params, mstate, opt, batch, residual=None):
+        # mstate leaves carry a leading per-worker dim (1, ...) locally
+        local_mstate = jax.tree.map(lambda x: x[0], mstate)
+        (loss, (new_mstate, metrics)), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(params, local_mstate, batch,
+                                         train_cfg.label_smoothing)
+        # ---- the paper's technique: fp16/bf16 compressed all-reduce ----
+        local_residual = (jax.tree.map(lambda x: x[0], residual)
+                          if use_ef else None)
+        grads, new_residual, sq_norm = sync_grads(grads, local_residual)
+        metrics = _pmean_metrics(metrics, dp_axes)
+        new_params, new_opt, opt_metrics = optimizer.update(
+            params, grads, opt)
+        metrics.update(opt_metrics)
+        metrics["grad_norm"] = (jnp.sqrt(sq_norm) if sq_norm is not None
+                                else global_norm(grads))
+        new_mstate = jax.tree.map(lambda x: x[None], new_mstate)
+        out = (new_params, new_mstate, new_opt, metrics)
+        if use_ef:
+            out += (jax.tree.map(lambda x: x[None], new_residual),)
+        return out
+
+    return _wrap_dp_step(local_step, mesh, dp_axes, use_ef)
+
+
+def make_dp_overlap_train_step(model, optimizer: Optimizer,
+                               train_cfg: TrainConfig, mesh: Mesh,
+                               dp_axes: Sequence[str]):
+    """Backward-overlapped bucketed DP step (DESIGN.md §8).
+
+    Same contract and bitwise-identical numerics as
+    ``make_dp_shardmap_train_step`` with ``"<wire>+bucketed"``
+    compression, but the gradient all-reduces launch *during* the
+    backward pass: the model's loss is split into K segments
+    (``model.loss_segments``), each segment's VJP is taken independently,
+    and every ready-order bucket's psum is issued the moment the
+    bucket's last leaf exists. ``optimization_barrier`` pins each
+    collective's completion one segment downstream of its launch, so the
+    interconnect works on bucket i while the VJP of segment i-1 computes
+    — the paper's "aggregate finished layers in parallel with backprop"
+    (Goyal et al. §Gradient aggregation; verified from the compiled HLO
+    by ``launch/hlo_analysis.py:interleave_report``).
+    """
+    from repro.core.compression import apply_error_feedback
+    from repro.distributed.bucketing import (
+        pack_bucket,
+        plan_ready_buckets,
+        unpack,
+    )
+    from repro.models.common import staged_forward
+
+    parallel = train_cfg.parallel
+    wire, _bucketed = parse_compression(parallel.compression)
+    use_ef = parallel.error_feedback
+    if use_ef and wire is None:
+        raise ValueError("error_feedback requires a wire dtype "
+                         f"(compression={parallel.compression!r})")
+    if not hasattr(model, "loss_segments"):
+        raise ValueError(
+            f"{type(model).__name__} has no loss_segments(); "
+            "overlap_comm needs a staged model (ResNet50 / TransformerLM,"
+            " DESIGN.md §8)")
+    dp_axes = tuple(dp_axes)
+
+    def local_step(params, mstate, opt, batch, residual=None):
+        local_mstate = jax.tree.map(lambda x: x[0], mstate)
+        staged = model.loss_segments(params, local_mstate, batch,
+                                     train_cfg.label_smoothing)
+        n_seg = len(staged)
+        # ---- forward: per-segment VJP chain ----
+        loss, vjps, auxes = staged_forward(staged)
+        # ready order = reverse segment order (last segment's grads
+        # materialize first); the plan is shape-only, so it is a trace
+        # constant like the treedef
+        plan = plan_ready_buckets(list(reversed(staged.seg_params)),
+                                  parallel.bucket_bytes, wire)
+        res_rev = None
+        if use_ef:
+            local_residual = jax.tree.map(lambda x: x[0], residual)
+            res_rev = list(reversed(staged.split_tree(local_residual)))
+        n = jax.lax.psum(1, dp_axes)
+        # ---- backward: VJP segment i, launch ready buckets, require
+        # completion only before segment i-2 (one-segment-deep pipeline:
+        # bucket i's wire time hides behind segment i-1's compute) ----
+        ct: Any = jnp.ones_like(loss)
+        synced: Dict[int, jax.Array] = {}
+        pending: List[List[int]] = []  # launched ids, newest last
+        pack_carry = None
+        new_res_rev: List[PyTree] = []
+        for ridx, i in enumerate(reversed(range(n_seg))):
+            if len(pending) >= 2:
+                ids = pending.pop(0)
+                if ids:
+                    barred = jax.lax.optimization_barrier(
+                        (ct, tuple(synced[b] for b in ids)))
+                    ct = barred[0]
+                    for b, v in zip(ids, barred[1]):
+                        synced[b] = v
+            g_seg, ct = vjps[i](ct)
+            if use_ef:
+                g_seg, r_new = apply_error_feedback(g_seg, res_rev[ridx],
+                                                    wire)
+                new_res_rev.append(r_new)
+            ready, pack_carry = pack_bucket(plan, ridx, g_seg, pack_carry)
+            launched = []
+            for b, arr in ready:
+                synced[b] = jax.lax.psum(arr, dp_axes)
+                launched.append(b)
+            pending.append(launched)
+        assert len(synced) == plan.n_buckets, (len(synced), plan.n_buckets)
+        stage_grads_rev, sq_norm = unpack(
+            [synced[b] for b in range(plan.n_buckets)], plan.base,
+            denom=n, with_sq_norm=True)
+        grads = staged.merge_grads(list(reversed(list(stage_grads_rev))))
+        new_mstate, metrics = staged.finalize_aux(auxes)
+        metrics = _pmean_metrics(metrics, dp_axes)
+        new_params, new_opt, opt_metrics = optimizer.update(
+            params, grads, opt)
+        metrics.update(opt_metrics)
+        metrics["grad_norm"] = jnp.sqrt(sq_norm)
+        new_mstate = jax.tree.map(lambda x: x[None], new_mstate)
+        out = (new_params, new_mstate, new_opt, metrics)
+        if use_ef:
+            new_residual = staged.merge_grads(
+                list(reversed(new_res_rev)))
+            out += (jax.tree.map(lambda x: x[None], new_residual),)
+        return out
+
+    return _wrap_dp_step(local_step, mesh, dp_axes, use_ef)
 
 
 def replicate_model_state(state: PyTree, n_workers: int) -> PyTree:

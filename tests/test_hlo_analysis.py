@@ -5,6 +5,8 @@ import numpy as np
 
 from repro.launch.hlo_analysis import (
     analyze_hlo,
+    comm_report,
+    interleave_report,
     parse_computations,
     type_bytes,
 )
@@ -60,3 +62,75 @@ def test_parse_computations_finds_entry():
     assert "__entry__" in comps
     opcodes = {o.opcode for ops in comps.values() for o in ops}
     assert "while" in opcodes and "dot" in opcodes
+
+
+# ---------------------------------------------------------------------------
+# interleave_report (DESIGN.md §8): synthetic scheduled programs
+# ---------------------------------------------------------------------------
+
+
+def _program(op_lines):
+    body = "\n".join(f"  {line}" for line in op_lines)
+    return ("HloModule m\n\n"
+            "ENTRY %main (p0: f32[1024]) -> f32[1024] {\n"
+            f"{body}\n"
+            "}\n")
+
+
+_CONV = ("%conv{i} = f32[1024]{{0}} convolution(%p0, %p0), "
+         "dim_labels=b0f_0io->b0f")
+_AR = ("%ar{i} = f32[1024]{{0}} all-reduce(%conv{j}), "
+       "replica_groups={{{{0,1}}}}, to_apply=%add")
+_TINY_AR = ("%tiny = f32[2]{{0}} all-reduce(%small), "
+            "replica_groups={{{{0,1}}}}, to_apply=%add")
+
+
+def test_interleave_report_rejects_tail_clustered():
+    """All collectives after all compute = the non-overlapped layout."""
+    lines = ["%p0 = f32[1024]{0} parameter(0)"]
+    lines += [_CONV.format(i=i) for i in range(4)]
+    lines += [_AR.format(i=i, j=i).replace("%ar", "%gar")
+              for i in range(3)]
+    lines += ["ROOT %out = f32[1024]{0} add(%gar0, %gar1)"]
+    r = interleave_report(_program(lines))
+    assert r["n_collectives"] == 3
+    assert r["compute_ops_after_first"] == 0
+    assert not r["interleaved"], r
+
+
+def test_interleave_report_accepts_interleaved():
+    """Collectives separated by conv compute = the overlapped layout;
+    sub-threshold metric pmeans must not count as gradient collectives."""
+    lines = ["%p0 = f32[1024]{0} parameter(0)",
+             "%small = f32[2]{0} slice(%p0), slice={[0:2]}"]
+    for i in range(3):
+        lines.append(_CONV.format(i=i))
+        lines.append(_AR.format(i=i, j=i))
+    lines.append(_TINY_AR.format())
+    lines.append("ROOT %out = f32[1024]{0} add(%ar0, %ar1)")
+    r = interleave_report(_program(lines))
+    assert r["n_collectives"] == 3  # tiny pmean excluded by byte floor
+    assert r["interleaved"], r
+    assert r["compute_ops_between_first_last"] == 2
+    assert r["gaps_with_compute"] == 2
+
+
+def test_interleave_report_no_collectives():
+    r = interleave_report(_program(
+        ["%p0 = f32[1024]{0} parameter(0)",
+         _CONV.format(i=0),
+         "ROOT %out = f32[1024]{0} add(%conv0, %conv0)"]))
+    assert r["n_collectives"] == 0 and not r["interleaved"]
+
+
+def test_comm_report_embeds_interleave_section():
+    txt = _program(
+        ["%p0 = f32[1024]{0} parameter(0)",
+         _CONV.format(i=0),
+         _AR.format(i=0, j=0),
+         _CONV.format(i=1).replace("%conv1", "%convlate"),
+         _AR.format(i=1, j=0),
+         "ROOT %out = f32[1024]{0} add(%ar0, %ar1)"])
+    cr = comm_report(analyze_hlo(txt, 2), hlo_text=txt)
+    assert cr["interleave"]["interleaved"]
+    assert "interleave" not in comm_report(analyze_hlo(txt, 2))

@@ -31,6 +31,31 @@ class TestFusedUpdate:
         np.testing.assert_allclose(got[2], want[2], atol=1e-5)
         assert got[0].shape == shape and got[0].dtype == dtype
 
+    @pytest.mark.parametrize("rows", [513, 1021])
+    def test_non_block_multiple_rows(self, rows, key):
+        """fused_update_2d pads the row stream to a block multiple and
+        slices the outputs, so arbitrary parameter counts keep
+        full-width tiles instead of asserting (or degrading to 1-row
+        blocks). 513 and 1021 share no factor with block_rows=512."""
+        from repro.kernels import fused_update as fu
+        ks = jax.random.split(key, 4)
+        g = jax.random.normal(ks[0], (rows, fu.LANES))
+        p = jax.random.normal(ks[1], (rows, fu.LANES))
+        d = jax.random.normal(ks[2], (rows, fu.LANES))
+        m = jnp.abs(jax.random.normal(ks[3], (rows, fu.LANES)))
+        h = HybridHyper(eta=jnp.float32(0.7), alpha_sgd=jnp.float32(0.3))
+        scalars = jnp.stack([h.eta, h.alpha_sgd]).reshape(1, 2)
+        outs = fu.fused_update_2d(
+            g, p, d, m, scalars, mu1=h.mu1, mu2=h.mu2, eps=h.eps,
+            eta_rmsprop=h.eta_rmsprop, weight_decay=1e-4, interpret=True)
+        want = ref.hybrid_update(g, p, d, m, eta=0.7, alpha_sgd=0.3,
+                                 weight_decay=1e-4)
+        for got_x, want_x in zip(outs, want):
+            assert got_x.shape == (rows, fu.LANES)
+            assert np.all(np.isfinite(np.asarray(got_x)))
+            np.testing.assert_allclose(np.asarray(got_x),
+                                       np.asarray(want_x), atol=1e-5)
+
     def test_alpha_one_is_sgd(self, key):
         g = jax.random.normal(key, (256,))
         p = jnp.zeros((256,))
