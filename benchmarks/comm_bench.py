@@ -1,9 +1,10 @@
-"""Gradient-sync microbenchmark: per-leaf vs bucketed compressed psum.
+"""Gradient-sync microbenchmark: per-leaf vs bucketed compressed psum vs
+the ZeRO reduce-scatter + all-gather wire pattern.
 
-Measures the communication layer in isolation (DESIGN.md §6): for each
-config's gradient pytree, time one explicit-DP sync step per mode on a
-host-device mesh and report the HLO-verified collective count, bytes per
-collective, and wire dtype next to the wall-clock numbers.
+Measures the communication layer in isolation (DESIGN.md §6/§9): for
+each config's gradient pytree, time one explicit-DP sync step per mode
+on a host-device mesh and report the HLO-verified collective count,
+bytes per collective, and wire dtype next to the wall-clock numbers.
 
     python benchmarks/comm_bench.py [--devices 8] [--iters 20] \
         [--archs resnet50,llama3.2-1b] [--full] [--bucket-mib 64] \
@@ -60,11 +61,28 @@ def grad_tree(arch: str, full: bool):
 
 def build_sync(mode, mesh, grads, wire, bucket_bytes):
     """jitted replicated-in/replicated-out sync step for one mode."""
+    n_dev = mesh.shape["data"]
+
     def local(g):
         if mode == "bucketed":
             return bucketed_psum(g, ("data",), wire=wire,
                                  bucket_bytes=bucket_bytes,
                                  use_kernel=False)
+        if mode == "zero":
+            # the ZeRO wire pattern in isolation (DESIGN.md §9):
+            # reduce-scatter each shard-aligned bucket, all-gather the
+            # shards straight back (stand-in for the updated params),
+            # unpack — numerically the same mean tree as bucketed
+            from repro.distributed.bucketing import pack, unpack
+            plan = plan_buckets(g, bucket_bytes, wire, align=n_dev)
+            shards = [jax.lax.psum_scatter(b, "data",
+                                           scatter_dimension=0,
+                                           tiled=True)
+                      for b in pack(g, plan, use_kernel=False)]
+            gathered = [jax.lax.all_gather(s, "data", tiled=True)
+                        for s in shards]
+            return unpack(gathered, plan, use_kernel=False,
+                          denom=jax.lax.psum(1, ("data",)))
         return compressed_psum(g, ("data",), wire, mean=True)
 
     specs = jax.tree.map(lambda _: P(), grads)
@@ -110,7 +128,7 @@ def main():
         n_leaves = len(jax.tree.leaves(grads))
         plan = plan_buckets(grads, bucket_bytes, args.wire)
         print(f"[{cfg.name}] {plan.describe()}")
-        for mode in ("per-leaf", "bucketed"):
+        for mode in ("per-leaf", "bucketed", "zero"):
             fn = build_sync(mode, mesh, grads, args.wire, bucket_bytes)
             hlo = fn.lower(grads).compile().as_text()
             cr = comm_report(analyze_hlo(hlo, n_dev))
@@ -134,9 +152,12 @@ def main():
     for name, mode, *_rest, ms in rows:
         by.setdefault(name, {})[mode] = ms
     for name, d in by.items():
-        if len(d) == 2:
+        if "per-leaf" in d and "bucketed" in d:
             print(f"{name}: bucketed is {d['per-leaf'] / d['bucketed']:.2f}x"
                   f" per-leaf wall-clock on {n_dev} host devices")
+        if "bucketed" in d and "zero" in d:
+            print(f"{name}: zero (scatter+gather) is "
+                  f"{d['bucketed'] / d['zero']:.2f}x bucketed wall-clock")
     if args.out:
         with open(args.out, "w") as f:
             json.dump({

@@ -1,15 +1,19 @@
-"""End-to-end train-step benchmark across the four gradient-sync modes.
+"""End-to-end train-step benchmark across the six gradient-sync modes.
 
 Times one full optimizer step (fwd + bwd + sync + update) of reduced
 ResNet-50 on an 8-virtual-device host mesh for:
 
-  gspmd               jit + NamedShardings, XLA-placed collectives
-  shardmap_perleaf    explicit DP, one bf16 psum per gradient leaf
-  shardmap_bucketed   explicit DP, one psum per fixed-size bucket (§6)
-  shardmap_overlap    bucketed + backward-overlapped launch (§8)
+  gspmd                 jit + NamedShardings, XLA-placed collectives
+  shardmap_perleaf      explicit DP, one bf16 psum per gradient leaf
+  shardmap_bucketed     explicit DP, one psum per fixed-size bucket (§6)
+  shardmap_overlap      bucketed + backward-overlapped launch (§8)
+  shardmap_zero         bucketed + ZeRO reduce-scatter / sharded
+                        update / param all-gather (§9)
+  shardmap_zero_overlap zero + backward-overlapped scatter launch
 
 and writes a top-level ``BENCH_step.json`` so every PR leaves a
-steps/sec trajectory point behind (CI uploads it as an artifact).
+steps/sec trajectory point behind (CI uploads it as an artifact; its
+schema is pinned by tests/test_bench_schema.py).
 
     PYTHONPATH=src python benchmarks/step_bench.py [--quick] \
         [--out BENCH_step.json]
@@ -50,6 +54,11 @@ MODES = {
     "shardmap_overlap": dict(dp_mode="shardmap",
                              compression="bf16+bucketed",
                              overlap_comm=True),
+    "shardmap_zero": dict(dp_mode="shardmap",
+                          compression="bf16+bucketed", zero_dp=True),
+    "shardmap_zero_overlap": dict(dp_mode="shardmap",
+                                  compression="bf16+bucketed",
+                                  zero_dp=True, overlap_comm=True),
 }
 
 
@@ -108,6 +117,8 @@ def main():
 
     overlap_speedup = (modes["shardmap_bucketed"]["ms_per_step"]
                        / modes["shardmap_overlap"]["ms_per_step"])
+    zero_speedup = (modes["shardmap_bucketed"]["ms_per_step"]
+                    / modes["shardmap_zero"]["ms_per_step"])
     result = {
         "bench": "step_bench",
         "devices": jax.device_count(),
@@ -118,11 +129,12 @@ def main():
         "iters": args.iters,
         "modes": modes,
         "overlap_vs_bucketed_speedup": round(overlap_speedup, 3),
+        "zero_vs_bucketed_speedup": round(zero_speedup, 3),
     }
     with open(args.out, "w") as f:
         json.dump(result, f, indent=1)
-    print(f"overlap vs bucketed: {overlap_speedup:.2f}x "
-          f"-> wrote {args.out}")
+    print(f"overlap vs bucketed: {overlap_speedup:.2f}x, "
+          f"zero vs bucketed: {zero_speedup:.2f}x -> wrote {args.out}")
 
 
 if __name__ == "__main__":

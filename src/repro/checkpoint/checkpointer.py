@@ -140,10 +140,11 @@ def save_best(directory: str, step: int, state: PyTree,
 
 
 def restore_best(directory: str, target: Optional[PyTree] = None,
-                 shardings: Optional[PyTree] = None) -> Tuple[PyTree, Dict]:
+                 shardings: Optional[PyTree] = None,
+                 transform=None) -> Tuple[PyTree, Dict]:
     """Restore the retained best checkpoint (see ``save_best``)."""
     return restore(os.path.join(directory, BEST_DIR), target=target,
-                   shardings=shardings)
+                   shardings=shardings, transform=transform)
 
 
 def list_checkpoints(directory: str):
@@ -166,11 +167,17 @@ def list_checkpoints(directory: str):
 
 def restore(directory: str, step: Optional[int] = None,
             target: Optional[PyTree] = None,
-            shardings: Optional[PyTree] = None) -> Tuple[PyTree, Dict]:
+            shardings: Optional[PyTree] = None,
+            transform=None) -> Tuple[PyTree, Dict]:
     """Restore ``step`` (default: newest valid). If ``target`` is given,
     arrays are unflattened into its structure; with ``shardings`` each
     leaf is device_put with its (possibly new-topology) sharding —
-    the elastic-restart path."""
+    the elastic-restart path.
+
+    ``transform(arrays, manifest) -> arrays`` rewrites the loaded array
+    dict before key matching — the resharding hook that lets a --zero
+    run restore a tree-layout checkpoint and vice versa
+    (``optim/stream.py:make_zero_restore_transform``, DESIGN.md §9)."""
     steps = list_checkpoints(directory)
     if not steps:
         raise FileNotFoundError(f"no valid checkpoint under {directory}")
@@ -180,6 +187,8 @@ def restore(directory: str, step: Optional[int] = None,
         manifest = json.load(f)
     with np.load(os.path.join(path, ARRAYS)) as z:
         arrays = {k: z[k] for k in z.files}
+    if transform is not None:
+        arrays = transform(arrays, manifest)
     if target is None:
         return arrays, manifest
     flat, treedef = jax.tree_util.tree_flatten_with_path(target)

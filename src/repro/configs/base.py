@@ -301,6 +301,13 @@ class ParallelConfig:
     # by the backward pass (ready-order bucketing + staged VJP,
     # DESIGN.md §8); shard_map DP only, requires a staged model
     overlap_comm: bool = False
+    # ZeRO reduce-scatter sync (--zero, DESIGN.md §9): psum_scatter each
+    # packed bucket, run the optimizer update only on the worker-owned
+    # shard of the stream (delta/m sharded over dp), all-gather the
+    # updated param slices back. shard_map DP + bucketed compression
+    # only; composes with overlap_comm. Distinct from zero_1, which is
+    # the GSPMD-mode sharding-constraint flavor of the same idea.
+    zero_dp: bool = False
     remat: str = "block"  # none | block  (activation checkpoint per layer)
     sequence_sharding: bool = False  # shard seq dim of activations (SP)
     kv_seq_sharding: bool = False  # serve: shard KV cache seq on model

@@ -57,6 +57,13 @@ class BucketPlan:
     Derived from shapes only, so one plan serves every step (it is
     closed over by the jitted train step, like the tree structure
     itself).
+
+    ``pad_elems`` is the zero tail appended after the last leaf so the
+    final bucket's length is a multiple of ``align`` — the shard-aligned
+    layout the ZeRO sync mode needs (every bucket must split evenly
+    across the DP ranks for ``psum_scatter``, DESIGN.md §9). The default
+    ``align=1`` keeps the historical truncated-last-bucket layout
+    (``pad_elems == 0``): a pad reduced over the wire for nothing.
     """
 
     treedef: Any
@@ -66,13 +73,19 @@ class BucketPlan:
     n_buckets: int
     wire: Optional[str]  # wire dtype name, None = no cast
     stream_dtype: Any  # wire dtype, or the (uniform) leaf dtype if None
+    align: int = 1  # every bucket length is a multiple of this
+    pad_elems: int = 0  # zero tail making the last bucket align-even
+
+    @property
+    def padded_total(self) -> int:
+        return self.total_elems + self.pad_elems
 
     def bucket_bounds(self, i: int) -> Tuple[int, int]:
-        """Element range of bucket ``i``. All buckets are ``bucket_elems``
-        long except the last, which is truncated to the stream end — a
-        tail of zero-padding would be reduced over the wire for nothing."""
+        """Element range of bucket ``i`` within the (padded) stream. All
+        buckets are ``bucket_elems`` long except the last, which ends at
+        the padded stream end (== ``total_elems`` when ``align == 1``)."""
         lo = i * self.bucket_elems
-        return lo, min(lo + self.bucket_elems, self.total_elems)
+        return lo, min(lo + self.bucket_elems, self.padded_total)
 
     @property
     def bucket_bytes(self) -> int:
@@ -81,17 +94,38 @@ class BucketPlan:
     def describe(self) -> str:
         itemsize = jnp.dtype(self.stream_dtype).itemsize
         total_mib = self.total_elems * itemsize / 2 ** 20
+        pad = f" +{self.pad_elems}pad" if self.pad_elems else ""
         return (f"{len(self.slots)} leaves / {total_mib:.1f} MiB wire "
                 f"-> {self.n_buckets} bucket(s) of "
                 f"<= {self.bucket_bytes / 2**20:.0f} MiB "
-                f"({self.wire or 'f32'} wire)")
+                f"({self.wire or 'f32'} wire{pad})")
+
+
+def stream_layout(total_elems: int, bucket_bytes: int, itemsize: int,
+                  align: int = 1) -> Tuple[int, int, int]:
+    """The pure bucket arithmetic shared by every plan flavor: returns
+    ``(bucket_elems, n_buckets, pad_elems)`` for a stream of
+    ``total_elems``. Layout depends only on these scalars — never on
+    leaf order — which is why the plain (pytree-order) and ready-order
+    plans of the same tree have identical padded lengths and the ZeRO
+    optimizer-state size can be computed without a plan."""
+    if align < 1:
+        raise ValueError(f"align must be >= 1, got {align}")
+    bucket_elems = max(1, int(bucket_bytes) // itemsize)
+    bucket_elems = -(-bucket_elems // align) * align  # round UP to align
+    n_buckets = max(1, -(-total_elems // bucket_elems))
+    last = total_elems - (n_buckets - 1) * bucket_elems
+    pad_elems = (-last) % align
+    return bucket_elems, n_buckets, pad_elems
 
 
 def plan_buckets(grads: PyTree,
                  bucket_bytes: int = DEFAULT_BUCKET_BYTES,
-                 wire: Optional[str] = "bf16") -> BucketPlan:
+                 wire: Optional[str] = "bf16",
+                 align: int = 1) -> BucketPlan:
     """Lay out the gradient pytree as a contiguous wire-dtype stream cut
-    into fixed-size buckets. Works on arrays or ShapeDtypeStructs."""
+    into fixed-size buckets. Works on arrays or ShapeDtypeStructs.
+    ``align > 1`` pads every bucket to an ``align`` multiple (ZeRO)."""
     leaves, treedef = jax.tree.flatten(grads)
     if not leaves:
         raise ValueError("cannot plan buckets for an empty gradient tree")
@@ -108,7 +142,6 @@ def plan_buckets(grads: PyTree,
         sdt = next(iter(leaf_dtypes))
     else:
         sdt = jnp.dtype(wdt)
-    bucket_elems = max(1, int(bucket_bytes) // sdt.itemsize)
     slots: List[LeafSlot] = []
     offset = 0
     for leaf in leaves:
@@ -116,10 +149,12 @@ def plan_buckets(grads: PyTree,
         slots.append(LeafSlot(offset=offset, size=size,
                               shape=tuple(leaf.shape), dtype=leaf.dtype))
         offset += size
-    n_buckets = max(1, -(-offset // bucket_elems))
+    bucket_elems, n_buckets, pad_elems = stream_layout(
+        offset, bucket_bytes, sdt.itemsize, align)
     return BucketPlan(treedef=treedef, slots=tuple(slots),
                       total_elems=offset, bucket_elems=bucket_elems,
-                      n_buckets=n_buckets, wire=wire, stream_dtype=sdt)
+                      n_buckets=n_buckets, wire=wire, stream_dtype=sdt,
+                      align=align, pad_elems=pad_elems)
 
 
 def _kernel_on(use_kernel: Optional[bool]) -> bool:
@@ -154,9 +189,13 @@ def _cast_stream(leaves: List[jax.Array], sdt,
 def pack(grads: PyTree, plan: BucketPlan,
          use_kernel: Optional[bool] = None) -> List[jax.Array]:
     """Gradient pytree -> list of ``n_buckets`` wire-dtype bucket arrays
-    (``_cast_stream`` + fixed-offset slicing)."""
+    (``_cast_stream`` + fixed-offset slicing; shard-aligned plans get
+    their zero tail here)."""
     leaves = plan.treedef.flatten_up_to(grads)
     stream = _cast_stream(leaves, plan.stream_dtype, use_kernel)
+    if plan.pad_elems:
+        stream = jnp.concatenate(
+            [stream, jnp.zeros((plan.pad_elems,), plan.stream_dtype)])
     bounds = [plan.bucket_bounds(i) for i in range(plan.n_buckets)]
     return [jax.lax.slice(stream, (lo,), (hi,)) for lo, hi in bounds]
 
@@ -305,7 +344,8 @@ class ReadyBucketPlan:
 
 def plan_ready_buckets(stage_trees: Sequence[PyTree],
                        bucket_bytes: int = DEFAULT_BUCKET_BYTES,
-                       wire: Optional[str] = "bf16") -> ReadyBucketPlan:
+                       wire: Optional[str] = "bf16",
+                       align: int = 1) -> ReadyBucketPlan:
     """Lay out per-stage gradient trees (given in backward-completion
     order) as one contiguous stream cut into fixed-size buckets.
 
@@ -313,11 +353,13 @@ def plan_ready_buckets(stage_trees: Sequence[PyTree],
     ``plan_buckets`` — only *where* each leaf sits in the stream changes
     (completion order instead of pytree order), which is exactly what
     makes overlap possible and exactly what cannot change numerics
-    (elementwise cast/sum/cast/divide is position-independent)."""
+    (elementwise cast/sum/cast/divide is position-independent). The
+    shard-aligned tail (``align > 1``, ZeRO) belongs to the last bucket,
+    so it closes at the same stage as the last real gradient element."""
     stage_trees = tuple(stage_trees)
     if not stage_trees:
         raise ValueError("need at least one stage tree")
-    base = plan_buckets(stage_trees, bucket_bytes, wire)
+    base = plan_buckets(stage_trees, bucket_bytes, wire, align=align)
     ends: List[int] = []
     off = 0
     for t in stage_trees:
@@ -327,8 +369,10 @@ def plan_ready_buckets(stage_trees: Sequence[PyTree],
     ready = []
     for b in range(base.n_buckets):
         _, hi = base.bucket_bounds(b)
-        # first stage whose cumulative end covers the bucket's last elem
-        stage = next(i for i, e in enumerate(ends) if e >= hi)
+        # first stage whose cumulative end covers the bucket's last REAL
+        # element (the zero tail of a shard-aligned plan needs no stage)
+        hi_real = min(hi, base.total_elems)
+        stage = next(i for i, e in enumerate(ends) if e >= hi_real)
         ready.append(stage)
     return ReadyBucketPlan(base=base, stage_ends=tuple(ends),
                            ready_stage=tuple(ready))
@@ -373,8 +417,102 @@ def pack_bucket(plan: ReadyBucketPlan, stage_idx: int,
     emitted_end = stream_start
     for b in plan.buckets_ready_at(stage_idx):
         lo, hi = plan.base.bucket_bounds(b)
-        assert lo >= stream_start and hi <= fed_end, (b, lo, hi)
-        ready.append((b, view(lo, hi)))
-        emitted_end = hi
+        # a shard-aligned plan's final bucket extends past the last real
+        # element; ONLY that alignment tail may be zero-filled here — a
+        # bucket marked ready before its last real element is fed must
+        # still trip the assert, never sync zeros in its place
+        hi_real = min(hi, plan.base.total_elems)
+        assert lo >= stream_start and hi_real <= fed_end, (b, lo, hi)
+        arr = view(lo, hi_real)
+        if hi > hi_real:
+            arr = jnp.concatenate(
+                [arr, jnp.zeros((hi - hi_real,), plan.base.stream_dtype)])
+        ready.append((b, arr))
+        emitted_end = hi_real
     new_carry = view(emitted_end, fed_end)
     return ready, new_carry
+
+
+# ---------------------------------------------------------------------------
+# ZeRO shard layout (reduce-scatter sync mode, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+#
+# With a shard-aligned plan (``align = n_shards``) every bucket splits
+# evenly across the DP ranks, so ``psum_scatter`` hands worker ``w`` the
+# contiguous chunk ``[lo_b + w*c_b, lo_b + (w+1)*c_b)`` of each reduced
+# bucket. A worker's *shard* is the concatenation of its per-bucket
+# chunks (bucket order), and the *shard layout* of the whole stream is
+# the worker-major concatenation of all shards — the layout the sharded
+# optimizer state (delta/m) lives in, and the layout the checkpoint
+# resharding path (optim/stream.py) converts from/to.
+
+
+def shard_chunks(plan: BucketPlan, n_shards: int) -> Tuple[int, ...]:
+    """Per-bucket chunk length owned by each of ``n_shards`` workers."""
+    sizes = []
+    for b in range(plan.n_buckets):
+        lo, hi = plan.bucket_bounds(b)
+        if (hi - lo) % n_shards:
+            raise ValueError(
+                f"bucket {b} has {hi - lo} elements, not divisible by "
+                f"{n_shards} shards; plan with align={n_shards}")
+        sizes.append((hi - lo) // n_shards)
+    return tuple(sizes)
+
+
+def shard_size(plan: BucketPlan, n_shards: int) -> int:
+    """Elements per worker shard (== padded_total / n_shards)."""
+    return sum(shard_chunks(plan, n_shards))
+
+
+def local_shard(stream: jax.Array, plan: BucketPlan, n_shards: int,
+                shard_idx) -> jax.Array:
+    """Worker ``shard_idx``'s shard of a full packed (padded) stream —
+    the concatenation of its per-bucket chunks. ``shard_idx`` may be a
+    traced scalar (``jax.lax.axis_index`` inside shard_map)."""
+    parts = []
+    for b, c in enumerate(shard_chunks(plan, n_shards)):
+        lo, _ = plan.bucket_bounds(b)
+        parts.append(jax.lax.dynamic_slice(stream, (lo + shard_idx * c,),
+                                           (c,)))
+    return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+
+def split_shard(shard: jax.Array, plan: BucketPlan,
+                n_shards: int) -> List[jax.Array]:
+    """Inverse bookkeeping of ``local_shard``: cut a worker shard back
+    into its per-bucket chunks (static offsets)."""
+    chunks = shard_chunks(plan, n_shards)
+    out, off = [], 0
+    for c in chunks:
+        out.append(jax.lax.slice(shard, (off,), (off + c,)))
+        off += c
+    return out
+
+
+def shard_perm(plan: BucketPlan, n_shards: int):
+    """Gather indices ``perm`` with ``shard_layout = stream[perm]``:
+    worker-major, bucket order within each worker. A plain numpy array —
+    the permutation is a plan constant used host-side by the checkpoint
+    resharding path."""
+    import numpy as np
+
+    idx = []
+    chunks = shard_chunks(plan, n_shards)
+    for w in range(n_shards):
+        for b, c in enumerate(chunks):
+            lo, _ = plan.bucket_bounds(b)
+            idx.append(np.arange(lo + w * c, lo + (w + 1) * c))
+    return np.concatenate(idx)
+
+
+def stream_to_shard_layout(arr, plan: BucketPlan, n_shards: int):
+    """Reorder a padded-stream-order array into shard layout."""
+    return arr[shard_perm(plan, n_shards)]
+
+
+def shard_layout_to_stream(arr, plan: BucketPlan, n_shards: int):
+    """Inverse of ``stream_to_shard_layout``."""
+    import numpy as np
+
+    return arr[np.argsort(shard_perm(plan, n_shards), kind="stable")]

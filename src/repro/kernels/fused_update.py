@@ -41,15 +41,42 @@ def _kernel(scalars_ref, g_ref, p_ref, d_ref, m_ref,
     m_out[...] = m_new
 
 
+def _kernel_wd(scalars_ref, g_ref, p_ref, d_ref, m_ref, wd_ref,
+               p_out, d_out, m_out, *, mu1, mu2, eps, eta_rmsprop):
+    """Per-element weight-decay variant: the ZeRO packed shard spans
+    decayed and no-decay leaves, so wd rides in as a 5th stream (0.0
+    where the leaf is exempt) instead of a compile-time scalar."""
+    eta = scalars_ref[0, 0]
+    a_sgd = scalars_ref[0, 1]
+    g = g_ref[...]
+    p = p_ref[...]
+    d = d_ref[...]
+    m = m_ref[...]
+    g = g + wd_ref[...] * p
+    m_new = mu2 * m + (1.0 - mu2) * g * g
+    a_rms = (1.0 - a_sgd) * eta_rmsprop / eta
+    coef = a_sgd + a_rms / (jnp.sqrt(m_new) + eps)
+    d_new = mu1 * d - coef * g
+    p_out[...] = p + eta * d_new
+    d_out[...] = d_new
+    m_out[...] = m_new
+
+
 def fused_update_2d(g, p, d, m, scalars, *, mu1, mu2, eps, eta_rmsprop,
                     weight_decay, interpret=True, block_rows=BLOCK_ROWS):
     """g/p/d/m: (rows, 128) fp32; scalars: (1, 2) [eta, alpha_sgd].
+
+    ``weight_decay`` is either a python float (baked into the kernel, the
+    per-leaf tree-update path) or a (rows, 128) fp32 array of per-element
+    decay factors (the ZeRO packed-shard path, DESIGN.md §9).
 
     Arbitrary row counts are supported: the streams are zero-padded (m
     with ones, so sqrt/eps stays benign) up to a ``block_rows`` multiple
     and the outputs sliced back — full-width tiles for any parameter
     count instead of degrading to tiny blocks or asserting.
     """
+    wd_arr = None if isinstance(weight_decay, (int, float)) \
+        else weight_decay
     rows = g.shape[0]
     block_rows = min(block_rows, rows)
     pad = (-rows) % block_rows
@@ -59,23 +86,34 @@ def fused_update_2d(g, p, d, m, scalars, *, mu1, mu2, eps, eta_rmsprop,
         p = jnp.pad(p, zrow)
         d = jnp.pad(d, zrow)
         m = jnp.pad(m, zrow, constant_values=1.0)
+        if wd_arr is not None:
+            wd_arr = jnp.pad(wd_arr, zrow)
     padded_rows = rows + pad
     grid = (padded_rows // block_rows,)
     tile = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
     scalar_spec = pl.BlockSpec((1, 2), lambda i: (0, 0))
-    kernel = functools.partial(
-        _kernel, mu1=mu1, mu2=mu2, eps=eps, eta_rmsprop=eta_rmsprop,
-        weight_decay=weight_decay)
     out_shape = [jax.ShapeDtypeStruct((padded_rows, LANES),
                                       jnp.float32)] * 3
+    if wd_arr is None:
+        kernel = functools.partial(
+            _kernel, mu1=mu1, mu2=mu2, eps=eps, eta_rmsprop=eta_rmsprop,
+            weight_decay=weight_decay)
+        in_specs = [scalar_spec, tile, tile, tile, tile]
+        args = (scalars, g, p, d, m)
+    else:
+        kernel = functools.partial(
+            _kernel_wd, mu1=mu1, mu2=mu2, eps=eps,
+            eta_rmsprop=eta_rmsprop)
+        in_specs = [scalar_spec, tile, tile, tile, tile, tile]
+        args = (scalars, g, p, d, m, wd_arr)
     outs = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[scalar_spec, tile, tile, tile, tile],
+        in_specs=in_specs,
         out_specs=[tile, tile, tile],
         out_shape=out_shape,
         interpret=interpret,
-    )(scalars, g, p, d, m)
+    )(*args)
     if pad:
         outs = [o[:rows] for o in outs]
     return tuple(outs)

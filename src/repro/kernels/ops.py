@@ -27,11 +27,13 @@ def _interpret() -> bool:
 # ---------------------------------------------------------------------------
 
 
-def fused_hybrid_update(g, p, d, m, h, weight_decay: float = 0.0) -> Tuple:
+def fused_hybrid_update(g, p, d, m, h, weight_decay=0.0) -> Tuple:
     """Drop-in for core.optimizer.hybrid_update: (theta', delta', m').
 
     Flattens the leaf to (rows, 128) fp32 tiles, pads the tail, runs the
-    one-pass Pallas update, unpads.
+    one-pass Pallas update, unpads. ``weight_decay`` may be a scalar
+    (per-leaf tree update) or an array shaped like the leaf (ZeRO
+    packed-shard update with per-element decay, DESIGN.md §9).
     """
     orig_shape = p.shape
     orig_dtype = p.dtype
@@ -47,6 +49,8 @@ def fused_hybrid_update(g, p, d, m, h, weight_decay: float = 0.0) -> Tuple:
 
     scalars = jnp.stack([jnp.asarray(h.eta, jnp.float32),
                          jnp.asarray(h.alpha_sgd, jnp.float32)]).reshape(1, 2)
+    if not isinstance(weight_decay, (int, float)):
+        weight_decay = flat(weight_decay)
     # fused_update_2d pads the row stream to a block multiple internally,
     # so any row count gets full-width tiles (no divisor search needed)
     p_new, d_new, m_new = _fu.fused_update_2d(

@@ -102,7 +102,8 @@ def lower_cell(arch: str, shape_name: str, mesh: Mesh, *,
                opt_cfg: Optional[OptimizerConfig] = None,
                microbatches: int = 1,
                compression: Optional[str] = "__default__",
-               overlap_comm: bool = False):
+               overlap_comm: bool = False,
+               zero_dp: bool = False):
     """Build + lower + compile one cell. Returns (record, compiled)."""
     cfg = get_config(arch)
     shp = {s.name: s for s in shapes_for(cfg)}[shape_name]
@@ -124,6 +125,16 @@ def lower_cell(arch: str, shape_name: str, mesh: Mesh, *,
             raise ValueError("--overlap-comm requires --dp-mode shardmap "
                              "(DESIGN.md §8)")
         parallel = dataclasses.replace(parallel, overlap_comm=True)
+    if zero_dp:
+        from repro.core.compression import parse_compression
+        if dp_mode != "shardmap":
+            raise ValueError("--zero requires --dp-mode shardmap "
+                             "(DESIGN.md §9)")
+        if not parse_compression(parallel.compression)[1]:
+            raise ValueError(
+                "--zero reduce-scatters packed buckets: pass a bucketed "
+                f"--compression (got {parallel.compression!r})")
+        parallel = dataclasses.replace(parallel, zero_dp=True)
     rules = make_rules(cfg, mesh, parallel)
     compute_dtype = jnp.bfloat16
 
@@ -146,23 +157,41 @@ def lower_cell(arch: str, shape_name: str, mesh: Mesh, *,
         p_shapes, p_axes = param_specs(model, jnp.float32)
         opt_cfg = OptimizerConfig(kind="rmsprop_warmup")
         train_cfg = TrainConfig(optimizer=opt_cfg, parallel=parallel)
-        optimizer = make_optimizer(opt_cfg, steps_per_epoch=40,
-                                   global_batch=shp.global_batch)
-        opt_shapes = jax.eval_shape(optimizer.init, p_shapes)
         n_workers = 1
         for a in parallel.dp_axes:
             n_workers *= mesh.shape[a]
+        repl = NamedSharding(mesh, P())
+        dp_shard = NamedSharding(mesh, P(parallel.dp_axes))
+        if parallel.zero_dp:
+            # flat shard-layout delta/m, sharded over the dp axes
+            # (optim/stream.py, DESIGN.md §9)
+            from repro.optim.stream import (
+                make_stream_optimizer,
+                zero_padded_total,
+            )
+            optimizer = make_stream_optimizer(
+                opt_cfg, steps_per_epoch=40,
+                global_batch=shp.global_batch)
+            padded_total = zero_padded_total(
+                p_shapes, parallel.compression, parallel.bucket_bytes,
+                n_workers)
+            opt_shapes = jax.eval_shape(
+                lambda: optimizer.init(padded_total))
+            opt_shard = {"step": repl, "delta": dp_shard, "m": dp_shard}
+        else:
+            optimizer = make_optimizer(opt_cfg, steps_per_epoch=40,
+                                       global_batch=shp.global_batch)
+            opt_shapes = jax.eval_shape(optimizer.init, p_shapes)
+            opt_shard = jax.tree.map(lambda _: repl, opt_shapes)
         mstate_shapes = jax.eval_shape(
             lambda: replicate_model_state(init_model_state(model),
                                           n_workers))
         state_shapes = {"params": p_shapes, "opt": opt_shapes,
                         "model_state": mstate_shapes}
         batch = input_specs(cfg, shp, compute_dtype)
-        repl = NamedSharding(mesh, P())
-        dp_shard = NamedSharding(mesh, P(parallel.dp_axes))
         state_shard = {
             "params": jax.tree.map(lambda _: repl, p_shapes),
-            "opt": jax.tree.map(lambda _: repl, opt_shapes),
+            "opt": opt_shard,
             "model_state": jax.tree.map(lambda _: dp_shard,
                                         mstate_shapes),
         }
@@ -392,7 +421,8 @@ def analyze_compiled(arch, shp, cfg, mesh, compiled, resident
 
 def run_cells(archs, shapes, *, multi_pod=False, out_dir="results/dryrun",
               force=False, attention_impl="chunked", dp_mode="gspmd",
-              compression="__default__", overlap_comm=False):
+              compression="__default__", overlap_comm=False,
+              zero_dp=False):
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
     if dp_mode != "gspmd":
@@ -401,6 +431,8 @@ def run_cells(archs, shapes, *, multi_pod=False, out_dir="results/dryrun",
         mesh_tag += f"__{compression or 'nowire'}"
     if overlap_comm:
         mesh_tag += "__overlap"
+    if zero_dp:
+        mesh_tag += "__zero"
     os.makedirs(out_dir, exist_ok=True)
     results = []
     for arch in archs:
@@ -422,7 +454,8 @@ def run_cells(archs, shapes, *, multi_pod=False, out_dir="results/dryrun",
                                            attention_impl=attention_impl,
                                            dp_mode=dp_mode,
                                            compression=compression,
-                                           overlap_comm=overlap_comm)
+                                           overlap_comm=overlap_comm,
+                                           zero_dp=zero_dp)
                 del compiled
             except Exception as e:
                 rec = {"arch": arch, "shape": shape_name, "status": "error",
@@ -440,9 +473,10 @@ def run_cells(archs, shapes, *, multi_pod=False, out_dir="results/dryrun",
                 cr = rec.get("comm_report", {})
                 if cr:
                     print("  comm: %.0f collectives/step, "
-                          "%.2f MiB/collective mean" % (
+                          "%.2f MiB/collective mean, sync=%s" % (
                               cr["total_executions_per_step"],
-                              cr["mean_bytes_per_collective"] / 2**20))
+                              cr["mean_bytes_per_collective"] / 2**20,
+                              cr.get("gradient_sync", "?")))
                     il = cr.get("interleave", {})
                     if il.get("n_collectives"):
                         print("  interleave: %s (%d/%d conv+dot after "
@@ -475,6 +509,10 @@ def main():
     ap.add_argument("--overlap-comm", action="store_true",
                     help="backward-overlapped bucketed sync (needs "
                          "--dp-mode shardmap, DESIGN.md §8)")
+    ap.add_argument("--zero", action="store_true",
+                    help="ZeRO reduce-scatter sync + sharded update "
+                         "(needs --dp-mode shardmap and a bucketed "
+                         "--compression, DESIGN.md §9)")
     args = ap.parse_args()
 
     if args.arch == "all":
@@ -487,7 +525,7 @@ def main():
         run_cells(archs, shapes, multi_pod=mp, out_dir=args.out,
                   force=args.force, attention_impl=args.attention_impl,
                   dp_mode=args.dp_mode, compression=args.compression,
-                  overlap_comm=args.overlap_comm)
+                  overlap_comm=args.overlap_comm, zero_dp=args.zero)
 
 
 if __name__ == "__main__":

@@ -58,6 +58,7 @@ def build_train_setup(cfg, *, global_batch: int, seq_len: int,
                       bucket_bytes: int = 64 * 1024 * 1024,
                       error_feedback: bool = False,
                       overlap_comm: bool = False,
+                      zero_dp: bool = False,
                       data_noise: Optional[float] = None):
     """Returns (model, state, train_step, data, put_batch,
     state_shardings).
@@ -71,12 +72,18 @@ def build_train_setup(cfg, *, global_batch: int, seq_len: int,
         dp_axes=("data",), tp_axis="model" if mesh is not None else None,
         compression=compression, bucket_bytes=bucket_bytes,
         error_feedback=error_feedback, overlap_comm=overlap_comm,
-        zero_1=False)
+        zero_dp=zero_dp, zero_1=False)
     if overlap_comm and dp_mode != "shardmap":
         raise ValueError(
             "overlap_comm launches explicit per-bucket collectives inside "
             "the backward pass, which only exists in the shard_map DP "
             "mode (dp_mode='shardmap', DESIGN.md §8)")
+    if zero_dp and dp_mode != "shardmap":
+        raise ValueError(
+            "--zero reduce-scatters explicit per-bucket collectives, "
+            "which only exist in the shard_map DP mode "
+            "(dp_mode='shardmap'; GSPMD has zero_1 sharding constraints "
+            "instead, DESIGN.md §9)")
     if cfg.family == "conv" and dp_mode == "shardmap" and sync_bn:
         from repro.models.resnet import ResNet50
         model = ResNet50(cfg, compute_dtype=compute_dtype,
@@ -86,8 +93,14 @@ def build_train_setup(cfg, *, global_batch: int, seq_len: int,
                             attention_impl=attention_impl,
                             remat=cfg.n_layers > 8)
     train_cfg = TrainConfig(optimizer=opt_cfg, parallel=parallel)
-    optimizer = make_optimizer(opt_cfg, steps_per_epoch, global_batch,
-                               use_fused=use_fused_kernel)
+    if zero_dp:
+        from repro.optim.stream import make_stream_optimizer
+        optimizer = make_stream_optimizer(opt_cfg, steps_per_epoch,
+                                          global_batch,
+                                          use_fused=use_fused_kernel)
+    else:
+        optimizer = make_optimizer(opt_cfg, steps_per_epoch, global_batch,
+                                   use_fused=use_fused_kernel)
 
     key = jax.random.PRNGKey(seed)
     params, axes = model.init_params(key)
@@ -109,7 +122,18 @@ def build_train_setup(cfg, *, global_batch: int, seq_len: int,
             "error_feedback is only implemented for the explicit "
             "shard_map DP mode on a mesh (dp_mode='shardmap'); the "
             "GSPMD path has no worker-local gradients to correct")
-    opt_state = optimizer.init(params)
+    if zero_dp:
+        # flat shard-layout delta/m (optim/stream.py, DESIGN.md §9)
+        from repro.optim.stream import zero_padded_total
+        if mesh is None:
+            raise ValueError(
+                "--zero shards the optimizer update over a DP mesh; "
+                "pass a mesh (dp_mode='shardmap' builds a pure-DP one "
+                "by default in the CLI)")
+        opt_state = optimizer.init(zero_padded_total(
+            params, compression, bucket_bytes, n_workers))
+    else:
+        opt_state = optimizer.init(params)
     state = {"params": params, "opt": opt_state, "model_state": mstate}
     if ef_residual is not None:
         state["ef_residual"] = ef_residual
@@ -224,6 +248,12 @@ def main():
                     help="launch each gradient bucket's all-reduce as "
                          "soon as the backward pass produces its leaves "
                          "(shard_map DP only, DESIGN.md §8)")
+    ap.add_argument("--zero", action="store_true",
+                    help="ZeRO sync: reduce-scatter each packed bucket, "
+                         "shard the optimizer update over the DP ranks, "
+                         "all-gather the updated params (shard_map DP + "
+                         "bucketed compression, DESIGN.md §9; composes "
+                         "with --overlap-comm)")
     ap.add_argument("--use-fused-kernel", action="store_true")
     ap.add_argument("--log-json", default=None)
     ap.add_argument("--seed", type=int, default=0)
@@ -250,9 +280,10 @@ def main():
             compression=args.compression,
             bucket_bytes=args.bucket_mib * 1024 * 1024,
             error_feedback=args.error_feedback,
-            overlap_comm=args.overlap_comm)
+            overlap_comm=args.overlap_comm, zero_dp=args.zero)
 
-    metadata = {"arch": args.arch, "optimizer": args.optimizer}
+    metadata = {"arch": args.arch, "optimizer": args.optimizer,
+                "opt_layout": "zero_stream" if args.zero else "tree"}
     t0 = time.time()
     if args.epochs is not None:
         # ---- epoch-driven train/eval (the paper's actual protocol) ----

@@ -1,9 +1,15 @@
-"""Optimizers: the paper's rmsprop_warmup + baselines + ZeRO sharding."""
+"""Optimizers: the paper's rmsprop_warmup + baselines + ZeRO sharding
+(GSPMD spec constraints in zero.py, the shard_map packed-stream update
+in stream.py)."""
 from repro.configs.base import OptimizerConfig
 from repro.optim.interface import Optimizer  # noqa: F401
 from repro.optim.lars import lars
 from repro.optim.rmsprop_warmup import rmsprop_warmup
 from repro.optim.sgd import momentum_sgd
+from repro.optim.stream import (  # noqa: F401
+    StreamOptimizer,
+    make_stream_optimizer,
+)
 
 _FACTORIES = {
     "rmsprop_warmup": rmsprop_warmup,

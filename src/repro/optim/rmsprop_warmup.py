@@ -13,23 +13,36 @@ from repro.core.optimizer import HybridHyper, hybrid_update
 from repro.core.schedules import alpha_sgd_schedule, make_lr_schedule
 from repro.optim.interface import Optimizer, PyTree, tree_zeros_like_f32
 
-# params whose name matches these fragments get no weight decay (norms,
-# biases — standard large-batch practice, Goyal et al.)
+# path components that get no weight decay (norms, biases — standard
+# large-batch practice, Goyal et al.). Matched against each path
+# fragment by EXACT string equality, never substring: a param literally
+# named "Dense_bias_proj" contains "bias" but is a projection weight and
+# must stay decayed (regression-tested in tests/test_zero.py).
 NO_DECAY = ("scale", "bias", "b_if", "b_gates", "A_log", "dt_bias", "D",
             "conv_b", "bq", "bk", "bv")
 
 
+def _path_fragments(path) -> Tuple[str, ...]:
+    """The name of every pytree path component, handling dict keys
+    (DictKey.key), attribute nodes (GetAttrKey.name — ``str(k)`` would
+    yield ".bias", silently missing the exact-match exemption) and
+    sequence indices alike."""
+    names = []
+    for k in path:
+        name = getattr(k, "key", None)
+        if name is None:
+            name = getattr(k, "name", None)
+        if name is None:
+            name = getattr(k, "idx", str(k))
+        names.append(name if isinstance(name, str) else str(name))
+    return tuple(names)
+
+
 def _decay_mask(params: PyTree) -> PyTree:
-    flat = jax.tree_util.tree_flatten_with_path(params)[0]
-
-    def masked(path):
-        names = [getattr(k, "key", str(k)) for k in path]
-        return not any(n in NO_DECAY for n in names)
-
-    mask = {jax.tree_util.keystr(p): masked(p) for p, _ in flat}
-    leaves = [mask[jax.tree_util.keystr(p)] for p, _ in flat]
-    return jax.tree_util.tree_unflatten(
-        jax.tree_util.tree_structure(params), leaves)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    leaves = [not any(n in NO_DECAY for n in _path_fragments(p))
+              for p, _ in flat]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
 def rmsprop_warmup(cfg: OptimizerConfig, steps_per_epoch: int,

@@ -25,6 +25,15 @@ format; ``dp_mode`` selects the mechanism):
     one segment deep so communication hides behind the remaining
     backward compute (DESIGN.md §8). Bitwise-identical gradients to the
     non-overlapped bucketed path.
+  * shard_map DP ZeRO (``ParallelConfig.zero_dp``, ``--zero``): each
+    packed bucket is **reduce-scattered** (``psum_scatter``) instead of
+    all-reduced, the optimizer update runs only on the worker-owned
+    contiguous shard of the stream (delta/m sharded over the DP axis,
+    optim/stream.py), and the updated parameter slices are all-gathered
+    back — roughly half the wire volume and 1/N the update FLOPs/state
+    memory, bitwise-identical end state (DESIGN.md §9). Composes with
+    both the plain bucketed path and the overlapped path (the scatter
+    launches between segment VJPs behind the same barrier pipeline).
 """
 from __future__ import annotations
 
@@ -223,25 +232,29 @@ def _pmean_metrics(metrics: Dict, dp_axes: Sequence[str]) -> Dict:
 
 
 def _wrap_dp_step(local_step, mesh: Mesh, dp_axes: Sequence[str],
-                  use_ef: bool):
+                  use_ef: bool, opt_specs=None):
     """shard_map plumbing shared by the explicit-DP step builders:
-    params/opt replicated, model_state (and EF residual) per-worker."""
+    params/opt replicated, model_state (and EF residual) per-worker.
+    ``opt_specs`` overrides the replicated default for the opt state —
+    the ZeRO mode shards delta/m over the DP axis (DESIGN.md §9)."""
     from jax.experimental.shard_map import shard_map
 
     batch_spec = P(tuple(dp_axes))
     state_spec = P(tuple(dp_axes))  # per-worker last-minibatch BN / EF
 
     def train_step(state, batch):
+        opt_spec_tree = (jax.tree.map(lambda _: P(), state["opt"])
+                         if opt_specs is None else opt_specs)
         in_specs = (
             jax.tree.map(lambda _: P(), state["params"]),
             jax.tree.map(lambda _: state_spec, state["model_state"]),
-            jax.tree.map(lambda _: P(), state["opt"]),
+            opt_spec_tree,
             jax.tree.map(lambda _: batch_spec, batch),
         )
         out_specs = (
             jax.tree.map(lambda _: P(), state["params"]),
             jax.tree.map(lambda _: state_spec, state["model_state"]),
-            jax.tree.map(lambda _: P(), state["opt"]),
+            opt_spec_tree,
             P(),
         )
         args = (state["params"], state["model_state"], state["opt"], batch)
@@ -264,6 +277,118 @@ def _wrap_dp_step(local_step, mesh: Mesh, dp_axes: Sequence[str],
     return train_step
 
 
+# ---------------------------------------------------------------------------
+# ZeRO reduce-scatter plumbing shared by the bucketed + overlap builders
+# (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+def _zero_checks(parallel, dp_axes, optimizer, bucketed: bool,
+                 mesh: Mesh) -> int:
+    """Validate a --zero step request; returns the static DP size."""
+    if not bucketed:
+        raise ValueError(
+            "zero_dp reduce-scatters packed buckets, which requires "
+            "bucketed compression (e.g. compression='bf16+bucketed', "
+            f"got {parallel.compression!r}; DESIGN.md §9)")
+    if not hasattr(optimizer, "update_shard"):
+        raise ValueError(
+            "zero_dp needs a packed-stream optimizer "
+            "(optim/stream.py:make_stream_optimizer), got "
+            f"{type(optimizer).__name__}")
+    n = 1
+    for a in dp_axes:
+        n *= int(mesh.shape[a])
+    if n < 2:
+        raise ValueError(f"zero_dp needs DP degree >= 2, got {n}")
+    return n
+
+
+def _dp_linear_index(dp_axes: Sequence[str], mesh: Mesh):
+    """This worker's rank in the row-major order psum_scatter/all_gather
+    use over a tuple of mesh axes (pinned by bitwise parity on a (4, 2)
+    dual-axis DP mesh: tests/test_zero.py::
+    test_zero_bitwise_parity_two_dp_axes_8dev)."""
+    w = jax.lax.axis_index(dp_axes[0])
+    for a in dp_axes[1:]:
+        w = w * mesh.shape[a] + jax.lax.axis_index(a)
+    return w
+
+
+def _zero_sharded_update(optimizer, plan, param_tree, g_shard, opt,
+                         n: int, dp_axes: Sequence[str], mesh: Mesh):
+    """The rank-local half of the ZeRO step: cast+divide the scattered
+    gradient shard exactly as ``unpack`` would (bitwise-equal elements),
+    update the worker-owned param shard against the dp-sharded delta/m,
+    all-gather the updated slices per bucket, and unpack back to the
+    plan-structured param tree.
+
+    Returns ``(new_param_tree, new_opt, opt_metrics, local_sq)`` where
+    ``local_sq`` is this worker's partial squared grad norm (the caller
+    folds it into the stacked metrics pmean, DESIGN.md §8)."""
+    import dataclasses as _dc
+
+    from repro.distributed.bucketing import (
+        _kernel_on,
+        pack,
+        shard_chunks,
+        stream_to_shard_layout,
+        unpack,
+    )
+
+    acc_dtypes = {jnp.dtype(s.dtype) for s in plan.slots}
+    if acc_dtypes != {jnp.dtype(jnp.float32)}:
+        raise ValueError(
+            "zero_dp packs params/grads as one fp32 stream; got leaf "
+            f"dtypes {sorted(d.name for d in acc_dtypes)}")
+    # cast back + divide: same ops, same order as unpack() applies to the
+    # full stream — elementwise, so the shard's values match bitwise
+    if g_shard.dtype != jnp.float32:
+        if _kernel_on(None):
+            from repro.kernels.ops import unpack_cast
+            g_shard = unpack_cast(g_shard, jnp.float32)
+        else:
+            g_shard = g_shard.astype(jnp.float32)
+    g_shard = g_shard / n
+    local_sq = jnp.sum(jnp.square(g_shard))
+
+    chunks = shard_chunks(plan, n)
+    w = _dp_linear_index(dp_axes, mesh)
+    p_plan = _dc.replace(plan, wire=None,
+                         stream_dtype=jnp.dtype(jnp.float32))
+    p_buckets = pack(param_tree, p_plan)
+    p_shard = jnp.concatenate(
+        [jax.lax.dynamic_slice(b, (w * c,), (c,))
+         for b, c in zip(p_buckets, chunks)])
+    wd_shards = jnp.asarray(stream_to_shard_layout(
+        optimizer.wd_stream(param_tree, plan), plan, n))
+    shard_len = sum(chunks)
+    wd_shard = jax.lax.dynamic_slice(wd_shards, (w * shard_len,),
+                                     (shard_len,))
+
+    p_new, d_new, m_new, opt_metrics = optimizer.update_shard(
+        p_shard, g_shard, opt["delta"], opt["m"], opt["step"], wd_shard)
+    new_opt = {"step": opt["step"] + 1, "delta": d_new, "m": m_new}
+
+    off, gathered = 0, []
+    for c in chunks:
+        piece = jax.lax.slice(p_new, (off,), (off + c,))
+        gathered.append(jax.lax.all_gather(piece, tuple(dp_axes),
+                                           tiled=True))
+        off += c
+    new_param_tree = unpack(gathered, p_plan)
+    return new_param_tree, new_opt, opt_metrics, local_sq
+
+
+def _zero_grad_norm(metrics: Dict, n: int) -> Dict:
+    """Recover the global grad norm from the pmean'd per-worker partial
+    sums (exact when n is a power of two — psum/n*n == psum — and a
+    last-ulp metric either way; never parity-asserted)."""
+    sq = metrics.pop("grad_sq_local") * n
+    metrics["grad_norm"] = jnp.sqrt(sq)
+    return metrics
+
+
 def make_dp_shardmap_train_step(model, optimizer: Optimizer,
                                 train_cfg: TrainConfig, mesh: Mesh,
                                 dp_axes: Sequence[str]):
@@ -276,7 +401,10 @@ def make_dp_shardmap_train_step(model, optimizer: Optimizer,
     bucketed subsystem (one collective per ``bucket_bytes`` of wire
     traffic, DESIGN.md §6); ``error_feedback=True`` threads rounding
     residuals through either sync path (state gains an ``ef_residual``
-    entry, per-worker like the BN stats).
+    entry, per-worker like the BN stats); ``zero_dp=True`` (--zero)
+    swaps each bucket's all-reduce for a reduce-scatter and shards the
+    optimizer update over the DP ranks (DESIGN.md §9), bitwise-equal
+    end state.
     """
     from repro.distributed.bucketing import bucketed_psum, bucketed_psum_ef
 
@@ -287,6 +415,10 @@ def make_dp_shardmap_train_step(model, optimizer: Optimizer,
         raise ValueError("error_feedback requires a wire dtype "
                          f"(compression={parallel.compression!r})")
     dp_axes = tuple(dp_axes)
+
+    if parallel.zero_dp:
+        return _make_dp_zero_train_step(model, optimizer, train_cfg, mesh,
+                                        dp_axes, wire, bucketed)
 
     def sync_grads(grads, residual):
         """One of the four (per-leaf|bucketed) x (plain|EF) sync paths.
@@ -334,6 +466,57 @@ def make_dp_shardmap_train_step(model, optimizer: Optimizer,
     return _wrap_dp_step(local_step, mesh, dp_axes, use_ef)
 
 
+def _make_dp_zero_train_step(model, optimizer, train_cfg: TrainConfig,
+                             mesh: Mesh, dp_axes: Sequence[str],
+                             wire, bucketed: bool):
+    """ZeRO variant of the plain bucketed DP step (DESIGN.md §9):
+    pack -> psum_scatter per bucket -> sharded optimizer update on the
+    owned stream shard -> all-gather the updated param slices -> unpack.
+    Error feedback stays rank-local and full-tree, applied before
+    packing exactly as in ``bucketed_psum_ef`` — which is what keeps the
+    residuals (and everything downstream) bitwise-equal to the
+    all-reduce path."""
+    from repro.core.compression import apply_error_feedback
+    from repro.distributed.bucketing import pack, plan_buckets
+
+    parallel = train_cfg.parallel
+    use_ef = parallel.error_feedback
+    n = _zero_checks(parallel, dp_axes, optimizer, bucketed, mesh)
+
+    def local_step(params, mstate, opt, batch, residual=None):
+        local_mstate = jax.tree.map(lambda x: x[0], mstate)
+        (loss, (new_mstate, metrics)), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(params, local_mstate, batch,
+                                         train_cfg.label_smoothing)
+        if use_ef:
+            local_residual = jax.tree.map(lambda x: x[0], residual)
+            quant, new_residual = apply_error_feedback(
+                grads, local_residual, wire)
+        else:
+            quant, new_residual = grads, None
+        # shard-aligned plan: every bucket splits evenly across the ranks
+        plan = plan_buckets(quant, parallel.bucket_bytes, wire, align=n)
+        g_shard = jnp.concatenate(
+            [jax.lax.psum_scatter(b, tuple(dp_axes), scatter_dimension=0,
+                                  tiled=True)
+             for b in pack(quant, plan)])
+        new_params, new_opt, opt_metrics, local_sq = _zero_sharded_update(
+            optimizer, plan, params, g_shard, opt, n, dp_axes, mesh)
+        metrics["grad_sq_local"] = local_sq
+        metrics = _zero_grad_norm(_pmean_metrics(metrics, dp_axes), n)
+        metrics.update(opt_metrics)
+        new_mstate = jax.tree.map(lambda x: x[None], new_mstate)
+        out = (new_params, new_mstate, new_opt, metrics)
+        if use_ef:
+            out += (jax.tree.map(lambda x: x[None], new_residual),)
+        return out
+
+    opt_specs = {"step": P(), "delta": P(tuple(dp_axes)),
+                 "m": P(tuple(dp_axes))}
+    return _wrap_dp_step(local_step, mesh, dp_axes, use_ef,
+                         opt_specs=opt_specs)
+
+
 def make_dp_overlap_train_step(model, optimizer: Optimizer,
                                train_cfg: TrainConfig, mesh: Mesh,
                                dp_axes: Sequence[str]):
@@ -372,6 +555,9 @@ def make_dp_overlap_train_step(model, optimizer: Optimizer,
             "overlap_comm needs a staged model (ResNet50 / TransformerLM,"
             " DESIGN.md §8)")
     dp_axes = tuple(dp_axes)
+    use_zero = parallel.zero_dp
+    n_static = (_zero_checks(parallel, dp_axes, optimizer, _bucketed, mesh)
+                if use_zero else 1)
 
     def local_step(params, mstate, opt, batch, residual=None):
         local_mstate = jax.tree.map(lambda x: x[0], mstate)
@@ -382,9 +568,11 @@ def make_dp_overlap_train_step(model, optimizer: Optimizer,
         loss, vjps, auxes = staged_forward(staged)
         # ready order = reverse segment order (last segment's grads
         # materialize first); the plan is shape-only, so it is a trace
-        # constant like the treedef
+        # constant like the treedef. ZeRO shard-aligns every bucket so
+        # psum_scatter splits it evenly across ranks (DESIGN.md §9).
         plan = plan_ready_buckets(list(reversed(staged.seg_params)),
-                                  parallel.bucket_bytes, wire)
+                                  parallel.bucket_bytes, wire,
+                                  align=n_static)
         res_rev = None
         if use_ef:
             local_residual = jax.tree.map(lambda x: x[0], residual)
@@ -392,7 +580,9 @@ def make_dp_overlap_train_step(model, optimizer: Optimizer,
         n = jax.lax.psum(1, dp_axes)
         # ---- backward: VJP segment i, launch ready buckets, require
         # completion only before segment i-2 (one-segment-deep pipeline:
-        # bucket i's wire time hides behind segment i-1's compute) ----
+        # bucket i's wire time hides behind segment i-1's compute). With
+        # zero_dp the launched collective is the bucket's reduce-scatter
+        # — same launch points, same barrier pipeline. ----
         ct: Any = jnp.ones_like(loss)
         synced: Dict[int, jax.Array] = {}
         pending: List[List[int]] = []  # launched ids, newest last
@@ -415,20 +605,43 @@ def make_dp_overlap_train_step(model, optimizer: Optimizer,
             ready, pack_carry = pack_bucket(plan, ridx, g_seg, pack_carry)
             launched = []
             for b, arr in ready:
-                synced[b] = jax.lax.psum(arr, dp_axes)
+                if use_zero:
+                    synced[b] = jax.lax.psum_scatter(
+                        arr, tuple(dp_axes), scatter_dimension=0,
+                        tiled=True)
+                else:
+                    synced[b] = jax.lax.psum(arr, dp_axes)
                 launched.append(b)
             pending.append(launched)
         assert len(synced) == plan.n_buckets, (len(synced), plan.n_buckets)
-        stage_grads_rev, sq_norm = unpack(
-            [synced[b] for b in range(plan.n_buckets)], plan.base,
-            denom=n, with_sq_norm=True)
-        grads = staged.merge_grads(list(reversed(list(stage_grads_rev))))
         new_mstate, metrics = staged.finalize_aux(auxes)
-        metrics = _pmean_metrics(metrics, dp_axes)
-        new_params, new_opt, opt_metrics = optimizer.update(
-            params, grads, opt)
+        if use_zero:
+            # scattered shards (bucket order) -> sharded update ->
+            # all-gather updated param slices -> ready-ordered stage
+            # trees -> merge back to the full param structure
+            g_shard = jnp.concatenate(
+                [synced[b] for b in range(plan.n_buckets)])
+            param_rev = tuple(reversed(staged.seg_params))
+            new_param_rev, new_opt, opt_metrics, local_sq = \
+                _zero_sharded_update(optimizer, plan.base, param_rev,
+                                     g_shard, opt, n_static, dp_axes,
+                                     mesh)
+            new_params = staged.merge_grads(
+                list(reversed(list(new_param_rev))))
+            metrics["grad_sq_local"] = local_sq
+            metrics = _zero_grad_norm(_pmean_metrics(metrics, dp_axes),
+                                      n_static)
+        else:
+            stage_grads_rev, sq_norm = unpack(
+                [synced[b] for b in range(plan.n_buckets)], plan.base,
+                denom=n, with_sq_norm=True)
+            grads = staged.merge_grads(
+                list(reversed(list(stage_grads_rev))))
+            metrics = _pmean_metrics(metrics, dp_axes)
+            new_params, new_opt, opt_metrics = optimizer.update(
+                params, grads, opt)
+            metrics["grad_norm"] = jnp.sqrt(sq_norm)
         metrics.update(opt_metrics)
-        metrics["grad_norm"] = jnp.sqrt(sq_norm)
         new_mstate = jax.tree.map(lambda x: x[None], new_mstate)
         out = (new_params, new_mstate, new_opt, metrics)
         if use_ef:
@@ -437,7 +650,10 @@ def make_dp_overlap_train_step(model, optimizer: Optimizer,
             out += (jax.tree.map(lambda x: x[None], new_residual),)
         return out
 
-    return _wrap_dp_step(local_step, mesh, dp_axes, use_ef)
+    opt_specs = ({"step": P(), "delta": P(tuple(dp_axes)),
+                  "m": P(tuple(dp_axes))} if use_zero else None)
+    return _wrap_dp_step(local_step, mesh, dp_axes, use_ef,
+                         opt_specs=opt_specs)
 
 
 def replicate_model_state(state: PyTree, n_workers: int) -> PyTree:

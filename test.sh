@@ -4,7 +4,9 @@
 # subprocesses with their own XLA_FLAGS, so they pass either way.
 # Collects the whole tests/ tree — including the epoch-driven trainer /
 # validation suite (tests/test_trainer.py) and the loop/prefetcher/
-# checkpoint regression tests — as tier-1.
+# checkpoint regression tests — as tier-1. CI splits this into a fast
+# job (`./test.sh -m "not slow"`) and a mesh-parity job
+# (`./test.sh -m slow`); a plain run still executes everything.
 set -euo pipefail
 cd "$(dirname "$0")"
 export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"

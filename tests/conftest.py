@@ -12,6 +12,16 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 jax.config.update("jax_enable_x64", False)
 
 
+def pytest_configure(config):
+    # CI runs a fast tier-1 job with `-m "not slow"` and a separate
+    # `-m slow` job for the multi-step mesh parity sweeps (subprocess
+    # compiles dominate); a plain `pytest` run still collects everything.
+    config.addinivalue_line(
+        "markers",
+        "slow: multi-step virtual-mesh parity tests (subprocess compiles;"
+        " run via `pytest -m slow` / excluded from the fast CI job)")
+
+
 @pytest.fixture
 def key():
     return jax.random.PRNGKey(0)

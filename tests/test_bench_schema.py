@@ -1,0 +1,62 @@
+"""Schema guard for the committed benchmark trajectory file.
+
+``BENCH_step.json`` is the per-PR steps/sec trajectory point
+(benchmarks/step_bench.py, uploaded by CI). Refactors that touch the
+bench emitter must not silently drop a sync-mode column or rename a
+field — downstream trajectory tooling keys on this exact schema, so the
+shape is pinned here, including the ``zero`` modes (DESIGN.md §9).
+"""
+import json
+import os
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+EXPECTED_MODES = (
+    "gspmd",
+    "shardmap_perleaf",
+    "shardmap_bucketed",
+    "shardmap_overlap",
+    "shardmap_zero",
+    "shardmap_zero_overlap",
+)
+
+MODE_FIELDS = ("ms_per_step", "steps_per_sec", "warmup_s")
+
+TOP_FIELDS = ("bench", "devices", "backend", "arch", "global_batch",
+              "bucket_bytes", "iters", "modes",
+              "overlap_vs_bucketed_speedup", "zero_vs_bucketed_speedup")
+
+
+def _load():
+    with open(os.path.join(REPO, "BENCH_step.json")) as f:
+        return json.load(f)
+
+
+def test_bench_step_json_has_all_sync_mode_columns():
+    data = _load()
+    assert data["bench"] == "step_bench"
+    missing = [m for m in EXPECTED_MODES if m not in data["modes"]]
+    assert not missing, f"BENCH_step.json lost sync-mode columns: {missing}"
+
+
+def test_bench_step_json_mode_fields_and_types():
+    data = _load()
+    for top in TOP_FIELDS:
+        assert top in data, f"BENCH_step.json lost top-level field {top!r}"
+    for mode, row in data["modes"].items():
+        for field in MODE_FIELDS:
+            assert field in row, (mode, field)
+            assert isinstance(row[field], (int, float)), (mode, field)
+            assert row[field] > 0, (mode, field, row[field])
+    assert isinstance(data["devices"], int) and data["devices"] >= 1
+
+
+def test_bench_step_json_speedups_consistent_with_modes():
+    data = _load()
+    modes = data["modes"]
+    want = round(modes["shardmap_bucketed"]["ms_per_step"]
+                 / modes["shardmap_zero"]["ms_per_step"], 3)
+    assert abs(data["zero_vs_bucketed_speedup"] - want) < 1e-6
+    want = round(modes["shardmap_bucketed"]["ms_per_step"]
+                 / modes["shardmap_overlap"]["ms_per_step"], 3)
+    assert abs(data["overlap_vs_bucketed_speedup"] - want) < 1e-6

@@ -291,6 +291,7 @@ def test_hlo_collective_count_and_dtype():
     assert "HLO_OK" in out
 
 
+@pytest.mark.slow
 def test_shardmap_bucketed_mode_trains_identically():
     """End-to-end: dp_mode=shardmap with compression='bf16+bucketed'
     produces the same loss trajectory as per-leaf 'bf16' (ResNet-50,

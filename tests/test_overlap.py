@@ -247,6 +247,7 @@ def _parity_body(ef: bool) -> str:
     """ % ef)
 
 
+@pytest.mark.slow
 def test_overlap_step_bitwise_equals_bucketed_8dev():
     """Acceptance: the overlapped step's gradients (hence params, opt
     state, BN stats after 2 steps) are bitwise-equal to the
@@ -255,6 +256,7 @@ def test_overlap_step_bitwise_equals_bucketed_8dev():
     assert "PARITY_OK" in out
 
 
+@pytest.mark.slow
 def test_overlap_step_bitwise_equals_bucketed_error_feedback_8dev():
     out = run_py(_parity_body(ef=True))
     assert "PARITY_OK" in out
@@ -291,6 +293,7 @@ def test_overlap_interleaves_collectives_in_hlo():
     assert "INTERLEAVE_OK" in out
 
 
+@pytest.mark.slow
 def test_overlap_trains_same_as_perleaf_trajectory():
     """End-to-end: overlapped bucketed sync produces the same loss
     trajectory as the original per-leaf compressed psum (the seed

@@ -176,3 +176,160 @@ def test_gla_decode_step_matches_chunked_tail(seed):
                                     log_a[:, s], state)
     np.testing.assert_allclose(np.asarray(y_step),
                                np.asarray(y_ref[:, s]), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# bucket codec (distributed/bucketing.py): pack/unpack round-trip,
+# ready-order coverage, and the ZeRO shard-aligned padding (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+from repro.distributed.bucketing import (  # noqa: E402
+    pack,
+    pack_bucket,
+    plan_buckets,
+    plan_ready_buckets,
+    shard_chunks,
+    shard_layout_to_stream,
+    stream_layout,
+    stream_to_shard_layout,
+    unpack,
+)
+
+
+@st.composite
+def codec_tree(draw):
+    """A random gradient tree + bucket/align config. Leaves are bf16- and
+    f16-representable fp32 (scaled powers of two), so the wire round-trip
+    is exact and pack->psum-less->unpack must be bitwise identity."""
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 16)))
+    n_leaves = draw(st.integers(1, 6))
+    tree = {}
+    for i in range(n_leaves):
+        ndim = draw(st.integers(1, 3))
+        shape = tuple(draw(st.integers(1, 5)) for _ in range(ndim))
+        tree[f"l{i}"] = jnp.asarray(
+            2.0 ** rng.integers(-3, 4, size=shape), jnp.float32)
+    wire = draw(st.sampled_from([None, "bf16", "f16"]))
+    bucket_bytes = draw(st.integers(4, 128))
+    align = draw(st.sampled_from([1, 2, 3, 4, 8]))
+    return tree, wire, bucket_bytes, align
+
+
+@given(codec_tree())
+@settings(max_examples=40)
+def test_bucket_codec_roundtrip_with_alignment(case):
+    """pack -> unpack restores every leaf bitwise for any shapes, wire
+    dtype, bucket size and shard alignment; every bucket length is an
+    ``align`` multiple; the pad tail is zero; leaf slots tile the
+    unpadded stream exactly once."""
+    tree, wire, bucket_bytes, align = case
+    plan = plan_buckets(tree, bucket_bytes, wire, align=align)
+    total = sum(l.size for l in jax.tree.leaves(tree))
+    assert plan.total_elems == total
+    assert plan.padded_total % align == 0
+    assert plan.bucket_elems % align == 0
+    # slots cover [0, total) exactly once, in tree-flatten order
+    covered = 0
+    for s in plan.slots:
+        assert s.offset == covered
+        covered += s.size
+    assert covered == total
+    buckets = pack(tree, plan, use_kernel=False)
+    assert len(buckets) == plan.n_buckets
+    sizes = [b.shape[0] for b in buckets]
+    assert sum(sizes) == plan.padded_total
+    assert all(sz % align == 0 for sz in sizes)
+    if plan.pad_elems:
+        tail = np.asarray(buckets[-1])[-plan.pad_elems:]
+        np.testing.assert_array_equal(tail, 0.0)
+    out = unpack(buckets, plan, use_kernel=False)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(tree[k]),
+                                      np.asarray(out[k]), err_msg=k)
+
+
+@st.composite
+def ready_codec_case(draw):
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 16)))
+    n_stages = draw(st.integers(1, 5))
+    stages = []
+    for s in range(n_stages):
+        n_leaves = draw(st.integers(0, 3))
+        stages.append({f"l{i}": jnp.asarray(
+            2.0 ** rng.integers(-3, 4,
+                                size=draw(st.integers(1, 40))),
+            jnp.float32) for i in range(n_leaves)})
+    if not any(jax.tree.leaves(t) for t in stages):
+        stages[0] = {"l0": jnp.ones((3,), jnp.float32)}
+    wire = draw(st.sampled_from([None, "bf16"]))
+    bucket_bytes = draw(st.integers(8, 256))
+    align = draw(st.sampled_from([1, 2, 4, 8]))
+    return stages, wire, bucket_bytes, align
+
+
+@given(ready_codec_case())
+@settings(max_examples=40)
+def test_ready_plan_coverage_and_incremental_pack(case):
+    """plan_ready_buckets coverage with shard alignment: every bucket
+    closes exactly once, at its plan ready_stage; ready order is
+    non-decreasing; incremental pack_bucket over the stages equals the
+    whole-tree pack bitwise (zero tail included); unpack restores the
+    stage trees."""
+    stages, wire, bucket_bytes, align = case
+    plan = plan_ready_buckets(stages, bucket_bytes, wire, align=align)
+    assert list(plan.ready_stage) == sorted(plan.ready_stage)
+    assert plan.base.padded_total % align == 0
+    whole = pack(tuple(stages), plan.base, use_kernel=False)
+    seen = {}
+    carry = None
+    for s, tree in enumerate(stages):
+        ready, carry = pack_bucket(plan, s, tree, carry, use_kernel=False)
+        for b, arr in ready:
+            assert b not in seen  # exactly once
+            assert plan.ready_stage[b] == s  # at the planned stage
+            seen[b] = arr
+    assert carry.size == 0
+    assert sorted(seen) == list(range(plan.n_buckets))  # all of them
+    for b in range(plan.n_buckets):
+        np.testing.assert_array_equal(np.asarray(seen[b]),
+                                      np.asarray(whole[b]))
+    out = unpack([seen[b] for b in range(plan.n_buckets)], plan.base,
+                 use_kernel=False)
+    for a, b in zip(jax.tree.leaves(tuple(stages)), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(st.integers(1, 4000), st.integers(4, 4096), st.sampled_from([2, 4]),
+       st.sampled_from([1, 2, 4, 8]))
+def test_stream_layout_arithmetic_invariants(total, bucket_bytes,
+                                             itemsize, align):
+    bucket_elems, n_buckets, pad = stream_layout(total, bucket_bytes,
+                                                 itemsize, align)
+    assert bucket_elems >= 1 and bucket_elems % align == 0
+    assert (total + pad) % align == 0
+    assert 0 <= pad < align
+    # buckets tile the padded stream
+    assert (n_buckets - 1) * bucket_elems < total + pad
+    assert n_buckets * bucket_elems >= total + pad
+
+
+@given(st.integers(0, 2 ** 16), st.sampled_from([2, 4, 8]),
+       st.integers(8, 200))
+def test_shard_layout_permutation_roundtrip(seed, n, bucket_bytes):
+    rng = np.random.default_rng(seed)
+    tree = {f"l{i}": jnp.asarray(rng.standard_normal(
+        rng.integers(1, 50)), jnp.float32) for i in range(4)}
+    plan = plan_buckets(tree, bucket_bytes, None, align=n)
+    stream = rng.standard_normal(plan.padded_total).astype(np.float32)
+    lay = stream_to_shard_layout(stream, plan, n)
+    np.testing.assert_array_equal(
+        shard_layout_to_stream(lay, plan, n), stream)
+    # shard w = concat of its per-bucket chunks
+    chunks = shard_chunks(plan, n)
+    s = sum(chunks)
+    for w in range(n):
+        want = np.concatenate(
+            [stream[plan.bucket_bounds(b)[0] + w * c:
+                    plan.bucket_bounds(b)[0] + (w + 1) * c]
+             for b, c in enumerate(chunks)])
+        np.testing.assert_array_equal(lay[w * s:(w + 1) * s], want)
