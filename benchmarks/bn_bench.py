@@ -1,0 +1,181 @@
+"""Fused vs unfused batch-norm benchmark per ResNet stage shape.
+
+Times one BN site — stats + normalize + epilogue forward, and
+forward+VJP — for the fused Pallas path (kernels/fused_bn.py,
+DESIGN.md §10) against the unfused jnp oracle (core/batchnorm.py +
+epilogue), at NHWC shapes representative of the ResNet-50 stem and
+stage0..3 block outputs (the residual+ReLU epilogue, the busiest site
+kind). Writes a top-level ``BENCH_bn.json`` trajectory point with the
+wall-clocks, speedups, and the HLO ``fusion_report`` op-count collapse
+proof (launch/hlo_analysis.py); CI uploads it as an artifact and
+tests/test_bench_schema.py pins the schema.
+
+    PYTHONPATH=src python benchmarks/bn_bench.py [--quick] \
+        [--out BENCH_bn.json]
+
+CPU-interpret caveat (same as BENCH_step.json): off-TPU the Pallas
+kernels run in interpret mode, whose lowered program is semantically
+identical but not Mosaic-scheduled — wall-clock differences here
+measure pass structure and XLA:CPU fusion luck, not TPU HBM traffic.
+The transferable claim — the per-site reduction/elementwise op-count
+collapse — is taken from the compiled HLO (``fusion_report``), not from
+the clock.
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.kernels import ops, ref  # noqa: E402
+from repro.launch.hlo_analysis import fusion_report  # noqa: E402
+
+# (batch, hw, channels) per stage at block-output width; --quick shrinks
+STAGE_SHAPES = {
+    "stem": (8, 32, 64),
+    "stage0": (8, 16, 256),
+    "stage1": (8, 8, 512),
+    "stage2": (8, 4, 1024),
+    "stage3": (8, 2, 2048),
+}
+QUICK_SHAPES = {
+    "stem": (2, 16, 32),
+    "stage0": (2, 8, 64),
+    "stage1": (2, 4, 128),
+    "stage2": (2, 2, 256),
+    "stage3": (2, 1, 512),
+}
+
+
+def _fused_site(x, scale, bias, res):
+    return ops.fused_bn_train(x, scale, bias, residual=res, relu=True)[0]
+
+
+def _unfused_site(x, scale, bias, res):
+    return ref.bn_forward(x, scale, bias, residual=res, relu=True)[0]
+
+
+def _fwdbwd(site):
+    def prog(x, scale, bias, res, dy):
+        y, vjp = jax.vjp(site, x, scale, bias, res)
+        return (y,) + vjp(dy)
+    return prog
+
+
+def _time(fn, args, iters, warmup):
+    out = None
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e3  # ms
+
+
+def bench_shape(name, shape, *, iters, warmup, dtype=jnp.float32):
+    b, hw, c = shape
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (b, hw, hw, c), dtype)
+    res = jax.random.normal(ks[1], (b, hw, hw, c), dtype)
+    scale = 1.0 + 0.1 * jax.random.normal(ks[2], (c,))
+    bias = 0.1 * jax.random.normal(ks[3], (c,))
+    dy = jax.random.normal(ks[4], (b, hw, hw, c), dtype)
+
+    row = {"shape": [b, hw, hw, c]}
+    fwd_args = (x, scale, bias, res)
+    row["fused_fwd_ms"] = _time(jax.jit(_fused_site), fwd_args,
+                                iters, warmup)
+    row["unfused_fwd_ms"] = _time(jax.jit(_unfused_site), fwd_args,
+                                  iters, warmup)
+    bwd_args = fwd_args + (dy,)
+    row["fused_fwdbwd_ms"] = _time(jax.jit(_fwdbwd(_fused_site)),
+                                   bwd_args, iters, warmup)
+    row["unfused_fwdbwd_ms"] = _time(jax.jit(_fwdbwd(_unfused_site)),
+                                     bwd_args, iters, warmup)
+    row["fwd_speedup"] = round(
+        row["unfused_fwd_ms"] / row["fused_fwd_ms"], 3)
+    row["fwdbwd_speedup"] = round(
+        row["unfused_fwdbwd_ms"] / row["fused_fwdbwd_ms"], 3)
+    for k in ("fused_fwd_ms", "unfused_fwd_ms", "fused_fwdbwd_ms",
+              "unfused_fwdbwd_ms"):
+        row[k] = round(row[k], 3)
+    print(f"{name:<8} {str(row['shape']):<20} "
+          f"fwd {row['unfused_fwd_ms']:>8.2f} -> {row['fused_fwd_ms']:>8.2f} ms "
+          f"({row['fwd_speedup']:.2f}x)   "
+          f"fwd+bwd {row['unfused_fwdbwd_ms']:>8.2f} -> "
+          f"{row['fused_fwdbwd_ms']:>8.2f} ms "
+          f"({row['fwdbwd_speedup']:.2f}x)", flush=True)
+    return row
+
+
+def site_fusion_report(shape, dtype=jnp.float32):
+    """Lower one fwd+VJP BN site both ways; compare compiled-HLO op
+    counts per site (the transferable, clock-independent claim)."""
+    b, hw, c = shape
+    act = b * hw * hw * c
+    xs = jax.ShapeDtypeStruct((b, hw, hw, c), dtype)
+    ss = jax.ShapeDtypeStruct((c,), jnp.float32)
+
+    def lower(site):
+        return jax.jit(_fwdbwd(site)).lower(
+            xs, ss, ss, xs, xs).compile().as_text()
+
+    return fusion_report(lower(_fused_site), lower(_unfused_site), act)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--warmup", type=int, default=3)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke settings (small shapes, few iters)")
+    ap.add_argument("--out", default="BENCH_bn.json")
+    args = ap.parse_args()
+    shapes = STAGE_SHAPES
+    if args.quick:
+        shapes = QUICK_SHAPES
+        args.iters = min(args.iters, 8)
+        args.warmup = min(args.warmup, 2)
+
+    print(f"backend={jax.default_backend()} "
+          f"devices={jax.device_count()} iters={args.iters}")
+    rows = {}
+    for name, shape in shapes.items():
+        rows[name] = bench_shape(name, shape, iters=args.iters,
+                                 warmup=args.warmup)
+
+    report = site_fusion_report(shapes["stage1"])
+    result = {
+        "bench": "bn_bench",
+        "backend": jax.default_backend(),
+        "devices": jax.device_count(),
+        "iters": args.iters,
+        "epilogue": "residual+relu",
+        "shapes": rows,
+        "fusion_report": report,
+        "caveat": (
+            "CPU-interpret: off-TPU the Pallas kernels run in interpret "
+            "mode and XLA:CPU fuses the unfused chain aggressively, so "
+            "wall-clock deltas measure pass structure, not TPU HBM "
+            "traffic; the transferable claim is the compiled-HLO "
+            "per-site op-count collapse in fusion_report."),
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"fusion_report: reductions/site "
+          f"{report['reduction_ops_per_site']['unfused']:.0f} -> "
+          f"{report['reduction_ops_per_site']['fused']:.0f}, "
+          f"activation writes {report['activation_writes_per_site']['unfused']:.0f}"
+          f" -> {report['activation_writes_per_site']['fused']:.0f}, "
+          f"collapsed={report['collapsed']} -> wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -82,6 +82,10 @@ class ModelConfig:
     conv_width: int = 64
     num_classes: int = 0
     image_size: int = 224
+    # fused Pallas BN at every BN site: one-pass stats + fused
+    # normalize/ReLU/residual epilogue + fused custom-VJP backward
+    # (kernels/fused_bn.py, --fused-bn, DESIGN.md §10)
+    fused_bn: bool = False
 
     # --- modality frontends (stubs per assignment spec) ---
     vision: Optional[VisionFrontend] = None

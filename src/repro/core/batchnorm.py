@@ -25,20 +25,30 @@ PyTree = Any
 def bn_batch_stats(x: jax.Array,
                    cross_replica: Optional[Sequence[str]] = None
                    ) -> Tuple[jax.Array, jax.Array]:
-    """Mean/var over all but the channel (last) axis, fp32 accumulation
-    (no fp32 copy of the activation is materialized).
+    """Mean/var over all but the channel (last) axis, fp32 accumulation.
 
-    ``cross_replica``: axis names when running under shard_map — stats are
-    then psum-averaged across those axes (sync-BN). Under GSPMD jit leave
+    The variance uses the **centered** form E[(x - mu)^2], not
+    E[x^2] - E[x]^2: for a large-mean bf16/fp16 activation the
+    uncentered difference cancels almost all significant bits (both
+    terms ~mean^2, their gap ~var), while the centered second moment is
+    computed on values of magnitude ~sigma and stays accurate — the
+    f64-oracle regression in tests/test_core_batchnorm.py pins this.
+    The fp32 upcast of ``x - mu`` feeds only the square-reduce, so XLA
+    fuses it into the reduction (no fp32 activation copy in HBM).
+
+    ``cross_replica``: axis names when running under shard_map — the
+    mean is psum-averaged first, then the per-worker second moments
+    about the *global* mean are psum-averaged (sync-BN; equal to the
+    statistics of the concatenated global batch). Under GSPMD jit leave
     it None; the partitioner already makes the reduction global.
     """
     axes = tuple(range(x.ndim - 1))
     mean = jnp.mean(x, axis=axes, dtype=jnp.float32)
-    mean_sq = jnp.mean(jnp.square(x), axis=axes, dtype=jnp.float32)
     if cross_replica:
         mean = jax.lax.pmean(mean, cross_replica)
-        mean_sq = jax.lax.pmean(mean_sq, cross_replica)
-    var = jnp.maximum(mean_sq - jnp.square(mean), 0.0)
+    var = jnp.mean(jnp.square(x.astype(jnp.float32) - mean), axis=axes)
+    if cross_replica:
+        var = jax.lax.pmean(var, cross_replica)
     return mean, var
 
 

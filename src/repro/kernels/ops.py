@@ -84,6 +84,33 @@ def unpack_cast(flat, acc_dtype):
 
 
 # ---------------------------------------------------------------------------
+# fused batch norm (forward stats+normalize+epilogue, fused VJP)
+# ---------------------------------------------------------------------------
+
+
+def fused_bn_train(x, scale, bias, *, residual=None, relu=False,
+                   eps=1e-5, cross_replica=None):
+    """Train-mode fused BN: (y, mean, var) in one stats pass + one
+    normalize/epilogue pass, with the fused custom-VJP backward
+    (DESIGN.md §10). Oracle: core.batchnorm + epilogue (ref.bn_forward /
+    ref.bn_backward)."""
+    from repro.kernels import fused_bn as _fb
+    return _fb.fused_bn_train(x, scale, bias, residual=residual,
+                              relu=relu, eps=eps,
+                              cross_replica=cross_replica,
+                              interpret=_interpret())
+
+
+def fused_bn_apply(x, mean, var, scale, bias, *, residual=None,
+                   relu=False, eps=1e-5):
+    """Given-stats fused BN (eval / finalized statistics)."""
+    from repro.kernels import fused_bn as _fb
+    return _fb.fused_bn_apply(x, mean, var, scale, bias,
+                              residual=residual, relu=relu, eps=eps,
+                              interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
 

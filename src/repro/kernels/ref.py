@@ -43,6 +43,48 @@ def cast_copy(flat, out_dtype):
     return flat.astype(out_dtype)
 
 
+def bn_forward(x, scale, bias, *, residual=None, relu=False, eps=1e-5):
+    """Reference for the fused train-mode BN (kernels/fused_bn.py):
+    batch stats + normalize + epilogue via the core/batchnorm.py oracle
+    path, exactly the unfused ResNet site. Returns (y, mean, var)."""
+    from repro.core.batchnorm import bn_apply_stats, bn_batch_stats
+
+    mean, var = bn_batch_stats(x)
+    y = bn_apply_stats(x, mean, var, scale, bias, eps=eps)
+    if residual is not None:
+        y = y + residual
+    if relu:
+        y = jax.nn.relu(y)
+    return y, mean, var
+
+
+def bn_backward(x, y, mean, var, scale, dy, *, relu=False, eps=1e-5):
+    """Analytic train-mode BN backward (the fused VJP's reference):
+    given the saved forward residuals and the output cotangent, returns
+    (dx, dscale, dbias, dres) from the textbook batch-stats formulas:
+
+        dy_m   = dy * (y > 0)                       (ReLU mask)
+        S1     = sum(dy_m), S2 = sum(dy_m * x_hat)  (= dbias, dscale)
+        dx     = gamma*rstd * (dy_m - S1/m - x_hat*S2/m)
+        dres   = dy_m
+    """
+    axes = tuple(range(x.ndim - 1))
+    m = 1.0
+    for a in axes:
+        m *= x.shape[a]
+    dy32 = dy.astype(jnp.float32)
+    if relu:
+        dy32 = jnp.where(y > 0, dy32, 0.0)
+    rstd = jax.lax.rsqrt(var.astype(jnp.float32) + eps)
+    xhat = (x.astype(jnp.float32) - mean.astype(jnp.float32)) * rstd
+    s1 = jnp.sum(dy32, axis=axes)
+    s2 = jnp.sum(dy32 * xhat, axis=axes)
+    dx = (scale.astype(jnp.float32) * rstd
+          * (dy32 - s1 / m - xhat * s2 / m)).astype(x.dtype)
+    return dx, s2.astype(scale.dtype), s1.astype(scale.dtype), \
+        dy32.astype(x.dtype)
+
+
 def hybrid_update(g, p, d, m, *, eta, alpha_sgd, mu1=0.9, mu2=0.99,
                   eps=1e-8, eta_rmsprop=3e-4, weight_decay=0.0):
     """Paper A.1 update, fp32 (the fused kernel's oracle)."""

@@ -103,9 +103,16 @@ def lower_cell(arch: str, shape_name: str, mesh: Mesh, *,
                microbatches: int = 1,
                compression: Optional[str] = "__default__",
                overlap_comm: bool = False,
-               zero_dp: bool = False):
+               zero_dp: bool = False,
+               fused_bn: bool = False):
     """Build + lower + compile one cell. Returns (record, compiled)."""
     cfg = get_config(arch)
+    if fused_bn:
+        if cfg.family != "conv":
+            raise ValueError(
+                "--fused-bn fuses the ResNet BN sites (Pallas kernels, "
+                f"DESIGN.md §10); arch family {cfg.family!r} has no BN")
+        cfg = dataclasses.replace(cfg, fused_bn=True)
     shp = {s.name: s for s in shapes_for(cfg)}[shape_name]
     if shp.skip_reason:
         return {"arch": arch, "shape": shape_name, "status": "skipped",
@@ -422,7 +429,7 @@ def analyze_compiled(arch, shp, cfg, mesh, compiled, resident
 def run_cells(archs, shapes, *, multi_pod=False, out_dir="results/dryrun",
               force=False, attention_impl="chunked", dp_mode="gspmd",
               compression="__default__", overlap_comm=False,
-              zero_dp=False):
+              zero_dp=False, fused_bn=False):
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
     if dp_mode != "gspmd":
@@ -433,6 +440,8 @@ def run_cells(archs, shapes, *, multi_pod=False, out_dir="results/dryrun",
         mesh_tag += "__overlap"
     if zero_dp:
         mesh_tag += "__zero"
+    if fused_bn:
+        mesh_tag += "__fusedbn"
     os.makedirs(out_dir, exist_ok=True)
     results = []
     for arch in archs:
@@ -455,7 +464,8 @@ def run_cells(archs, shapes, *, multi_pod=False, out_dir="results/dryrun",
                                            dp_mode=dp_mode,
                                            compression=compression,
                                            overlap_comm=overlap_comm,
-                                           zero_dp=zero_dp)
+                                           zero_dp=zero_dp,
+                                           fused_bn=fused_bn)
                 del compiled
             except Exception as e:
                 rec = {"arch": arch, "shape": shape_name, "status": "error",
@@ -513,6 +523,10 @@ def main():
                     help="ZeRO reduce-scatter sync + sharded update "
                          "(needs --dp-mode shardmap and a bucketed "
                          "--compression, DESIGN.md §9)")
+    ap.add_argument("--fused-bn", action="store_true",
+                    help="fused Pallas BN at every ResNet BN site "
+                         "(conv archs only; kernels/fused_bn.py, "
+                         "DESIGN.md §10)")
     args = ap.parse_args()
 
     if args.arch == "all":
@@ -525,7 +539,8 @@ def main():
         run_cells(archs, shapes, multi_pod=mp, out_dir=args.out,
                   force=args.force, attention_impl=args.attention_impl,
                   dp_mode=args.dp_mode, compression=args.compression,
-                  overlap_comm=args.overlap_comm, zero_dp=args.zero)
+                  overlap_comm=args.overlap_comm, zero_dp=args.zero,
+                  fused_bn=args.fused_bn)
 
 
 if __name__ == "__main__":

@@ -43,6 +43,7 @@ from repro.training import (
 )
 from repro.training.step import (
     finalize_worker_bn_stats,
+    jit_train_step,
     make_dp_shardmap_train_step,
     make_eval_step,
     make_train_step,
@@ -59,6 +60,7 @@ def build_train_setup(cfg, *, global_batch: int, seq_len: int,
                       error_feedback: bool = False,
                       overlap_comm: bool = False,
                       zero_dp: bool = False,
+                      fused_bn: bool = False,
                       data_noise: Optional[float] = None):
     """Returns (model, state, train_step, data, put_batch,
     state_shardings).
@@ -67,6 +69,12 @@ def build_train_setup(cfg, *, global_batch: int, seq_len: int,
     pipeline default); the recipe/ablation proxies raise it so training
     is still in progress at the schedule-transition epochs.
     """
+    if fused_bn:
+        if cfg.family != "conv":
+            raise ValueError(
+                "--fused-bn fuses the ResNet BN sites (Pallas kernels, "
+                f"DESIGN.md §10); arch family {cfg.family!r} has no BN")
+        cfg = dataclasses.replace(cfg, fused_bn=True)
     shape = ShapeConfig("train", seq_len, global_batch, "train")
     parallel = ParallelConfig(
         dp_axes=("data",), tp_axis="model" if mesh is not None else None,
@@ -158,7 +166,7 @@ def build_train_setup(cfg, *, global_batch: int, seq_len: int,
             else:
                 step = make_dp_shardmap_train_step(
                     model, optimizer, train_cfg, mesh, parallel.dp_axes)
-            train_step = jax.jit(step, donate_argnums=(0,))
+            train_step = jit_train_step(step)
         else:
             p_shard = tree_shardings(axes, mesh, rules)
             state_shardings = {
@@ -170,10 +178,10 @@ def build_train_setup(cfg, *, global_batch: int, seq_len: int,
             }
             state = jax.device_put(state, state_shardings)
             step = make_train_step(model, optimizer, train_cfg, mesh, rules)
-            train_step = jax.jit(step, donate_argnums=(0,))
+            train_step = jit_train_step(step)
     else:
         step = make_train_step(model, optimizer, train_cfg)
-        train_step = jax.jit(step, donate_argnums=(0,))
+        train_step = jit_train_step(step)
 
     data = make_data(cfg, shape, seed=seed, noise=data_noise)
     return model, state, train_step, data, put_batch, state_shardings
@@ -255,6 +263,11 @@ def main():
                          "bucketed compression, DESIGN.md §9; composes "
                          "with --overlap-comm)")
     ap.add_argument("--use-fused-kernel", action="store_true")
+    ap.add_argument("--fused-bn", action="store_true",
+                    help="fused Pallas BN at every ResNet BN site: "
+                         "one-pass stats + normalize/ReLU/residual "
+                         "epilogue + fused custom-VJP backward "
+                         "(kernels/fused_bn.py, DESIGN.md §10)")
     ap.add_argument("--log-json", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -280,7 +293,8 @@ def main():
             compression=args.compression,
             bucket_bytes=args.bucket_mib * 1024 * 1024,
             error_feedback=args.error_feedback,
-            overlap_comm=args.overlap_comm, zero_dp=args.zero)
+            overlap_comm=args.overlap_comm, zero_dp=args.zero,
+            fused_bn=args.fused_bn)
 
     metadata = {"arch": args.arch, "optimizer": args.optimizer,
                 "opt_layout": "zero_stream" if args.zero else "tree"}

@@ -43,10 +43,15 @@ class ResNet50:
     """Bottleneck ResNet. ``model_state`` carries last-minibatch BN stats."""
 
     def __init__(self, cfg: ModelConfig, compute_dtype=jnp.bfloat16,
-                 cross_replica_bn: bool = False, **_):
+                 cross_replica_bn: bool = False,
+                 fused_bn: Optional[bool] = None, **_):
         self.cfg = cfg
         self.compute_dtype = compute_dtype
         self.cross_replica_bn = cross_replica_bn
+        # fused Pallas BN (kernels/fused_bn.py, DESIGN.md §10): cfg flag
+        # by default, overridable per-instance for A/B tests
+        self.fused_bn = (bool(getattr(cfg, "fused_bn", False))
+                         if fused_bn is None else bool(fused_bn))
         self._bn_names: List[str] = []
 
     # ------------------------------------------------------------- init
@@ -105,15 +110,40 @@ class ResNet50:
         return state
 
     # -------------------------------------------------------------- fwd
-    def _bn(self, p_bn, x, name, state, new_state, train: bool):
+    def _bn(self, p_bn, x, name, state, new_state, train: bool,
+            relu: bool = False, residual=None):
+        """One BN site with its epilogue (optional ReLU / residual add).
+
+        The epilogue lives here — not at the call sites — so the fused
+        Pallas path (``fused_bn``, DESIGN.md §10) can fold it into the
+        normalize pass and its custom-VJP backward; the unfused jnp path
+        applies the identical ops sequentially (the oracle)."""
+        scale, bias = p_bn["scale"], p_bn["bias"]
         if train:
+            if self.fused_bn:
+                from repro.kernels.ops import fused_bn_train
+                y, mean, var = fused_bn_train(
+                    x, scale, bias, residual=residual, relu=relu,
+                    cross_replica=self.cross_replica_bn or None)
+                new_state[name] = {"mean": mean, "var": var,
+                                   "count": jnp.array(1.0, jnp.float32)}
+                return y
             mean, var = bn_batch_stats(x, cross_replica=self.cross_replica_bn)
             new_state[name] = {"mean": mean, "var": var,
                                "count": jnp.array(1.0, jnp.float32)}
         else:
             mean = state[name]["mean"]
             var = state[name]["var"]
-        return bn_apply_stats(x, mean, var, p_bn["scale"], p_bn["bias"])
+            if self.fused_bn:
+                from repro.kernels.ops import fused_bn_apply
+                return fused_bn_apply(x, mean, var, scale, bias,
+                                      residual=residual, relu=relu)
+        y = bn_apply_stats(x, mean, var, scale, bias)
+        if residual is not None:
+            y = y + residual
+        if relu:
+            y = jax.nn.relu(y)
+        return y
 
     # Per-segment forwards: apply() composes them sequentially; the
     # overlap train step VJPs them independently (loss_segments below,
@@ -123,8 +153,8 @@ class ResNet50:
         x = constrain(x, ("batch", None, None, None))
         new_state: Params = {}
         x = conv(x, p_stem["conv"], stride=2)
-        x = jax.nn.relu(self._bn(p_stem["bn"], x, "stem/bn", state,
-                                 new_state, train))
+        x = self._bn(p_stem["bn"], x, "stem/bn", state, new_state, train,
+                     relu=True)
         x = jax.lax.reduce_window(
             x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME")
         return x, new_state
@@ -135,22 +165,22 @@ class ResNet50:
             blk = p_stage[f"block{bi}"]
             pre = f"stage{si}/block{bi}"
             stride = 2 if (bi == 0 and si > 0) else 1
-            out = conv(x, blk["conv1"])
-            out = jax.nn.relu(self._bn(blk["bn1"], out, f"{pre}/bn1",
-                                       state, new_state, train))
-            out = conv(out, blk["conv2"], stride=stride)
-            out = jax.nn.relu(self._bn(blk["bn2"], out, f"{pre}/bn2",
-                                       state, new_state, train))
-            out = conv(out, blk["conv3"])
-            out = self._bn(blk["bn3"], out, f"{pre}/bn3", state,
-                           new_state, train)
             if bi == 0:
                 sc = conv(x, blk["proj"], stride=stride)
                 sc = self._bn(blk["proj_bn"], sc, f"{pre}/proj_bn",
                               state, new_state, train)
             else:
                 sc = x
-            x = jax.nn.relu(out + sc)
+            out = conv(x, blk["conv1"])
+            out = self._bn(blk["bn1"], out, f"{pre}/bn1", state,
+                           new_state, train, relu=True)
+            out = conv(out, blk["conv2"], stride=stride)
+            out = self._bn(blk["bn2"], out, f"{pre}/bn2", state,
+                           new_state, train, relu=True)
+            out = conv(out, blk["conv3"])
+            # block output: BN + residual add + ReLU, one fused site
+            x = self._bn(blk["bn3"], out, f"{pre}/bn3", state, new_state,
+                         train, relu=True, residual=sc)
         return x, new_state
 
     def _head_logits(self, p_fc, x):

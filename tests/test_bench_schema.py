@@ -60,3 +60,45 @@ def test_bench_step_json_speedups_consistent_with_modes():
     want = round(modes["shardmap_bucketed"]["ms_per_step"]
                  / modes["shardmap_overlap"]["ms_per_step"], 3)
     assert abs(data["overlap_vs_bucketed_speedup"] - want) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# BENCH_bn.json (benchmarks/bn_bench.py, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+BN_TOP_FIELDS = ("bench", "backend", "devices", "iters", "epilogue",
+                 "shapes", "fusion_report", "caveat")
+
+BN_SHAPE_FIELDS = ("fused_fwd_ms", "unfused_fwd_ms", "fused_fwdbwd_ms",
+                   "unfused_fwdbwd_ms", "fwd_speedup", "fwdbwd_speedup")
+
+
+def _load_bn():
+    with open(os.path.join(REPO, "BENCH_bn.json")) as f:
+        return json.load(f)
+
+
+def test_bench_bn_json_schema():
+    data = _load_bn()
+    assert data["bench"] == "bn_bench"
+    for top in BN_TOP_FIELDS:
+        assert top in data, f"BENCH_bn.json lost top-level field {top!r}"
+    assert data["caveat"], "CPU-interpret caveat must stay documented"
+    assert data["shapes"], "per-stage shape rows missing"
+    for name, row in data["shapes"].items():
+        assert isinstance(row.get("shape"), list) and len(row["shape"]) == 4
+        for field in BN_SHAPE_FIELDS:
+            assert field in row, (name, field)
+            assert isinstance(row[field], (int, float)), (name, field)
+            assert row[field] > 0, (name, field, row[field])
+
+
+def test_bench_bn_json_fusion_report_proves_collapse():
+    """The committed trajectory point must carry the HLO op-count
+    collapse proof, not just wall-clocks (the clock is a CPU-interpret
+    proxy; the per-site collapse is the transferable claim)."""
+    rep = _load_bn()["fusion_report"]
+    for section in ("fused", "unfused"):
+        assert rep[section]["reduction_ops"] > 0
+    assert rep["fused"]["reduction_ops"] < rep["unfused"]["reduction_ops"]
+    assert rep["collapsed"] is True

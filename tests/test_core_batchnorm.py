@@ -67,6 +67,32 @@ def test_combine_worker_stats_reconstructs_global(key):
     np.testing.assert_allclose(combined["bn"]["count"], 1.0)
 
 
+def test_variance_large_mean_bf16_vs_f64_oracle(key):
+    """Centered-variance regression (the E[x^2]-E[x]^2 cancellation
+    fix): for a bf16 activation with mean ~1000 and spread ~2, the
+    uncentered form loses the variance to catastrophic cancellation
+    (both terms ~10^6, their gap ~4, fp32 spacing at 10^6 is 0.0625),
+    while the centered E[(x-mu)^2] form stays accurate. Oracle: numpy
+    float64 over the exact bf16-representable values."""
+    # steps of 2 around 1000 are exactly representable in bf16
+    # (spacing at 1024 is 8... use 1000 where spacing is 4; k*4 steps)
+    k = jax.random.randint(key, (64, 4, 4, 8), -2, 3).astype(jnp.float32)
+    x = (1024.0 + 4.0 * k).astype(jnp.bfloat16)
+    x64 = np.asarray(x, np.float64)
+    mean64 = x64.mean(axis=(0, 1, 2))
+    var64 = ((x64 - mean64) ** 2).mean(axis=(0, 1, 2))
+    mean, var = bn_batch_stats(x)
+    np.testing.assert_allclose(np.asarray(mean), mean64, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(var), var64, rtol=1e-4)
+    # the uncentered fp32 form measurably degrades on the same data —
+    # the regression this test exists to pin
+    x32 = np.asarray(x, np.float32)
+    uncentered = (x32 ** 2).mean(axis=(0, 1, 2), dtype=np.float32) \
+        - x32.mean(axis=(0, 1, 2), dtype=np.float32) ** 2
+    assert np.abs(uncentered - var64).max() > \
+        10 * np.abs(np.asarray(var) - var64).max()
+
+
 def test_no_moving_average_semantics(key):
     """State after a step holds exactly the LAST minibatch's stats — not
     an EMA blend (the paper's central BN change)."""

@@ -5,7 +5,9 @@ import numpy as np
 
 from repro.launch.hlo_analysis import (
     analyze_hlo,
+    bn_pass_counts,
     comm_report,
+    fusion_report,
     interleave_report,
     parse_computations,
     type_bytes,
@@ -134,3 +136,68 @@ def test_comm_report_embeds_interleave_section():
     cr = comm_report(analyze_hlo(txt, 2), hlo_text=txt)
     assert cr["interleave"]["interleaved"]
     assert "interleave" not in comm_report(analyze_hlo(txt, 2))
+
+
+# ---------------------------------------------------------------------------
+# fusion_report (fused BN, DESIGN.md §10): synthetic programs
+# ---------------------------------------------------------------------------
+
+
+def _bn_program(n_act_reduces, n_act_writes, hierarchical=False):
+    """Synthetic BN-site HLO: activation f32[4096], stats f32[16].
+    ``hierarchical`` splits each reduction into the CPU backend's
+    reduce-window(big) -> reduce(small) chain — which must still count
+    as ONE logical reduction pass."""
+    lines = ["%p0 = f32[4096]{0} parameter(0)",
+             "%c0 = f32[] constant(0)"]
+    for i in range(n_act_reduces):
+        if hierarchical:
+            lines.append(f"%rw{i} = f32[16]{{0}} reduce-window(%p0, %c0),"
+                         f" window={{size=256}}, to_apply=%add")
+            lines.append(f"%red{i} = f32[] reduce(%rw{i}, %c0), "
+                         f"dimensions={{0}}, to_apply=%add")
+        else:
+            lines.append(f"%red{i} = f32[] reduce(%p0, %c0), "
+                         f"dimensions={{0}}, to_apply=%add")
+    for i in range(n_act_writes):
+        lines.append(f"%ew{i} = f32[4096]{{0}} multiply(%p0, %p0)")
+    lines.append("ROOT %out = f32[4096]{0} add(%p0, %p0)")
+    body = "\n".join(f"  {line}" for line in lines)
+    return ("HloModule m\n\n"
+            "%add (a: f32[], b: f32[]) -> f32[] {\n"
+            "  %a = f32[] parameter(0)\n"
+            "  %b = f32[] parameter(1)\n"
+            "  ROOT %s = f32[] add(%a, %b)\n"
+            "}\n\n"
+            "ENTRY %main (p0: f32[4096]) -> f32[4096] {\n"
+            f"{body}\n"
+            "}\n")
+
+
+def test_bn_pass_counts_basic():
+    c = bn_pass_counts(_bn_program(4, 2), act_elems=4096)
+    assert c["reduction_ops"] == 4.0
+    # 2 multiplies + the ROOT add are activation-sized writes
+    assert c["activation_writes"] == 3.0
+
+
+def test_bn_pass_counts_hierarchical_reduction_counts_once():
+    """A reduce-window(act) -> reduce(tiny) chain is one pass over the
+    activation, not two: only the activation-sized stage counts."""
+    flat = bn_pass_counts(_bn_program(3, 0), act_elems=4096)
+    hier = bn_pass_counts(_bn_program(3, 0, hierarchical=True),
+                          act_elems=4096)
+    assert flat["reduction_ops"] == hier["reduction_ops"] == 3.0
+
+
+def test_fusion_report_collapse_verdict():
+    fused = _bn_program(4, 2)      # 2 fwd stats + 2 bwd sums
+    unfused = _bn_program(6, 4)    # mean/var/dscale/dbias/dmean/dvar
+    rep = fusion_report(fused, unfused, act_elems=4096, n_sites=2)
+    assert rep["reduction_collapse"] and rep["elementwise_collapse"]
+    assert rep["collapsed"]
+    assert rep["reduction_ops_per_site"] == {"fused": 2.0,
+                                             "unfused": 3.0}
+    # no collapse -> no verdict
+    rep2 = fusion_report(unfused, fused, act_elems=4096)
+    assert not rep2["collapsed"]
