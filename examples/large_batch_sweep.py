@@ -1,55 +1,136 @@
-"""The paper's central claim, directionally: scale the global batch with
-the linear LR rule and compare plain momentum SGD (Goyal recipe) against
-the paper's RMSprop warm-up + slow-start — the hybrid stays stable where
-SGD degrades (paper §2: 'optimization difficulty at the start of
-training').
+"""Batch-scaling sweep: the paper's central claim as a measurement
+harness. Scale the global batch with the linear LR rule and compare the
+recipes per batch size:
 
-    PYTHONPATH=src python examples/large_batch_sweep.py
+  * ``paper_baseline`` — the paper's hybrid RMSprop warm-up +
+    slow-start LR (arXiv:1711.04325 §2);
+  * ``lars`` — layer-wise trust ratios (You et al., the paper's Table 1
+    competitor [10] at B=16k), run through the packed-stream LARS path
+    when a mesh is available (DESIGN.md §11);
+  * ``lars_ls_poly`` — LARS + label smoothing + polynomial LR decay,
+    the standard >=32k-batch recipe.
+
+Each (recipe, batch) cell trains a reduced ResNet-50 on the synthetic
+class-template task and records the tail loss/accuracy, emitting
+``BENCH_scaling.json`` (schema pinned by tests/test_bench_schema.py;
+``--quick`` runs the CI-sized grid).
+
+    PYTHONPATH=src python examples/large_batch_sweep.py [--quick] \
+        [--out BENCH_scaling.json]
 """
+import argparse
+import json
 import os
 import sys
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.configs import OptimizerConfig, get_config, reduced_config  # noqa: E402
 from repro.launch.train import build_train_setup  # noqa: E402
 
+# recipe -> (optimizer kind, LR schedule, label smoothing). The batch
+# points below proxy the paper's 256 -> 32k scaling range: lr_scale is
+# the linear-rule multiplier on base_lr_per_256, so lr_scale ~ B/256 of
+# the full-size run each point stands in for.
+RECIPES = {
+    "paper_baseline": ("rmsprop_warmup", "slow_start", 0.0),
+    "lars": ("lars", "slow_start", 0.0),
+    "lars_ls_poly": ("lars", "poly", 0.1),
+}
 
-def train_once(kind, schedule, global_batch, lr_scale, steps=30):
+# (global_batch, lr_scale): reduced-config proxies for 256 -> 32k
+POINTS_FULL = ((32, 1.0), (64, 2.0), (128, 8.0), (256, 24.0))
+POINTS_QUICK = ((32, 1.0), (64, 2.0), (128, 8.0))
+
+
+def train_once(kind, schedule, label_smoothing, global_batch, lr_scale,
+               steps, steps_per_epoch):
     cfg = reduced_config(get_config("resnet50"))
     opt_cfg = OptimizerConfig(kind=kind, schedule=schedule,
                               base_lr_per_256=0.1 * lr_scale,
                               beta_center=1.0, beta_period=1.0,
-                              warmup_epochs=1.0)
+                              warmup_epochs=1.0,
+                              total_epochs=max(1.0,
+                                               steps / steps_per_epoch))
     model, state, step_fn, data, _, _ = build_train_setup(
         cfg, global_batch=global_batch, seq_len=16, opt_cfg=opt_cfg,
-        steps_per_epoch=10)
-    losses = []
+        steps_per_epoch=steps_per_epoch,
+        label_smoothing=label_smoothing)
+    losses, accs = [], []
     for s in range(steps):
         batch = {k: jnp.asarray(v) for k, v in data.batch_at(s).items()}
         state, metrics = step_fn(state, batch)
         losses.append(float(metrics["loss"]))
-    return losses
+        accs.append(float(metrics["accuracy"]))
+    return losses, accs
+
+
+def _tail(values, losses):
+    """Mean over the last-5 finite-loss steps; None once diverged."""
+    tail = [v for v, l in zip(values[-5:], losses[-5:]) if np.isfinite(l)]
+    return float(np.mean(tail)) if tail else None
+
+
+def run_sweep(quick: bool, steps: int, steps_per_epoch: int):
+    points = POINTS_QUICK if quick else POINTS_FULL
+    recipes = []
+    print(f"{'recipe':>14s} {'batch':>6s} {'lr_scale':>9s} "
+          f"{'final loss':>11s} {'final top1':>11s}")
+    for name, (kind, schedule, ls_eps) in RECIPES.items():
+        rows = []
+        for batch, lr_scale in points:
+            losses, accs = train_once(kind, schedule, ls_eps, batch,
+                                      lr_scale, steps, steps_per_epoch)
+            final_loss = _tail(losses, losses)
+            final_acc = _tail(accs, losses)
+            diverged = final_loss is None
+            rows.append({"global_batch": batch, "lr_scale": lr_scale,
+                         "final_loss": final_loss,
+                         "final_accuracy": final_acc,
+                         "diverged": diverged})
+            fl = "diverged" if diverged else f"{final_loss:.3f}"
+            fa = "-" if final_acc is None else f"{final_acc:.3f}"
+            print(f"{name:>14s} {batch:6d} {lr_scale:9.1f} {fl:>11s} "
+                  f"{fa:>11s}", flush=True)
+        recipes.append({"recipe": name, "optimizer": kind,
+                        "schedule": schedule,
+                        "label_smoothing": ls_eps, "points": rows})
+    return {
+        "bench": "scaling_sweep",
+        "arch": "resnet50-reduced",
+        "backend": jax.default_backend(),
+        "devices": jax.device_count(),
+        "quick": quick,
+        "steps": steps,
+        "steps_per_epoch": steps_per_epoch,
+        "batches": [b for b, _ in points],
+        "recipes": recipes,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+    }
 
 
 def main():
-    print(f"{'batch':>6s} {'lr_scale':>9s} {'sgd final':>10s} "
-          f"{'hybrid final':>13s}")
-    for batch, lr_scale in ((32, 1.0), (128, 8.0), (256, 24.0)):
-        sgd = train_once("momentum_sgd", "constant", batch, lr_scale)
-        hyb = train_once("rmsprop_warmup", "constant", batch, lr_scale)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized grid: fewer points, fewer steps")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="steps per cell (default: 30, or 10 w/ --quick)")
+    ap.add_argument("--steps-per-epoch", type=int, default=10)
+    ap.add_argument("--out", default="BENCH_scaling.json")
+    args = ap.parse_args()
+    steps = args.steps or (10 if args.quick else 30)
 
-        def final(ls):
-            tail = [l for l in ls[-5:] if np.isfinite(l)]
-            return f"{np.mean(tail):.3f}" if tail else "diverged"
-
-        print(f"{batch:6d} {lr_scale:9.1f} {final(sgd):>10s} "
-              f"{final(hyb):>13s}")
-    print("\nexpected: at high lr_scale the hybrid (paper recipe) stays "
-          "stable/lower while plain SGD degrades or diverges.")
+    result = run_sweep(args.quick, steps, args.steps_per_epoch)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"\nwrote {args.out}")
+    print("expected: at high lr_scale the trust-ratio recipes stay "
+          "stable/lower while the warm-up-only baseline degrades first.")
 
 
 if __name__ == "__main__":

@@ -277,9 +277,13 @@ class OptimizerConfig:
     transition: str = "elu"  # elu (paper) | sudden | linear | sigmoid
     weight_decay: float = 1e-4  # Goyal baseline WD (applied as L2-in-grad)
     base_lr_per_256: float = 0.1  # linear-scaling constant
-    schedule: str = "slow_start"  # slow_start | goyal
-    warmup_epochs: float = 5.0  # gradual warmup (goyal schedule only)
+    schedule: str = "slow_start"  # slow_start | goyal | poly | constant
+    warmup_epochs: float = 5.0  # gradual warmup (goyal/poly schedules)
     total_epochs: float = 90.0
+    # LARS (You et al.): layer-wise trust-ratio coefficient; poly_power
+    # is the "poly" schedule's decay exponent (2 in You/Yamazaki et al.)
+    trust_coef: float = 0.001
+    poly_power: float = 2.0
     use_fused_kernel: bool = False  # Pallas fused_update on TPU
     # beyond paper: bf16 optimizer state halves m/Delta residency (the
     # update math stays fp32) — what lets 400B fp32-master training fit

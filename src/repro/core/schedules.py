@@ -67,15 +67,39 @@ def goyal_lr(epoch, eta_base: float, warmup_epochs: float = 5.0,
     return jnp.where(epoch < warmup_epochs, warm, stepped)
 
 
+def poly_lr(epoch, eta_base: float, total_epochs: float = 90.0,
+            power: float = 2.0, warmup_epochs: float = 5.0,
+            base_lr_per_256: float = 0.1):
+    """LARS-recipe schedule (You et al.; Yamazaki et al. pair it with
+    label smoothing): gradual warmup from the single-worker LR to
+    eta_base over ``warmup_epochs``, then polynomial decay
+    ``eta_base * (1 - progress)**power`` to zero at ``total_epochs``
+    (power=2 in both papers)."""
+    epoch = jnp.asarray(epoch, jnp.float32)
+    start = base_lr_per_256  # = 0.1, the B=256 reference LR
+    frac = jnp.clip(epoch / warmup_epochs, 0.0, 1.0)
+    warm = start + (eta_base - start) * frac
+    span = max(total_epochs - warmup_epochs, 1e-6)
+    t = jnp.clip((epoch - warmup_epochs) / span, 0.0, 1.0)
+    decayed = eta_base * (1.0 - t) ** power
+    return jnp.where(epoch < warmup_epochs, warm, decayed)
+
+
 def make_lr_schedule(kind: str, global_batch: int, *,
                      base_lr_per_256: float = 0.1,
-                     warmup_epochs: float = 5.0):
+                     warmup_epochs: float = 5.0,
+                     total_epochs: float = 90.0,
+                     poly_power: float = 2.0):
     eta_base = linear_scaling_lr(global_batch, base_lr_per_256)
     if kind == "slow_start":
         return lambda epoch: slow_start_lr(epoch, eta_base)
     if kind == "goyal":
         return lambda epoch: goyal_lr(epoch, eta_base, warmup_epochs,
                                       base_lr_per_256)
+    if kind == "poly":
+        return lambda epoch: poly_lr(epoch, eta_base, total_epochs,
+                                     poly_power, warmup_epochs,
+                                     base_lr_per_256)
     if kind == "constant":
         return lambda epoch: jnp.asarray(eta_base, jnp.float32)
     raise ValueError(kind)

@@ -516,3 +516,46 @@ def shard_layout_to_stream(arr, plan: BucketPlan, n_shards: int):
     import numpy as np
 
     return arr[np.argsort(shard_perm(plan, n_shards), kind="stable")]
+
+
+# ---------------------------------------------------------------------------
+# Leaf-segment map (stream-layout LARS trust ratios, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+#
+# LARS needs per-leaf ||p||/||g|| over the *packed* stream: segment id i
+# marks every element of plan.slots[i]; the shard-alignment pad gets its
+# own trailing id len(slots), so it can never contaminate a real leaf's
+# norm. Per-segment squared norms are ``jax.ops.segment_sum`` reductions
+# — the one reduction primitive shared by the per-leaf reference
+# optimizer (optim/lars.py) and every stream path, which is what keeps
+# the two bitwise in lockstep on identical operands (CPU/TPU sums are
+# fold-order-sensitive; tests/test_lars_stream.py pins the equality).
+
+
+def segment_ids_stream(plan: BucketPlan):
+    """int32[padded_total] mapping each stream position to its leaf index
+    in ``plan.slots`` order; the alignment pad maps to the extra trailing
+    segment ``len(plan.slots)`` (never trusted, never decayed)."""
+    import numpy as np
+
+    ids = np.full((plan.padded_total,), len(plan.slots), np.int32)
+    for i, s in enumerate(plan.slots):
+        ids[s.offset:s.offset + s.size] = i
+    return ids
+
+
+def segment_sq_partials(x: jax.Array, seg_ids, num_segments: int
+                        ) -> jax.Array:
+    """f32[num_segments] per-segment sums of squares of flat ``x``.
+
+    ``x``/``seg_ids`` may be the full padded stream or any sub-slice of
+    it (a ZeRO worker shard): segment_sum accumulates each segment
+    independently of where its elements sit, so psum'ing per-shard
+    partials over the DP axes recovers the full-stream per-leaf norms —
+    exactly when the additions are order-exact (the Hypothesis property
+    test pins this with power-of-two data), to last-ulp otherwise
+    (which is why cross-decomposition parity is allclose, not bitwise;
+    DESIGN.md §11)."""
+    return jax.ops.segment_sum(
+        jnp.square(x.astype(jnp.float32)),
+        jnp.asarray(seg_ids), num_segments=num_segments)

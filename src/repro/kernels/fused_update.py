@@ -117,3 +117,128 @@ def fused_update_2d(g, p, d, m, scalars, *, mu1, mu2, eps, eta_rmsprop,
     if pad:
         outs = [o[:rows] for o in outs]
     return tuple(outs)
+
+
+# ---------------------------------------------------------------------------
+# Stream-LARS kernels (DESIGN.md §11): per-segment squared norms over the
+# packed stream, and the trust-scaled momentum update.
+# ---------------------------------------------------------------------------
+
+SEG_BLOCK_ROWS = 8  # one-hot tile (8*128 elems x padded segment count)
+
+
+def _seg_sq_kernel(g_ref, p_ref, wd_ref, seg_ref, out_ref):
+    """Accumulate per-segment sums of p^2 and (g + wd*p)^2 into rows 0/1
+    of an (8, n_seg_padded) f32 output block revisited by every grid
+    step (rows 2..7 are min-tile padding and stay zero). The per-segment
+    scatter is a one-hot matmul: (1, bm*128) @ (bm*128, n_seg)."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    g = g_ref[...]
+    p = p_ref[...]
+    ge = g + wd_ref[...] * p
+    seg = seg_ref[...]
+    bm, lanes = seg.shape
+    n_seg = out_ref.shape[1]
+    onehot = (seg.reshape(bm * lanes, 1) ==
+              jax.lax.broadcasted_iota(jnp.int32, (1, n_seg), 1)
+              ).astype(jnp.float32)
+    p_row = jnp.dot((p * p).reshape(1, bm * lanes), onehot,
+                    preferred_element_type=jnp.float32)
+    g_row = jnp.dot((ge * ge).reshape(1, bm * lanes), onehot,
+                    preferred_element_type=jnp.float32)
+    zeros = jnp.zeros((out_ref.shape[0] - 2, n_seg), jnp.float32)
+    out_ref[...] = out_ref[...] + jnp.concatenate([p_row, g_row, zeros], 0)
+
+
+def seg_sq_partials_2d(g, p, wd, seg, n_seg_padded, *, interpret=True,
+                       block_rows=SEG_BLOCK_ROWS):
+    """g/p/wd: (rows, 128) fp32; seg: (rows, 128) int32 segment ids.
+    Returns (2, n_seg_padded) f32: per-segment sums of [p^2, (g+wd*p)^2].
+
+    ``n_seg_padded`` must be a lane multiple (the wrapper in
+    kernels/ops.py pads and slices). Row padding points the pad elements
+    at segment ``n_seg_padded - 1`` with zero values — an exact +0.0."""
+    rows = g.shape[0]
+    block_rows = min(block_rows, rows)
+    pad = (-rows) % block_rows
+    if pad:
+        zrow = ((0, pad), (0, 0))
+        g = jnp.pad(g, zrow)
+        p = jnp.pad(p, zrow)
+        wd = jnp.pad(wd, zrow)
+        seg = jnp.pad(seg, zrow, constant_values=n_seg_padded - 1)
+    padded_rows = rows + pad
+    grid = (padded_rows // block_rows,)
+    tile = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    out = pl.pallas_call(
+        _seg_sq_kernel,
+        grid=grid,
+        in_specs=[tile, tile, tile, tile],
+        out_specs=pl.BlockSpec((8, n_seg_padded), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, n_seg_padded), jnp.float32),
+        interpret=interpret,
+    )(g, p, wd, seg)
+    return out[:2]
+
+
+def _lars_update_kernel(scalars_ref, trust_ref, g_ref, p_ref, d_ref,
+                        wd_ref, seg_ref, p_out, d_out, *, mu1):
+    """Trust-scaled momentum step. Per-element trust is looked up from
+    the (1, n_seg) trust row by an exact one-hot dot — a single 1.0
+    coefficient plus zeros, so the gather adds no rounding."""
+    eta = scalars_ref[0, 0]
+    g = g_ref[...]
+    p = p_ref[...]
+    d = d_ref[...]
+    ge = g + wd_ref[...] * p
+    seg = seg_ref[...]
+    bm, lanes = seg.shape
+    n_seg = trust_ref.shape[1]
+    onehot = (seg.reshape(bm * lanes, 1) ==
+              jax.lax.broadcasted_iota(jnp.int32, (1, n_seg), 1)
+              ).astype(jnp.float32)
+    t = jnp.dot(onehot, trust_ref[...].reshape(n_seg, 1),
+                preferred_element_type=jnp.float32).reshape(bm, lanes)
+    d_new = mu1 * d - t * ge
+    p_out[...] = p + eta * d_new
+    d_out[...] = d_new
+
+
+def lars_update_2d(g, p, d, wd, seg, trust_row, scalars, *, mu1,
+                   interpret=True, block_rows=SEG_BLOCK_ROWS):
+    """g/p/d/wd: (rows, 128) fp32; seg: (rows, 128) int32; trust_row:
+    (1, n_seg_padded) fp32 (1.0 in the padding columns); scalars: (1, 2)
+    [eta, unused]. Returns (p', d')."""
+    rows = g.shape[0]
+    n_seg = trust_row.shape[1]
+    block_rows = min(block_rows, rows)
+    pad = (-rows) % block_rows
+    if pad:
+        zrow = ((0, pad), (0, 0))
+        g = jnp.pad(g, zrow)
+        p = jnp.pad(p, zrow)
+        d = jnp.pad(d, zrow)
+        wd = jnp.pad(wd, zrow)
+        seg = jnp.pad(seg, zrow, constant_values=n_seg - 1)
+    padded_rows = rows + pad
+    grid = (padded_rows // block_rows,)
+    tile = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    outs = pl.pallas_call(
+        functools.partial(_lars_update_kernel, mu1=mu1),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 2), lambda i: (0, 0)),
+                  pl.BlockSpec((1, n_seg), lambda i: (0, 0)),
+                  tile, tile, tile, tile, tile],
+        out_specs=[tile, tile],
+        out_shape=[jax.ShapeDtypeStruct((padded_rows, LANES),
+                                        jnp.float32)] * 2,
+        interpret=interpret,
+    )(scalars, trust_row, g, p, d, wd, seg)
+    if pad:
+        outs = [o[:rows] for o in outs]
+    return tuple(outs)

@@ -65,6 +65,65 @@ def fused_hybrid_update(g, p, d, m, h, weight_decay=0.0) -> Tuple:
             unflat(m_new, jnp.float32))
 
 
+def _lars_flat(n, rows, pad):
+    """(flatten-to-(rows, 128)) helper shared by the stream-LARS wrappers
+    below; mirrors fused_hybrid_update's tiling."""
+    def flat(x, fill=0.0, dtype=jnp.float32):
+        x = x.astype(dtype).reshape(-1)
+        if pad:
+            x = jnp.concatenate(
+                [x, jnp.full((pad,), fill, dtype)])
+        return x.reshape(rows, LANES)
+    return flat
+
+
+def fused_segment_sq_partials(p, g, wd, seg, num_segments):
+    """(2, num_segments) f32 per-segment sums of [p^2, (g+wd*p)^2] over a
+    flat stream — the Pallas twin of stacking two
+    ``bucketing.segment_sq_partials`` calls (stream-LARS trust norms,
+    DESIGN.md §11). The one-hot-matmul fold order differs from
+    segment_sum's, so this path is allclose- (not bitwise-) parity
+    tested and excluded from the bitwise parity matrix."""
+    n = p.size
+    rows = max(1, -(-n // LANES))
+    pad = rows * LANES - n
+    flat = _lars_flat(n, rows, pad)
+    n_seg_padded = -(-num_segments // LANES) * LANES
+    out = _fu.seg_sq_partials_2d(
+        flat(g), flat(p), flat(wd),
+        flat(seg, fill=num_segments - 1, dtype=jnp.int32),
+        n_seg_padded, interpret=_interpret())
+    return out[:, :num_segments]
+
+
+def fused_lars_update(g, p, d, wd, seg, trust, eta, mu1):
+    """(p', d') trust-scaled momentum update on a flat stream: one fused
+    pass over 5 streams with the per-segment trust row resident in VMEM
+    (stream-LARS fused path, DESIGN.md §11)."""
+    orig_dtype = p.dtype
+    n = p.size
+    rows = max(1, -(-n // LANES))
+    pad = rows * LANES - n
+    flat = _lars_flat(n, rows, pad)
+    num_segments = trust.shape[0]
+    n_seg_padded = -(-num_segments // LANES) * LANES
+    trust_row = jnp.concatenate(
+        [trust.astype(jnp.float32),
+         jnp.ones((n_seg_padded - num_segments,), jnp.float32)]
+    ).reshape(1, n_seg_padded)
+    scalars = jnp.stack([jnp.asarray(eta, jnp.float32),
+                         jnp.zeros((), jnp.float32)]).reshape(1, 2)
+    p_new, d_new = _fu.lars_update_2d(
+        flat(g), flat(p), flat(d), flat(wd),
+        flat(seg, fill=n_seg_padded - 1, dtype=jnp.int32),
+        trust_row, scalars, mu1=mu1, interpret=_interpret())
+
+    def unflat(x, dtype):
+        return x.reshape(-1)[:n].astype(dtype)
+
+    return unflat(p_new, orig_dtype), unflat(d_new, jnp.float32)
+
+
 # ---------------------------------------------------------------------------
 # bucket pack/unpack (bucketed gradient all-reduce, DESIGN.md §6)
 # ---------------------------------------------------------------------------

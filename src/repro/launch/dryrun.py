@@ -104,7 +104,8 @@ def lower_cell(arch: str, shape_name: str, mesh: Mesh, *,
                compression: Optional[str] = "__default__",
                overlap_comm: bool = False,
                zero_dp: bool = False,
-               fused_bn: bool = False):
+               fused_bn: bool = False,
+               optimizer_kind: str = "rmsprop_warmup"):
     """Build + lower + compile one cell. Returns (record, compiled)."""
     cfg = get_config(arch)
     if fused_bn:
@@ -162,16 +163,21 @@ def lower_cell(arch: str, shape_name: str, mesh: Mesh, *,
                             attention_impl=attention_impl,
                             remat=parallel.remat == "block")
         p_shapes, p_axes = param_specs(model, jnp.float32)
-        opt_cfg = OptimizerConfig(kind="rmsprop_warmup")
+        opt_cfg = opt_cfg or OptimizerConfig(kind=optimizer_kind)
         train_cfg = TrainConfig(optimizer=opt_cfg, parallel=parallel)
         n_workers = 1
         for a in parallel.dp_axes:
             n_workers *= mesh.shape[a]
         repl = NamedSharding(mesh, P())
         dp_shard = NamedSharding(mesh, P(parallel.dp_axes))
-        if parallel.zero_dp:
-            # flat shard-layout delta/m, sharded over the dp axes
-            # (optim/stream.py, DESIGN.md §9)
+        from repro.core.compression import parse_compression as _pc
+        # stream layout: always under --zero; also LARS on the bucketed
+        # explicit-DP paths (stream-LARS, DESIGN.md §11)
+        use_stream = parallel.zero_dp or (
+            opt_cfg.kind == "lars" and _pc(parallel.compression)[1])
+        if use_stream:
+            # flat stream state: shard layout (dp-sharded) under --zero,
+            # full replicated stream otherwise (optim/stream.py)
             from repro.optim.stream import (
                 make_stream_optimizer,
                 zero_padded_total,
@@ -184,7 +190,10 @@ def lower_cell(arch: str, shape_name: str, mesh: Mesh, *,
                 n_workers)
             opt_shapes = jax.eval_shape(
                 lambda: optimizer.init(padded_total))
-            opt_shard = {"step": repl, "delta": dp_shard, "m": dp_shard}
+            field_shard = dp_shard if parallel.zero_dp else repl
+            opt_shard = {"step": repl,
+                         **{f: field_shard
+                            for f in optimizer.state_fields}}
         else:
             optimizer = make_optimizer(opt_cfg, steps_per_epoch=40,
                                        global_batch=shp.global_batch)
@@ -429,7 +438,8 @@ def analyze_compiled(arch, shp, cfg, mesh, compiled, resident
 def run_cells(archs, shapes, *, multi_pod=False, out_dir="results/dryrun",
               force=False, attention_impl="chunked", dp_mode="gspmd",
               compression="__default__", overlap_comm=False,
-              zero_dp=False, fused_bn=False):
+              zero_dp=False, fused_bn=False,
+              optimizer_kind="rmsprop_warmup"):
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
     if dp_mode != "gspmd":
@@ -442,6 +452,8 @@ def run_cells(archs, shapes, *, multi_pod=False, out_dir="results/dryrun",
         mesh_tag += "__zero"
     if fused_bn:
         mesh_tag += "__fusedbn"
+    if optimizer_kind != "rmsprop_warmup":
+        mesh_tag += f"__{optimizer_kind}"
     os.makedirs(out_dir, exist_ok=True)
     results = []
     for arch in archs:
@@ -465,7 +477,8 @@ def run_cells(archs, shapes, *, multi_pod=False, out_dir="results/dryrun",
                                            compression=compression,
                                            overlap_comm=overlap_comm,
                                            zero_dp=zero_dp,
-                                           fused_bn=fused_bn)
+                                           fused_bn=fused_bn,
+                                           optimizer_kind=optimizer_kind)
                 del compiled
             except Exception as e:
                 rec = {"arch": arch, "shape": shape_name, "status": "error",
@@ -527,6 +540,11 @@ def main():
                     help="fused Pallas BN at every ResNet BN site "
                          "(conv archs only; kernels/fused_bn.py, "
                          "DESIGN.md §10)")
+    ap.add_argument("--optimizer", default="rmsprop_warmup",
+                    choices=["rmsprop_warmup", "momentum_sgd", "lars"],
+                    help="optimizer kind for the shardmap train cells "
+                         "(lars + bucketed compression lowers the "
+                         "packed-stream LARS path, DESIGN.md §11)")
     args = ap.parse_args()
 
     if args.arch == "all":
@@ -540,7 +558,8 @@ def main():
                   force=args.force, attention_impl=args.attention_impl,
                   dp_mode=args.dp_mode, compression=args.compression,
                   overlap_comm=args.overlap_comm, zero_dp=args.zero,
-                  fused_bn=args.fused_bn)
+                  fused_bn=args.fused_bn,
+                  optimizer_kind=args.optimizer)
 
 
 if __name__ == "__main__":

@@ -61,6 +61,7 @@ def build_train_setup(cfg, *, global_batch: int, seq_len: int,
                       overlap_comm: bool = False,
                       zero_dp: bool = False,
                       fused_bn: bool = False,
+                      label_smoothing: float = 0.0,
                       data_noise: Optional[float] = None):
     """Returns (model, state, train_step, data, put_batch,
     state_shardings).
@@ -100,8 +101,16 @@ def build_train_setup(cfg, *, global_batch: int, seq_len: int,
         model = build_model(cfg, compute_dtype=compute_dtype,
                             attention_impl=attention_impl,
                             remat=cfg.n_layers > 8)
-    train_cfg = TrainConfig(optimizer=opt_cfg, parallel=parallel)
-    if zero_dp:
+    train_cfg = TrainConfig(optimizer=opt_cfg, parallel=parallel,
+                            label_smoothing=label_smoothing)
+    from repro.core.compression import parse_compression
+    _, bucketed = parse_compression(compression)
+    # packed-stream optimizer layout: always under --zero; also for LARS
+    # on the explicit bucketed DP paths (stream-LARS, DESIGN.md §11)
+    use_stream = zero_dp or (opt_cfg.kind == "lars"
+                             and dp_mode == "shardmap"
+                             and mesh is not None and bucketed)
+    if use_stream:
         from repro.optim.stream import make_stream_optimizer
         optimizer = make_stream_optimizer(opt_cfg, steps_per_epoch,
                                           global_batch,
@@ -130,14 +139,16 @@ def build_train_setup(cfg, *, global_batch: int, seq_len: int,
             "error_feedback is only implemented for the explicit "
             "shard_map DP mode on a mesh (dp_mode='shardmap'); the "
             "GSPMD path has no worker-local gradients to correct")
-    if zero_dp:
-        # flat shard-layout delta/m (optim/stream.py, DESIGN.md §9)
+    if zero_dp and mesh is None:
+        raise ValueError(
+            "--zero shards the optimizer update over a DP mesh; "
+            "pass a mesh (dp_mode='shardmap' builds a pure-DP one "
+            "by default in the CLI)")
+    if hasattr(optimizer, "update_shard"):
+        # flat stream state (optim/stream.py): shard layout under --zero
+        # (DESIGN.md §9), full replicated stream for stream-LARS — the
+        # padded length is the same either way
         from repro.optim.stream import zero_padded_total
-        if mesh is None:
-            raise ValueError(
-                "--zero shards the optimizer update over a DP mesh; "
-                "pass a mesh (dp_mode='shardmap' builds a pure-DP one "
-                "by default in the CLI)")
         opt_state = optimizer.init(zero_padded_total(
             params, compression, bucket_bytes, n_workers))
     else:
@@ -238,7 +249,10 @@ def main():
     ap.add_argument("--optimizer", default="rmsprop_warmup",
                     choices=["rmsprop_warmup", "momentum_sgd", "lars"])
     ap.add_argument("--schedule", default="slow_start",
-                    choices=["slow_start", "goyal", "constant"])
+                    choices=["slow_start", "goyal", "poly", "constant"])
+    ap.add_argument("--label-smoothing", type=float, default=0.0,
+                    help="label smoothing epsilon (large-batch recipes "
+                         "pair it with --schedule poly)")
     ap.add_argument("--steps-per-epoch", type=int, default=20)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
@@ -294,7 +308,8 @@ def main():
             bucket_bytes=args.bucket_mib * 1024 * 1024,
             error_feedback=args.error_feedback,
             overlap_comm=args.overlap_comm, zero_dp=args.zero,
-            fused_bn=args.fused_bn)
+            fused_bn=args.fused_bn,
+            label_smoothing=args.label_smoothing)
 
     metadata = {"arch": args.arch, "optimizer": args.optimizer,
                 "opt_layout": "zero_stream" if args.zero else "tree"}

@@ -1,6 +1,15 @@
 """LARS (You et al.) — beyond-paper alternative for extreme batch sizes,
 implemented for the ablation suite (the paper's Table 1 competitor [10]
-used a LARS-like approach at B=16k)."""
+used a LARS-like approach at B=16k).
+
+This per-leaf tree update is the *reference* for the packed-stream LARS
+in ``optim/stream.py`` (DESIGN.md §11): both compute squared norms
+through the same ``segment_sum`` primitive and the same
+``trust_from_sq`` ratio, so a single-process stream step is bitwise
+equal to this one (tests/test_lars_stream.py). Bias/BN leaves — the
+``NO_DECAY`` set — are exempt from the trust ratio (trust = 1) exactly
+as they are exempt from weight decay, per You et al.
+"""
 from __future__ import annotations
 
 import jax
@@ -8,15 +17,43 @@ import jax.numpy as jnp
 
 from repro.configs.base import OptimizerConfig
 from repro.core.schedules import make_lr_schedule
+from repro.distributed.bucketing import segment_sq_partials
 from repro.optim.interface import Optimizer, tree_zeros_like_f32
 from repro.optim.rmsprop_warmup import _decay_mask
 
 
+def leaf_sq_norm(x: jax.Array) -> jax.Array:
+    """Squared L2 norm of one leaf via the same one-segment
+    ``segment_sum`` the packed stream uses for its per-segment norms
+    (``distributed/bucketing.py:segment_sq_partials``). ``jnp.sum`` /
+    ``jnp.linalg.norm`` lower to a different reduction fold, so sharing
+    the primitive is what keeps reference and stream bitwise-equal on
+    identical operands."""
+    flat = x.reshape(-1)
+    return segment_sq_partials(flat, jnp.zeros(flat.shape, jnp.int32), 1)[0]
+
+
+def trust_from_sq(p_sq, g_sq, trust_coef, apply_trust):
+    """You et al. layer-wise trust ratio from squared norms; identity
+    where ``apply_trust`` is False (bias/BN leaves, the stream's
+    alignment-pad segment) or either norm vanishes. Shared verbatim by
+    this reference and ``optim/stream.py``'s ``trust_ratios``."""
+    p_n = jnp.sqrt(p_sq)
+    g_n = jnp.sqrt(g_sq)
+    return jnp.where(
+        apply_trust & (p_n > 0) & (g_n > 0),
+        trust_coef * p_n / (g_n + 1e-9), jnp.ones_like(p_n))
+
+
 def lars(cfg: OptimizerConfig, steps_per_epoch: int, global_batch: int,
-         trust_coef: float = 0.001, **_) -> Optimizer:
+         trust_coef=None, **_) -> Optimizer:
+    if trust_coef is None:
+        trust_coef = cfg.trust_coef
     lr_fn = make_lr_schedule(cfg.schedule, global_batch,
                              base_lr_per_256=cfg.base_lr_per_256,
-                             warmup_epochs=cfg.warmup_epochs)
+                             warmup_epochs=cfg.warmup_epochs,
+                             total_epochs=cfg.total_epochs,
+                             poly_power=cfg.poly_power)
 
     def init(params):
         return {"step": jnp.zeros((), jnp.int32),
@@ -33,11 +70,12 @@ def lars(cfg: OptimizerConfig, steps_per_epoch: int, global_batch: int,
             p32 = p.astype(jnp.float32)
             if do_decay:
                 g32 = g32 + cfg.weight_decay * p32
-            p_norm = jnp.linalg.norm(p32)
-            g_norm = jnp.linalg.norm(g32)
-            trust = jnp.where(
-                (p_norm > 0) & (g_norm > 0),
-                trust_coef * p_norm / (g_norm + 1e-9), 1.0)
+                trust = trust_from_sq(leaf_sq_norm(p32), leaf_sq_norm(g32),
+                                      trust_coef, True)
+            else:
+                # NO_DECAY (bias/BN) leaves skip the trust ratio too:
+                # plain momentum, matching the stream's masked segments
+                trust = jnp.float32(1.0)
             d_new = cfg.mu1 * d - trust * g32
             return (p32 + eta * d_new).astype(p.dtype), d_new
 

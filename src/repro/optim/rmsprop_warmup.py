@@ -49,7 +49,9 @@ def rmsprop_warmup(cfg: OptimizerConfig, steps_per_epoch: int,
                    global_batch: int, use_fused: bool = False) -> Optimizer:
     lr_fn = make_lr_schedule(cfg.schedule, global_batch,
                              base_lr_per_256=cfg.base_lr_per_256,
-                             warmup_epochs=cfg.warmup_epochs)
+                             warmup_epochs=cfg.warmup_epochs,
+                             total_epochs=cfg.total_epochs,
+                             poly_power=cfg.poly_power)
     state_dtype = jnp.dtype(cfg.state_dtype)
 
     def init(params):

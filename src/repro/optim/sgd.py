@@ -17,7 +17,9 @@ def momentum_sgd(cfg: OptimizerConfig, steps_per_epoch: int,
     lr_fn = make_lr_schedule("goyal" if cfg.schedule == "goyal" else
                              cfg.schedule, global_batch,
                              base_lr_per_256=cfg.base_lr_per_256,
-                             warmup_epochs=cfg.warmup_epochs)
+                             warmup_epochs=cfg.warmup_epochs,
+                             total_epochs=cfg.total_epochs,
+                             poly_power=cfg.poly_power)
 
     def init(params):
         return {"step": jnp.zeros((), jnp.int32),

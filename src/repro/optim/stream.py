@@ -22,7 +22,7 @@ checkpoints (``checkpoint/checkpointer.py:restore(transform=...)``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +33,7 @@ from repro.core.optimizer import HybridHyper, alpha_rmsprop
 from repro.core.schedules import alpha_sgd_schedule, make_lr_schedule
 from repro.distributed.bucketing import (
     BucketPlan,
+    segment_sq_partials,
     shard_layout_to_stream,
     stream_to_shard_layout,
 )
@@ -54,24 +55,38 @@ class StreamOptimizer:
     """
 
     init: Callable[[int], PyTree]
-    update_shard: Callable  # (p, g, delta, m, step, wd) -> (p', d', m', metrics)
+    # rmsprop_warmup: (p, g, delta, m, step, wd) -> (p', d', m', metrics)
+    # lars:           (p, g, delta, step, wd, seg, trust) -> (p', d', metrics)
+    update_shard: Callable
     wd_stream: Callable  # (tree matching plan.treedef, plan) -> np.f32[padded]
     kind: str
     state_fields: Tuple[str, ...] = ZERO_STATE_FIELDS
+    # stream-LARS only (None for rmsprop_warmup): per-segment [p^2,
+    # (g+wd*p)^2] partial sums over a locally-held slice, and the trust
+    # vector from the psum'd totals. The psum between them belongs to
+    # the caller (training/step.py) — the optimizer stays collective-free
+    # so the same code runs on a ZeRO shard or the full stream.
+    segment_partials: Optional[Callable] = None
+    trust_ratios: Optional[Callable] = None
 
 
 def make_stream_optimizer(cfg: OptimizerConfig, steps_per_epoch: int,
                           global_batch: int,
                           use_fused: bool = False) -> StreamOptimizer:
-    """Packed-stream rmsprop_warmup. The math is the same
+    """Packed-stream optimizers: ``rmsprop_warmup`` (the same
     ``core.optimizer.hybrid_update`` formula applied to the flat shard —
     elementwise, so position in the stream cannot change any value; the
-    only per-leaf input, the decay mask, rides along as ``wd_stream``."""
+    only per-leaf input, the decay mask, rides along as ``wd_stream``)
+    and ``lars`` (elementwise update plus per-segment trust norms,
+    DESIGN.md §11)."""
+    if cfg.kind == "lars":
+        return _make_stream_lars(cfg, steps_per_epoch, global_batch,
+                                 use_fused)
     if cfg.kind != "rmsprop_warmup":
         raise ValueError(
-            f"--zero shards the rmsprop_warmup update; got optimizer "
-            f"kind {cfg.kind!r} (momentum_sgd/lars keep the replicated "
-            "tree update)")
+            f"the packed stream shards the rmsprop_warmup and lars "
+            f"updates; got optimizer kind {cfg.kind!r} (momentum_sgd "
+            "keeps the replicated tree update)")
     lr_fn = make_lr_schedule(cfg.schedule, global_batch,
                              base_lr_per_256=cfg.base_lr_per_256,
                              warmup_epochs=cfg.warmup_epochs)
@@ -119,6 +134,89 @@ def make_stream_optimizer(cfg: OptimizerConfig, steps_per_epoch: int,
 
     return StreamOptimizer(init=init, update_shard=update_shard,
                            wd_stream=wd_stream, kind=cfg.kind)
+
+
+def _make_stream_lars(cfg: OptimizerConfig, steps_per_epoch: int,
+                      global_batch: int,
+                      use_fused: bool) -> StreamOptimizer:
+    """Stream-layout LARS (DESIGN.md §11). Trust ratios need per-leaf
+    norms over the *whole* stream, so the update splits in three:
+    ``segment_partials`` reduces whatever slice this worker holds (the
+    full stream, or a ZeRO shard — a leaf may span shard boundaries) to
+    per-segment squared-norm partial sums; the caller psums the (2, L+1)
+    partials over the DP axes; ``trust_ratios`` turns the totals into
+    the per-segment trust vector; and ``update_shard`` applies the
+    trust-scaled momentum step elementwise. Identical programs on a
+    shard and on the full stream — which is what keeps all four sync
+    modes in lockstep (tests/test_lars_stream.py)."""
+    from repro.optim.lars import trust_from_sq
+
+    lr_fn = make_lr_schedule(cfg.schedule, global_batch,
+                             base_lr_per_256=cfg.base_lr_per_256,
+                             warmup_epochs=cfg.warmup_epochs,
+                             total_epochs=cfg.total_epochs,
+                             poly_power=cfg.poly_power)
+    state_dtype = jnp.dtype(cfg.state_dtype)
+
+    def init(padded_total: int) -> PyTree:
+        return {"step": jnp.zeros((), jnp.int32),
+                "delta": jnp.zeros((padded_total,), state_dtype)}
+
+    def segment_partials(p_loc, g_loc, wd_loc, seg_loc, num_segments):
+        if use_fused:
+            from repro.kernels import ops as kops
+            return kops.fused_segment_sq_partials(p_loc, g_loc, wd_loc,
+                                                  seg_loc, num_segments)
+        p32 = p_loc.astype(jnp.float32)
+        g_eff = g_loc.astype(jnp.float32) + wd_loc * p32
+        return jnp.stack([segment_sq_partials(p32, seg_loc, num_segments),
+                          segment_sq_partials(g_eff, seg_loc,
+                                              num_segments)])
+
+    def trust_ratios(totals, trust_mask):
+        """(L+1,) trust from the psum'd (2, L+1) totals; 1.0 on masked
+        segments (bias/BN leaves, the alignment pad)."""
+        return trust_from_sq(totals[0], totals[1], cfg.trust_coef,
+                             trust_mask)
+
+    def update_shard(p_loc, g_loc, delta_loc, step, wd_loc, seg_loc,
+                     trust):
+        """One trust-scaled momentum step on the locally-held slice.
+        Pad elements sit in segment L with wd=0/g=0/delta=0 and stay
+        exactly zero forever."""
+        epoch = step.astype(jnp.float32) / steps_per_epoch
+        eta = lr_fn(epoch)
+        d32 = delta_loc.astype(jnp.float32)
+        if use_fused:
+            from repro.kernels import ops as kops
+            p_new, d_new = kops.fused_lars_update(
+                g_loc, p_loc, d32, wd_loc, seg_loc, trust, eta, cfg.mu1)
+        else:
+            p32 = p_loc.astype(jnp.float32)
+            g_eff = g_loc.astype(jnp.float32) + wd_loc * p32
+            d_new = cfg.mu1 * d32 - trust[seg_loc] * g_eff
+            p_new = (p32 + eta * d_new).astype(p_loc.dtype)
+        metrics = {"lr": eta, "epoch": epoch}
+        return p_new, d_new.astype(state_dtype), metrics
+
+    def wd_stream(tree: PyTree, plan: BucketPlan) -> np.ndarray:
+        return decay_wd_stream(tree, plan, cfg.weight_decay)
+
+    return StreamOptimizer(init=init, update_shard=update_shard,
+                           wd_stream=wd_stream, kind="lars",
+                           state_fields=("delta",),
+                           segment_partials=segment_partials,
+                           trust_ratios=trust_ratios)
+
+
+def trust_mask_segments(tree: PyTree, plan: BucketPlan) -> np.ndarray:
+    """bool[len(slots) + 1]: True where a stream segment participates in
+    the LARS trust ratio. The exemption set is exactly the no-decay set
+    (``_decay_mask``: bias/BN leaves), per You et al.; the trailing
+    alignment-pad segment is always exempt."""
+    mask_leaves = plan.treedef.flatten_up_to(_decay_mask(tree))
+    assert len(mask_leaves) == len(plan.slots)
+    return np.asarray(list(mask_leaves) + [False], bool)
 
 
 def zero_padded_total(params: PyTree, compression: str,
@@ -240,14 +338,17 @@ def tree_arrays_to_zero_state(arrays: Dict[str, np.ndarray],
 
 
 def make_zero_restore_transform(plan: BucketPlan, key_tree: PyTree,
-                                n_shards: int, to_zero: bool):
+                                n_shards: int, to_zero: bool,
+                                fields: Tuple[str, ...] = ZERO_STATE_FIELDS):
     """A ``checkpoint.restore(transform=...)`` hook crossing the
     zero/non-zero boundary: ``to_zero=True`` reshapes a tree-layout
-    checkpoint for a --zero target, ``False`` the reverse."""
+    checkpoint for a --zero target, ``False`` the reverse. ``fields``
+    names the flat opt-state arrays to convert — ``("delta", "m")`` for
+    rmsprop_warmup, ``("delta",)`` for LARS (``optimizer.state_fields``)."""
     def transform(arrays, manifest):
         del manifest
         fn = (tree_arrays_to_zero_state if to_zero
               else zero_state_to_tree_arrays)
-        return fn(arrays, plan, key_tree, n_shards)
+        return fn(arrays, plan, key_tree, n_shards, fields=fields)
 
     return transform

@@ -248,11 +248,17 @@ def _pmean_metrics(metrics: Dict, dp_axes: Sequence[str]) -> Dict:
 
 
 def _wrap_dp_step(local_step, mesh: Mesh, dp_axes: Sequence[str],
-                  use_ef: bool, opt_specs=None):
+                  use_ef: bool, opt_specs=None, aux_builder=None):
     """shard_map plumbing shared by the explicit-DP step builders:
     params/opt replicated, model_state (and EF residual) per-worker.
     ``opt_specs`` overrides the replicated default for the opt state —
-    the ZeRO mode shards delta/m over the DP axis (DESIGN.md §9)."""
+    the ZeRO mode shards the stream state over the DP axis
+    (DESIGN.md §9). ``aux_builder(state, batch) -> (aux, aux_specs)``,
+    if given,
+    appends extra input-only arguments after the EF residual — the
+    packed-stream side inputs (wd/segment streams) ride in as sharded
+    shard_map *inputs* instead of being baked into every rank's program
+    as full-stream trace constants (DESIGN.md §11)."""
     from jax.experimental.shard_map import shard_map
 
     batch_spec = P(tuple(dp_axes))
@@ -280,6 +286,10 @@ def _wrap_dp_step(local_step, mesh: Mesh, dp_axes: Sequence[str],
             in_specs += (ef_spec,)
             out_specs += (ef_spec,)
             args += (state["ef_residual"],)
+        if aux_builder is not None:
+            aux, aux_specs = aux_builder(state, batch)
+            in_specs += (aux_specs,)
+            args += (aux,)
         fn = shard_map(local_step, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, check_rep=False)
         outs = fn(*args)
@@ -299,6 +309,14 @@ def _wrap_dp_step(local_step, mesh: Mesh, dp_axes: Sequence[str],
 # ---------------------------------------------------------------------------
 
 
+def _static_dp_size(dp_axes, mesh: Mesh) -> int:
+    """Total DP degree as a python int (a trace constant)."""
+    n = 1
+    for a in dp_axes:
+        n *= int(mesh.shape[a])
+    return n
+
+
 def _zero_checks(parallel, dp_axes, optimizer, bucketed: bool,
                  mesh: Mesh) -> int:
     """Validate a --zero step request; returns the static DP size."""
@@ -312,12 +330,82 @@ def _zero_checks(parallel, dp_axes, optimizer, bucketed: bool,
             "zero_dp needs a packed-stream optimizer "
             "(optim/stream.py:make_stream_optimizer), got "
             f"{type(optimizer).__name__}")
-    n = 1
-    for a in dp_axes:
-        n *= int(mesh.shape[a])
+    n = _static_dp_size(dp_axes, mesh)
     if n < 2:
         raise ValueError(f"zero_dp needs DP degree >= 2, got {n}")
     return n
+
+
+def _stream_checks(parallel, optimizer, bucketed: bool) -> None:
+    """Validate a non-zero packed-stream step request (stream-LARS)."""
+    if not bucketed:
+        raise ValueError(
+            "the packed-stream optimizer updates a contiguous stream, "
+            "which requires bucketed compression (e.g. "
+            "compression='bf16+bucketed', got "
+            f"{parallel.compression!r}; DESIGN.md §11)")
+    if optimizer.kind != "lars":
+        raise ValueError(
+            "non-zero packed-stream updates exist for kind='lars' only "
+            "(rmsprop_warmup uses the replicated tree update unless "
+            f"--zero shards it); got kind={optimizer.kind!r}")
+
+
+def _stream_aux(optimizer, plan, param_tree, n: int, dp_axes,
+                sharded: bool):
+    """Static per-element side inputs of a packed-stream update, built at
+    trace level to ride in as shard_map *inputs* (the carried ROADMAP
+    fix): the wd stream — and for LARS the segment-id stream and trust
+    mask — are plan constants, but feeding them through ``in_specs``
+    makes them one outer (shardable) array instead of a full
+    padded-stream constant baked into every rank's program.
+
+    ``sharded=True`` (ZeRO): wd/seg are converted to shard layout and
+    partitioned with ``P(dp_axes)``, so worker w's block is exactly its
+    shard in bucket-chunk order — matching the scattered gradient.
+    ``sharded=False`` (non-zero stream-LARS): full streams, replicated.
+    """
+    from repro.distributed.bucketing import (
+        segment_ids_stream,
+        stream_to_shard_layout,
+    )
+
+    spec = P(tuple(dp_axes)) if sharded else P()
+
+    def as_input(arr):
+        return jnp.asarray(stream_to_shard_layout(arr, plan, n)
+                           if sharded else arr)
+
+    aux = {"wd": as_input(optimizer.wd_stream(param_tree, plan))}
+    specs = {"wd": spec}
+    if optimizer.kind == "lars":
+        from repro.optim.stream import trust_mask_segments
+        aux["seg"] = as_input(segment_ids_stream(plan))
+        specs["seg"] = spec
+        aux["trust_mask"] = jnp.asarray(
+            trust_mask_segments(param_tree, plan))
+        specs["trust_mask"] = P()
+    return aux, specs
+
+
+def _cast_divide_stream(stream, plan, n):
+    """Cast a synced wire stream back to fp32 and divide by the worker
+    count with exactly ``unpack()``'s ops — elementwise, so a scattered
+    shard and the full stream get bitwise-equal values."""
+    from repro.distributed.bucketing import _kernel_on
+
+    acc_dtypes = {jnp.dtype(s.dtype) for s in plan.slots}
+    if acc_dtypes != {jnp.dtype(jnp.float32)}:
+        raise ValueError(
+            "packed-stream updates need a uniform fp32 param tree; got "
+            f"leaf dtypes {sorted(d.name for d in acc_dtypes)}")
+    if stream.dtype != jnp.float32:
+        if _kernel_on(None):
+            from repro.kernels.ops import unpack_cast
+            stream = unpack_cast(stream, jnp.float32)
+        else:
+            stream = stream.astype(jnp.float32)
+    return stream / n
 
 
 def _dp_linear_index(dp_axes: Sequence[str], mesh: Mesh):
@@ -332,40 +420,29 @@ def _dp_linear_index(dp_axes: Sequence[str], mesh: Mesh):
 
 
 def _zero_sharded_update(optimizer, plan, param_tree, g_shard, opt,
-                         n: int, dp_axes: Sequence[str], mesh: Mesh):
+                         n: int, dp_axes: Sequence[str], mesh: Mesh,
+                         aux):
     """The rank-local half of the ZeRO step: cast+divide the scattered
     gradient shard exactly as ``unpack`` would (bitwise-equal elements),
-    update the worker-owned param shard against the dp-sharded delta/m,
-    all-gather the updated slices per bucket, and unpack back to the
-    plan-structured param tree.
+    update the worker-owned param shard against the dp-sharded stream
+    state, all-gather the updated slices per bucket, and unpack back to
+    the plan-structured param tree.
+
+    ``aux`` carries the per-element side inputs (``_stream_aux``,
+    sharded=True): this worker's shard of the wd stream — and for LARS
+    the segment-id shard plus the replicated trust mask. The LARS trust
+    norms are the shard's per-segment partial sums psum'd over the DP
+    axes (a leaf may span shard boundaries, DESIGN.md §11); the update
+    itself stays on the worker-owned shard.
 
     Returns ``(new_param_tree, new_opt, opt_metrics, local_sq)`` where
     ``local_sq`` is this worker's partial squared grad norm (the caller
     folds it into the stacked metrics pmean, DESIGN.md §8)."""
     import dataclasses as _dc
 
-    from repro.distributed.bucketing import (
-        _kernel_on,
-        pack,
-        shard_chunks,
-        stream_to_shard_layout,
-        unpack,
-    )
+    from repro.distributed.bucketing import pack, shard_chunks, unpack
 
-    acc_dtypes = {jnp.dtype(s.dtype) for s in plan.slots}
-    if acc_dtypes != {jnp.dtype(jnp.float32)}:
-        raise ValueError(
-            "zero_dp packs params/grads as one fp32 stream; got leaf "
-            f"dtypes {sorted(d.name for d in acc_dtypes)}")
-    # cast back + divide: same ops, same order as unpack() applies to the
-    # full stream — elementwise, so the shard's values match bitwise
-    if g_shard.dtype != jnp.float32:
-        if _kernel_on(None):
-            from repro.kernels.ops import unpack_cast
-            g_shard = unpack_cast(g_shard, jnp.float32)
-        else:
-            g_shard = g_shard.astype(jnp.float32)
-    g_shard = g_shard / n
+    g_shard = _cast_divide_stream(g_shard, plan, n)
     local_sq = jnp.sum(jnp.square(g_shard))
 
     chunks = shard_chunks(plan, n)
@@ -376,15 +453,23 @@ def _zero_sharded_update(optimizer, plan, param_tree, g_shard, opt,
     p_shard = jnp.concatenate(
         [jax.lax.dynamic_slice(b, (w * c,), (c,))
          for b, c in zip(p_buckets, chunks)])
-    wd_shards = jnp.asarray(stream_to_shard_layout(
-        optimizer.wd_stream(param_tree, plan), plan, n))
-    shard_len = sum(chunks)
-    wd_shard = jax.lax.dynamic_slice(wd_shards, (w * shard_len,),
-                                     (shard_len,))
+    wd_shard = aux["wd"]
 
-    p_new, d_new, m_new, opt_metrics = optimizer.update_shard(
-        p_shard, g_shard, opt["delta"], opt["m"], opt["step"], wd_shard)
-    new_opt = {"step": opt["step"] + 1, "delta": d_new, "m": m_new}
+    if optimizer.kind == "lars":
+        num_segments = len(plan.slots) + 1
+        partials = optimizer.segment_partials(
+            p_shard, g_shard, wd_shard, aux["seg"], num_segments)
+        totals = jax.lax.psum(partials, tuple(dp_axes))
+        trust = optimizer.trust_ratios(totals, aux["trust_mask"])
+        p_new, d_new, opt_metrics = optimizer.update_shard(
+            p_shard, g_shard, opt["delta"], opt["step"], wd_shard,
+            aux["seg"], trust)
+        new_opt = {"step": opt["step"] + 1, "delta": d_new}
+    else:
+        p_new, d_new, m_new, opt_metrics = optimizer.update_shard(
+            p_shard, g_shard, opt["delta"], opt["m"], opt["step"],
+            wd_shard)
+        new_opt = {"step": opt["step"] + 1, "delta": d_new, "m": m_new}
 
     off, gathered = 0, []
     for c in chunks:
@@ -393,6 +478,47 @@ def _zero_sharded_update(optimizer, plan, param_tree, g_shard, opt,
                                            tiled=True))
         off += c
     new_param_tree = unpack(gathered, p_plan)
+    return new_param_tree, new_opt, opt_metrics, local_sq
+
+
+def _stream_full_update(optimizer, plan, param_tree, g_stream, opt,
+                        n: int, dp_axes: Sequence[str], mesh: Mesh, aux):
+    """Replicated-stream LARS update for the non-zero packed paths
+    (DESIGN.md §11): the update itself runs on the full synced stream on
+    every worker — like the replicated tree update — but the trust norms
+    come from the *identical* shard-decomposed program as the ZeRO path:
+    each worker reduces only its own 1/N slice (the same chunks
+    ``psum_scatter`` would hand it) and the (2, L+1) partials are
+    psum'd. Same reduction tree, same fold order — which is what makes
+    bucketed<->zero and overlap<->zero-overlap parameters bitwise-equal
+    (tests/test_lars_stream.py).
+
+    ``g_stream`` must already be cast+divided (``_cast_divide_stream``).
+    Returns ``(new_param_tree, new_opt, opt_metrics, local_sq)``."""
+    import dataclasses as _dc
+
+    from repro.distributed.bucketing import local_shard, pack, unpack
+
+    w = _dp_linear_index(dp_axes, mesh)
+    p_plan = _dc.replace(plan, wire=None,
+                         stream_dtype=jnp.dtype(jnp.float32))
+    p_stream = jnp.concatenate(pack(param_tree, p_plan))
+
+    g_loc = local_shard(g_stream, plan, n, w)
+    local_sq = jnp.sum(jnp.square(g_loc))
+    num_segments = len(plan.slots) + 1
+    partials = optimizer.segment_partials(
+        local_shard(p_stream, plan, n, w), g_loc,
+        local_shard(aux["wd"], plan, n, w),
+        local_shard(aux["seg"], plan, n, w), num_segments)
+    totals = jax.lax.psum(partials, tuple(dp_axes))
+    trust = optimizer.trust_ratios(totals, aux["trust_mask"])
+
+    p_new, d_new, opt_metrics = optimizer.update_shard(
+        p_stream, g_stream, opt["delta"], opt["step"], aux["wd"],
+        aux["seg"], trust)
+    new_opt = {"step": opt["step"] + 1, "delta": d_new}
+    new_param_tree = unpack([p_new], p_plan)
     return new_param_tree, new_opt, opt_metrics, local_sq
 
 
@@ -435,6 +561,12 @@ def make_dp_shardmap_train_step(model, optimizer: Optimizer,
     if parallel.zero_dp:
         return _make_dp_zero_train_step(model, optimizer, train_cfg, mesh,
                                         dp_axes, wire, bucketed)
+    if hasattr(optimizer, "update_shard"):
+        # non-zero packed-stream optimizer (stream-LARS): replicated
+        # update over the full synced stream, shard-decomposed trust
+        # norms (DESIGN.md §11)
+        return _make_dp_stream_train_step(model, optimizer, train_cfg,
+                                          mesh, dp_axes, wire, bucketed)
 
     def sync_grads(grads, residual):
         """One of the four (per-leaf|bucketed) x (plain|EF) sync paths.
@@ -499,7 +631,9 @@ def _make_dp_zero_train_step(model, optimizer, train_cfg: TrainConfig,
     use_ef = parallel.error_feedback
     n = _zero_checks(parallel, dp_axes, optimizer, bucketed, mesh)
 
-    def local_step(params, mstate, opt, batch, residual=None):
+    def local_step(params, mstate, opt, batch, *extra):
+        residual = extra[0] if use_ef else None
+        aux = extra[-1]
         local_mstate = jax.tree.map(lambda x: x[0], mstate)
         (loss, (new_mstate, metrics)), grads = jax.value_and_grad(
             model.loss_fn, has_aux=True)(params, local_mstate, batch,
@@ -517,7 +651,7 @@ def _make_dp_zero_train_step(model, optimizer, train_cfg: TrainConfig,
                                   tiled=True)
              for b in pack(quant, plan)])
         new_params, new_opt, opt_metrics, local_sq = _zero_sharded_update(
-            optimizer, plan, params, g_shard, opt, n, dp_axes, mesh)
+            optimizer, plan, params, g_shard, opt, n, dp_axes, mesh, aux)
         metrics["grad_sq_local"] = local_sq
         metrics = _zero_grad_norm(_pmean_metrics(metrics, dp_axes), n)
         metrics.update(opt_metrics)
@@ -527,10 +661,75 @@ def _make_dp_zero_train_step(model, optimizer, train_cfg: TrainConfig,
             out += (jax.tree.map(lambda x: x[None], new_residual),)
         return out
 
-    opt_specs = {"step": P(), "delta": P(tuple(dp_axes)),
-                 "m": P(tuple(dp_axes))}
+    def aux_builder(state, batch):
+        plan = plan_buckets(state["params"], parallel.bucket_bytes, wire,
+                            align=n)
+        return _stream_aux(optimizer, plan, state["params"], n, dp_axes,
+                           sharded=True)
+
+    opt_specs = {"step": P(), **{f: P(tuple(dp_axes))
+                                 for f in optimizer.state_fields}}
     return _wrap_dp_step(local_step, mesh, dp_axes, use_ef,
-                         opt_specs=opt_specs)
+                         opt_specs=opt_specs, aux_builder=aux_builder)
+
+
+def _make_dp_stream_train_step(model, optimizer, train_cfg: TrainConfig,
+                               mesh: Mesh, dp_axes: Sequence[str],
+                               wire, bucketed: bool):
+    """Non-zero packed-stream variant of the plain bucketed DP step
+    (stream-LARS, DESIGN.md §11): pack -> psum per bucket -> replicated
+    update over the full fp32 stream, with the LARS trust norms reduced
+    shard-by-shard exactly as the ZeRO path reduces them — which is what
+    makes this path's parameters bitwise-equal to ``--zero``'s
+    (tests/test_lars_stream.py). Error feedback stays rank-local and
+    full-tree, applied before packing, as in ``bucketed_psum_ef``."""
+    from repro.core.compression import apply_error_feedback
+    from repro.distributed.bucketing import pack, plan_buckets
+
+    parallel = train_cfg.parallel
+    use_ef = parallel.error_feedback
+    _stream_checks(parallel, optimizer, bucketed)
+    n = _static_dp_size(dp_axes, mesh)
+
+    def local_step(params, mstate, opt, batch, *extra):
+        residual = extra[0] if use_ef else None
+        aux = extra[-1]
+        local_mstate = jax.tree.map(lambda x: x[0], mstate)
+        (loss, (new_mstate, metrics)), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(params, local_mstate, batch,
+                                         train_cfg.label_smoothing)
+        if use_ef:
+            local_residual = jax.tree.map(lambda x: x[0], residual)
+            quant, new_residual = apply_error_feedback(
+                grads, local_residual, wire)
+        else:
+            quant, new_residual = grads, None
+        # shard-aligned plan (align=n): not required for the psum itself,
+        # but it gives every rank the same 1/N norm slices as the ZeRO
+        # reduce-scatter would — the bitwise-parity contract above
+        plan = plan_buckets(quant, parallel.bucket_bytes, wire, align=n)
+        synced = [jax.lax.psum(b, tuple(dp_axes))
+                  for b in pack(quant, plan)]
+        g_stream = _cast_divide_stream(jnp.concatenate(synced), plan, n)
+        new_params, new_opt, opt_metrics, local_sq = _stream_full_update(
+            optimizer, plan, params, g_stream, opt, n, dp_axes, mesh, aux)
+        metrics["grad_sq_local"] = local_sq
+        metrics = _zero_grad_norm(_pmean_metrics(metrics, dp_axes), n)
+        metrics.update(opt_metrics)
+        new_mstate = jax.tree.map(lambda x: x[None], new_mstate)
+        out = (new_params, new_mstate, new_opt, metrics)
+        if use_ef:
+            out += (jax.tree.map(lambda x: x[None], new_residual),)
+        return out
+
+    def aux_builder(state, batch):
+        plan = plan_buckets(state["params"], parallel.bucket_bytes, wire,
+                            align=n)
+        return _stream_aux(optimizer, plan, state["params"], n, dp_axes,
+                           sharded=False)
+
+    return _wrap_dp_step(local_step, mesh, dp_axes, use_ef,
+                         aux_builder=aux_builder)
 
 
 def make_dp_overlap_train_step(model, optimizer: Optimizer,
@@ -572,10 +771,20 @@ def make_dp_overlap_train_step(model, optimizer: Optimizer,
             " DESIGN.md §8)")
     dp_axes = tuple(dp_axes)
     use_zero = parallel.zero_dp
-    n_static = (_zero_checks(parallel, dp_axes, optimizer, _bucketed, mesh)
-                if use_zero else 1)
+    use_stream = hasattr(optimizer, "update_shard")
+    if use_zero:
+        n_static = _zero_checks(parallel, dp_axes, optimizer, _bucketed,
+                                mesh)
+    elif use_stream:
+        # non-zero stream-LARS rides the same shard-aligned ready plan
+        _stream_checks(parallel, optimizer, _bucketed)
+        n_static = _static_dp_size(dp_axes, mesh)
+    else:
+        n_static = 1
 
-    def local_step(params, mstate, opt, batch, residual=None):
+    def local_step(params, mstate, opt, batch, *extra):
+        residual = extra[0] if use_ef else None
+        aux = extra[-1] if use_stream else None
         local_mstate = jax.tree.map(lambda x: x[0], mstate)
         staged = model.loss_segments(params, local_mstate, batch,
                                      train_cfg.label_smoothing)
@@ -641,7 +850,24 @@ def make_dp_overlap_train_step(model, optimizer: Optimizer,
             new_param_rev, new_opt, opt_metrics, local_sq = \
                 _zero_sharded_update(optimizer, plan.base, param_rev,
                                      g_shard, opt, n_static, dp_axes,
-                                     mesh)
+                                     mesh, aux)
+            new_params = staged.merge_grads(
+                list(reversed(list(new_param_rev))))
+            metrics["grad_sq_local"] = local_sq
+            metrics = _zero_grad_norm(_pmean_metrics(metrics, dp_axes),
+                                      n_static)
+        elif use_stream:
+            # non-zero stream-LARS: full all-reduced stream, replicated
+            # update; trust norms shard-decomposed as in the ZeRO branch
+            g_stream = _cast_divide_stream(
+                jnp.concatenate([synced[b]
+                                 for b in range(plan.n_buckets)]),
+                plan.base, n_static)
+            param_rev = tuple(reversed(staged.seg_params))
+            new_param_rev, new_opt, opt_metrics, local_sq = \
+                _stream_full_update(optimizer, plan.base, param_rev,
+                                    g_stream, opt, n_static, dp_axes,
+                                    mesh, aux)
             new_params = staged.merge_grads(
                 list(reversed(list(new_param_rev))))
             metrics["grad_sq_local"] = local_sq
@@ -666,10 +892,28 @@ def make_dp_overlap_train_step(model, optimizer: Optimizer,
             out += (jax.tree.map(lambda x: x[None], new_residual),)
         return out
 
-    opt_specs = ({"step": P(), "delta": P(tuple(dp_axes)),
-                  "m": P(tuple(dp_axes))} if use_zero else None)
+    opt_specs = ({"step": P(), **{f: P(tuple(dp_axes))
+                                  for f in optimizer.state_fields}}
+                 if use_zero else None)
+
+    def aux_builder(state, batch):
+        # loss_segments at trace level is compute-free (the segment
+        # closures go unexecuted) — we only need seg_params for the
+        # ready-order plan. Outer model_state leaves carry the leading
+        # per-worker dim, hence the x[0].
+        staged = model.loss_segments(
+            state["params"],
+            jax.tree.map(lambda x: x[0], state["model_state"]), batch,
+            train_cfg.label_smoothing)
+        param_rev = tuple(reversed(staged.seg_params))
+        plan = plan_ready_buckets(list(param_rev), parallel.bucket_bytes,
+                                  wire, align=n_static).base
+        return _stream_aux(optimizer, plan, param_rev, n_static, dp_axes,
+                           sharded=use_zero)
+
     return _wrap_dp_step(local_step, mesh, dp_axes, use_ef,
-                         opt_specs=opt_specs)
+                         opt_specs=opt_specs,
+                         aux_builder=aux_builder if use_stream else None)
 
 
 def replicate_model_state(state: PyTree, n_workers: int) -> PyTree:

@@ -102,3 +102,64 @@ def test_bench_bn_json_fusion_report_proves_collapse():
         assert rep[section]["reduction_ops"] > 0
     assert rep["fused"]["reduction_ops"] < rep["unfused"]["reduction_ops"]
     assert rep["collapsed"] is True
+
+
+# ---------------------------------------------------------------------------
+# BENCH_scaling.json (examples/large_batch_sweep.py, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+SCALING_TOP_FIELDS = ("bench", "arch", "backend", "devices", "quick",
+                      "steps", "steps_per_epoch", "batches", "recipes")
+
+SCALING_POINT_FIELDS = ("global_batch", "lr_scale", "final_loss",
+                        "final_accuracy", "diverged")
+
+
+def _load_scaling():
+    with open(os.path.join(REPO, "BENCH_scaling.json")) as f:
+        return json.load(f)
+
+
+def test_bench_scaling_json_schema():
+    data = _load_scaling()
+    assert data["bench"] == "scaling_sweep"
+    for top in SCALING_TOP_FIELDS:
+        assert top in data, \
+            f"BENCH_scaling.json lost top-level field {top!r}"
+    assert isinstance(data["steps"], int) and data["steps"] > 0
+    # acceptance: >= 2 recipes x >= 3 batch sizes
+    assert len(data["recipes"]) >= 2
+    assert len(data["batches"]) >= 3
+    names = [r["recipe"] for r in data["recipes"]]
+    assert len(set(names)) == len(names), f"duplicate recipes: {names}"
+
+
+def test_bench_scaling_json_points_and_divergence_contract():
+    data = _load_scaling()
+    for rec in data["recipes"]:
+        for field in ("recipe", "optimizer", "schedule",
+                      "label_smoothing", "points"):
+            assert field in rec, (rec.get("recipe"), field)
+        # every recipe sweeps exactly the advertised batch grid, in order
+        assert [p["global_batch"] for p in rec["points"]] == \
+            data["batches"], rec["recipe"]
+        assert len(rec["points"]) >= 3
+        for p in rec["points"]:
+            for field in SCALING_POINT_FIELDS:
+                assert field in p, (rec["recipe"], field)
+            assert p["lr_scale"] > 0
+            # final metrics are None exactly when the cell diverged
+            for metric in ("final_loss", "final_accuracy"):
+                if p["diverged"]:
+                    assert p[metric] is None, (rec["recipe"], p)
+                else:
+                    assert isinstance(p[metric], (int, float)), \
+                        (rec["recipe"], metric, p)
+
+
+def test_bench_scaling_covers_lars_and_baseline():
+    """The sweep's point: the paper baseline vs the trust-ratio recipes
+    on the same grid. Both optimizer kinds must be present."""
+    kinds = {r["optimizer"] for r in _load_scaling()["recipes"]}
+    assert "rmsprop_warmup" in kinds
+    assert "lars" in kinds

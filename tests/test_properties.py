@@ -313,6 +313,67 @@ def test_stream_layout_arithmetic_invariants(total, bucket_bytes,
     assert n_buckets * bucket_elems >= total + pad
 
 
+@given(codec_tree())
+@settings(max_examples=40)
+def test_segment_map_tiles_padded_stream(case):
+    """The leaf-segment map (DESIGN.md §11) is a disjoint exact cover of
+    the padded stream: element j belongs to segment i iff slot i's
+    [offset, offset+size) contains j, and everything past the real
+    elements carries the synthetic pad id len(slots)."""
+    from repro.distributed.bucketing import segment_ids_stream
+
+    tree, wire, bucket_bytes, align = case
+    plan = plan_buckets(tree, bucket_bytes, wire, align=align)
+    seg = segment_ids_stream(plan)
+    assert seg.shape == (plan.padded_total,)
+    counts = np.bincount(seg, minlength=len(plan.slots) + 1)
+    # disjoint + covering: per-segment counts are exactly the slot sizes
+    np.testing.assert_array_equal(
+        counts[:len(plan.slots)], [s.size for s in plan.slots])
+    assert counts[len(plan.slots)] == plan.padded_total - plan.total_elems
+    for i, s in enumerate(plan.slots):
+        np.testing.assert_array_equal(seg[s.offset:s.offset + s.size], i)
+
+
+@given(codec_tree(), st.sampled_from([1, 2, 4, 8]))
+@settings(max_examples=40)
+def test_segment_partials_shard_sum_equals_full_norm(case, n):
+    """psum-of-partials == full per-leaf squared norm, exactly: with
+    power-of-two leaf values every square and partial sum is exactly
+    representable, so summing each shard's ``segment_sq_partials`` over
+    the shard-aligned splits must reproduce the whole-stream per-leaf
+    norms with zero float error — the invariant the stream-LARS trust
+    ratios ride on (DESIGN.md §11)."""
+    from repro.distributed.bucketing import (
+        local_shard,
+        segment_ids_stream,
+        segment_sq_partials,
+    )
+
+    tree, wire, bucket_bytes, _ = case
+    plan = plan_buckets(tree, bucket_bytes, wire, align=n)
+    seg = jnp.asarray(segment_ids_stream(plan))
+    stream = jnp.concatenate(pack(tree, plan, use_kernel=False))
+    if stream.dtype != jnp.float32:
+        stream = stream.astype(jnp.float32)
+    n_seg = len(plan.slots) + 1
+    full = np.asarray(segment_sq_partials(stream, seg, n_seg),
+                      np.float64)
+    summed = np.zeros(n_seg, np.float64)
+    for w in range(n):
+        g_loc = local_shard(stream, plan, n, w)
+        s_loc = local_shard(seg, plan, n, w)
+        summed += np.asarray(segment_sq_partials(g_loc, s_loc, n_seg),
+                             np.float64)
+    np.testing.assert_array_equal(summed, full)
+    # and both equal the per-leaf norms computed leaf-by-leaf
+    leaves = plan.treedef.flatten_up_to(tree)
+    for i, leaf in enumerate(leaves):
+        x = np.asarray(leaf, np.float64).reshape(-1)
+        np.testing.assert_array_equal(full[i], np.sum(x * x))
+    assert full[-1] == 0.0  # the pad segment
+
+
 @given(st.integers(0, 2 ** 16), st.sampled_from([2, 4, 8]),
        st.integers(8, 200))
 def test_shard_layout_permutation_roundtrip(seed, n, bucket_bytes):
