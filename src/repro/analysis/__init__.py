@@ -1,0 +1,60 @@
+"""Compiled-program audit subsystem (DESIGN.md §12).
+
+Static analysis of XLA compiled-HLO text, grown out of
+``launch/hlo_analysis.py`` (which remains as a thin re-export shim):
+
+- ``hlo_ir``      typed IR: parser, renderer, trip-count multipliers
+- ``cost``        loop-aware FLOPs / bytes / collective accounting
+- ``passes``      the pass framework + the audit passes (comm,
+                  interleave, precision, donation, memory, collectives,
+                  determinism) and the fusion comparison report
+- ``contracts``   declarative per-(model, sync-mode) contracts
+- ``audit``       the driver: lowers the real train step in every sync
+                  mode on the local mesh and gates the contracts
+                  (``python -m repro.analysis.audit``)
+"""
+from repro.analysis.hlo_ir import (  # noqa: F401
+    COLLECTIVES,
+    DTYPE_BYTES,
+    HloModule,
+    Op,
+    compute_multipliers,
+    parse_computations,
+    parse_module,
+    render_op,
+    type_bytes,
+    type_shape,
+)
+from repro.analysis.cost import (  # noqa: F401
+    Analysis,
+    analyze_hlo,
+    gradient_sync_mode,
+)
+from repro.analysis.passes import (  # noqa: F401
+    AuditContext,
+    Finding,
+    PassResult,
+    available_passes,
+    run_pass,
+)
+
+
+def quick_audit(hlo_text: str, total_devices: int = 1,
+                n_batch_params=None):
+    """Run the context-free audit passes on one compiled program and
+    return a JSON-able record — what ``launch/dryrun.py`` embeds in its
+    per-cell records. ``n_batch_params`` (the number of trailing batch
+    leaves in the jit flattening — everything before them is donated
+    state) arms the donation audit's coverage gate; without it the pass
+    only reports what it sees."""
+    ctx = AuditContext(hlo_text=hlo_text, total_devices=total_devices)
+    if n_batch_params is not None:
+        ctx.expectations["n_batch_params"] = int(n_batch_params)
+    record = {}
+    errors = 0
+    for name in ("precision", "donation", "determinism", "collectives"):
+        res = run_pass(name, ctx)
+        record[name] = res.as_dict()
+        errors += len(res.errors)
+    record["ok"] = errors == 0
+    return record

@@ -1,0 +1,403 @@
+"""Loop-aware cost engine over the HLO IR: FLOPs / bytes / collective
+accounting with trip-count multipliers.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE
+(verified in this container), which under-reports scanned models by a
+factor of n_layers. ``analyze_hlo`` walks the parsed IR
+(``analysis/hlo_ir.py``) and multiplies costs through the (possibly
+nested) loop structure.
+
+Outputs per program:
+  flops            dot + convolution FLOPs, trip-count weighted
+  collectives      per-op-kind wire bytes (ring-model factors), dtypes
+  memory_bytes     ~HBM traffic: sum of materialized buffer sizes x2
+                   (write + read) + parameter bytes (approximation,
+                   documented in EXPERIMENTS.md §Roofline)
+
+The CPU backend promotes bf16 collectives to f32 in HLO; the
+``_bf16_roundtrip`` logic corrects the reported wire dtype back to the
+semantic one (``bf16*``) so the numbers predict a TPU execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List
+
+from repro.analysis.hlo_ir import (
+    COLLECTIVES,
+    Op,
+    _op_defs,
+    compute_multipliers,
+    parse_computations,
+    type_bytes,
+    type_shape,
+)
+
+# Ops counted as HBM-materializing for the memory-traffic model. The
+# CPU backend fuses far less than TPU, so raw elementwise/convert/
+# broadcast/transpose ops in CPU HLO are *excluded* — on TPU they fuse
+# into their consumers. What remains (matmuls, fusions, gathers,
+# reductions, copies, collectives, scan-stack slice updates) is the
+# traffic a TPU execution would actually see. Documented approximation
+# (EXPERIMENTS.md §Roofline).
+# (iota/rng excluded: XLA:TPU generates them in-register / fuses them;
+# the CPU backend materializes them — a backend artifact.)
+MATERIALIZING = {
+    "dot", "convolution", "fusion", "copy", "gather", "scatter",
+    "dynamic-slice", "dynamic-update-slice", "reduce", "reduce-window",
+    "sort", "cholesky", "triangular-solve", "pad", "concatenate",
+    "select-and-scatter",
+} | set(COLLECTIVES)
+
+
+@dataclasses.dataclass
+class Analysis:
+    flops: float
+    dot_flops: float
+    conv_flops: float
+    memory_bytes: float
+    parameter_bytes: float
+    collective_bytes: Dict[str, float]  # opcode -> wire bytes (per device)
+    collective_dtypes: Dict[str, Dict[str, float]]  # opcode -> dtype -> bytes
+    collective_count: int
+    trip_counts: Dict[str, int]
+    op_histogram: Dict[str, int]
+    top_memory_ops: List[tuple] = dataclasses.field(default_factory=list)
+    top_collective_ops: List[tuple] = dataclasses.field(
+        default_factory=list)
+    # opcode -> trip-count-weighted executions per step (a collective
+    # inside a scanned layer counts n_layers times) — what the bucketing
+    # fusion claim (DESIGN.md §6) is verified against
+    collective_exec_counts: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    # opcode -> largest single-execution wire bytes — what the ZeRO
+    # "the full-gradient all-reduce is gone" claim (DESIGN.md §9) is
+    # verified against (a metric pmean stays tiny; a gradient bucket
+    # does not)
+    collective_max_exec_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _dot_flops(op: Op, defs: Dict[str, Op]) -> float:
+    _, out_dims = type_shape(op.result)
+    out_elems = math.prod(out_dims) if out_dims else 1
+    lhs = defs.get(op.operands[0]) if op.operands else None
+    contract = 1
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+    if m and lhs is not None:
+        _, lhs_dims = type_shape(lhs.result)
+        for idx in m.group(1).split(","):
+            if idx != "" and int(idx) < len(lhs_dims):
+                contract *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(op: Op, defs: Dict[str, Op]) -> float:
+    _, out_dims = type_shape(op.result)
+    out_elems = math.prod(out_dims) if out_dims else 1
+    rhs = defs.get(op.operands[1]) if len(op.operands) > 1 else None
+    if rhs is None:
+        return 0.0
+    _, k_dims = type_shape(rhs.result)
+    m = re.search(r"dim_labels=\S+?_(\w+?)->", op.attrs)
+    kernel_mult = 1
+    if m and k_dims:
+        labels = m.group(1)
+        for ch, d in zip(labels, k_dims):
+            if ch != "o":  # spatial digits and 'i' contribute; 'o' doesn't
+                kernel_mult *= d
+    else:
+        kernel_mult = math.prod(k_dims[:-1]) if k_dims else 1
+    return 2.0 * out_elems * kernel_mult
+
+
+def _group_size(op: Op, total_devices: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", op.attrs)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", op.attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return total_devices
+
+
+def _wire_bytes(op: Op, defs: Dict[str, Op], k: int) -> float:
+    """Ring-model per-device wire bytes for one collective execution."""
+    if k <= 1:
+        return 0.0
+    frac = (k - 1) / k
+    out_b = type_bytes(op.result)
+    in_b = sum(type_bytes(defs[o].result) for o in op.operands if o in defs)
+    if op.opcode == "all-reduce":
+        return 2.0 * in_b * frac
+    if op.opcode == "all-gather":
+        return out_b * frac
+    if op.opcode == "reduce-scatter":
+        return in_b * frac
+    if op.opcode == "all-to-all":
+        return in_b * frac
+    if op.opcode in ("collective-permute", "collective-broadcast"):
+        return max(in_b, out_b)
+    return in_b
+
+
+def analyze_hlo(text: str, total_devices: int = 1) -> Analysis:
+    comps = parse_computations(text)
+    comps.pop("__entry__", None)
+    mult, trips = compute_multipliers(comps)
+
+    flops = dot_flops = conv_flops = 0.0
+    mem = 0.0
+    param_bytes = 0.0
+    coll_bytes: Dict[str, float] = defaultdict(float)
+    coll_dtypes: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: defaultdict(float))
+    coll_count = 0
+    coll_execs: Dict[str, float] = defaultdict(float)
+    coll_max: Dict[str, float] = defaultdict(float)
+    histogram: Dict[str, int] = defaultdict(int)
+    top_mem: List[tuple] = []
+    top_coll: List[tuple] = []
+
+    # computations that are fusion bodies: their internals don't
+    # materialize — only the fusion op's output does.
+    fusion_bodies = set()
+    fusion_target = {}
+    for ops in comps.values():
+        for op in ops:
+            if op.opcode == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+                if m:
+                    fusion_bodies.add(m.group(1))
+                    fusion_target[op.name] = m.group(1)
+
+    # pure dtype-cast fusions (no layout movement): CPU artifacts — the
+    # TPU MXU consumes bf16 directly and these don't exist there.
+    CAST_ONLY = {"parameter", "convert", "bitcast", "get-tuple-element",
+                 "tuple"}
+    # + layout movement: still real traffic, but at the semantic dtype.
+    # slice/concatenate cover the bucketed gradient path (DESIGN.md §6),
+    # whose bucket is a slice of a concatenated bf16 stream.
+    PASSTHROUGH = CAST_ONLY | {"copy", "transpose", "reshape", "slice",
+                               "concatenate"}
+
+    def _convert_only(cname: str) -> bool:
+        return all(o.opcode in CAST_ONLY for o in comps.get(cname, []))
+
+    def _body_mentions_bf16(cname: str) -> bool:
+        return any(type_shape(o.result)[0] == "bf16"
+                   for o in comps.get(cname, []))
+
+    def _bf16_roundtrip(name: str, defs: Dict[str, Op],
+                        hops: int = 5) -> bool:
+        """True if the (f32) value named ``name`` is a converted bf16
+        value — semantically 2 bytes/element on TPU. Follows copy/
+        bitcast/transpose/convert-only-fusion chains."""
+        while hops > 0:
+            hops -= 1
+            d = defs.get(name)
+            if d is None:
+                return False
+            if type_shape(d.result)[0] == "bf16":
+                return True
+            if d.opcode == "convert":
+                src = defs.get(d.operands[0]) if d.operands else None
+                if src and type_shape(src.result)[0] == "bf16":
+                    return True
+                name = d.operands[0] if d.operands else None
+                continue
+            if d.opcode == "fusion" and d.name in fusion_target:
+                fops = comps.get(fusion_target[d.name], [])
+                # CPU promotes bf16 reductions to f32 by a convert that
+                # gets fused into the producer: a fusion whose ROOT
+                # converts a bf16 value is a bf16 round-trip regardless
+                # of what else the fusion computes (the bucketed
+                # gradient pack hits this).
+                froot = next((o for o in fops if o.root), None)
+                if froot is not None and froot.opcode == "convert" \
+                        and froot.operands:
+                    fdefs = _op_defs(fops)
+                    src = fdefs.get(froot.operands[0])
+                    if src is not None and \
+                            type_shape(src.result)[0] == "bf16":
+                        return True
+                if all(o.opcode in PASSTHROUGH for o in fops):
+                    if _body_mentions_bf16(fusion_target[d.name]):
+                        return True
+                    name = d.operands[0] if d.operands else None
+                    continue
+            if d.opcode == "call":
+                # outlined computation (XLA outlines the big gradient
+                # pack): the value is whatever the callee's root is
+                cm = re.search(r"to_apply=%?([\w.\-]+)", d.attrs)
+                if cm and cm.group(1) in comps:
+                    sub = comps[cm.group(1)]
+                    sroot = next((o for o in sub if o.root), None)
+                    if sroot is not None:
+                        return _bf16_roundtrip(sroot.name, _op_defs(sub),
+                                               hops)
+                return False
+            if d.opcode in ("copy", "bitcast", "transpose", "reshape",
+                            "all-reduce", "reduce-scatter", "all-gather",
+                            "slice", "dynamic-slice", "concatenate"):
+                name = d.operands[0] if d.operands else None
+                continue
+            return False
+        return False
+
+    def materialized_bytes(op: Op, defs: Dict[str, Op]) -> float:
+        """HBM write bytes for one op execution. dynamic-update-slice is
+        in-place in XLA: traffic = the updated slice, not the full array
+        (this is what makes scan stacks cheap per iteration)."""
+        if op.opcode == "dynamic-update-slice":
+            upd = defs.get(op.operands[1]) if len(op.operands) > 1 else None
+            return type_bytes(upd.result) if upd else type_bytes(op.result)
+        if op.opcode == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+            if m and m.group(1) in comps:
+                fops = comps[m.group(1)]
+                fbytes = type_bytes(op.result)
+                # in-place scan-stack update fused behind (bit)casts:
+                # count the update slice, not the whole stack buffer
+                for fo in fops:
+                    if fo.opcode == "dynamic-update-slice" and \
+                            type_bytes(fo.result) >= 0.5 * fbytes:
+                        fdefs = _op_defs(fops)
+                        upd = (fdefs.get(fo.operands[1])
+                               if len(fo.operands) > 1 else None)
+                        if upd is not None:
+                            return type_bytes(upd.result)
+        return type_bytes(op.result)
+
+    for cname, ops in comps.items():
+        m_c = mult.get(cname, 0.0)
+        if m_c == 0.0:
+            continue
+        in_fusion = cname in fusion_bodies
+        defs = _op_defs(ops)
+        for op in ops:
+            histogram[op.opcode] += 1
+            if op.opcode == "dot":
+                f = _dot_flops(op, defs) * m_c
+                dot_flops += f
+                flops += f
+            elif op.opcode == "convolution":
+                f = _conv_flops(op, defs) * m_c
+                conv_flops += f
+                flops += f
+            elif op.opcode in COLLECTIVES or (
+                    op.opcode.endswith("-start") and
+                    op.opcode[:-6] in COLLECTIVES):
+                base = op.opcode[:-6] if op.opcode.endswith("-start") \
+                    else op.opcode
+                k = _group_size(op, total_devices)
+                wb = _wire_bytes(op, defs, k) * m_c
+                dtype, _ = type_shape(op.result)
+                # semantic-dtype correction, per tuple element: each
+                # operand that is a bf16->f32 round-trip runs in bf16 on
+                # TPU. Factor = weighted by operand sizes.
+                if dtype == "f32" or op.result.startswith("("):
+                    tot = corr = 0.0
+                    for o in op.operands:
+                        d = defs.get(o)
+                        if d is None:
+                            continue
+                        ob = type_bytes(d.result)
+                        tot += ob
+                        if type_shape(d.result)[0] == "f32" and \
+                                _bf16_roundtrip(o, defs):
+                            corr += ob / 2
+                    if tot > 0 and corr > 0:
+                        wb *= (tot - corr) / tot
+                        dtype = "bf16*" if corr >= tot / 2 else "mixed*"
+                coll_bytes[base] += wb
+                coll_dtypes[base][dtype] += wb
+                coll_count += 1
+                coll_execs[base] += m_c
+                coll_max[base] = max(coll_max[base],
+                                     wb / m_c if m_c else wb)
+                top_coll.append((wb, base, k, m_c, cname[:30],
+                                 op.result[:46]))
+            if op.opcode in MATERIALIZING and not in_fusion:
+                b = materialized_bytes(op, defs) * m_c
+                if op.opcode == "fusion" and op.name in fusion_target \
+                        and _convert_only(fusion_target[op.name]):
+                    b = 0.0  # CPU dtype/layout artifact; fused on TPU
+                elif op.opcode in ("dot", "convolution") and op.operands \
+                        and all(_bf16_roundtrip(o, defs)
+                                for o in op.operands[:2]):
+                    b *= 0.5  # bf16 dot/conv upcast by the CPU backend
+                elif op.opcode in COLLECTIVES and op.operands and \
+                        type_shape(op.result)[0] == "f32" and \
+                        _bf16_roundtrip(op.operands[0], defs):
+                    b *= 0.5  # collective carries a bf16 value on TPU
+                elif op.opcode == "fusion" and type_shape(
+                        op.result)[0] == "f32" and \
+                        op.name in fusion_target and \
+                        _body_mentions_bf16(fusion_target[op.name]):
+                    b *= 0.5  # f32 fusion of bf16-origin values (CPU
+                    # upcast artifact; TPU keeps the chain in bf16)
+                mem += b
+                if b > 0:
+                    top_mem.append((b, op.opcode, m_c, cname[:30],
+                                    op.result[:42], op.name[:34]))
+
+    # entry parameters = resident inputs (params/opt state/batch), read once
+    entry = None
+    for cname, ops in comps.items():
+        if mult.get(cname) == 1.0 and any(
+                o.opcode == "parameter" for o in ops):
+            if entry is None or len(ops) > len(comps.get(entry, [])):
+                entry = cname
+    if entry:
+        for op in comps[entry]:
+            if op.opcode == "parameter":
+                param_bytes += type_bytes(op.result)
+
+    top_mem.sort(reverse=True)
+    top_coll.sort(reverse=True)
+    return Analysis(
+        flops=flops,
+        dot_flops=dot_flops,
+        conv_flops=conv_flops,
+        memory_bytes=2.0 * mem + param_bytes,
+        parameter_bytes=param_bytes,
+        collective_bytes=dict(coll_bytes),
+        collective_dtypes={k: dict(v) for k, v in coll_dtypes.items()},
+        collective_count=coll_count,
+        trip_counts=trips,
+        op_histogram=dict(histogram),
+        top_memory_ops=top_mem[:40],
+        top_collective_ops=top_coll[:40],
+        collective_exec_counts=dict(coll_execs),
+        collective_max_exec_bytes=dict(coll_max),
+    )
+
+
+def gradient_sync_mode(a: Analysis,
+                       metric_bytes_floor: int = 1024) -> str:
+    """Classify the program's gradient-sync mechanism from its
+    collective mix — the check the ZeRO mode (DESIGN.md §9) is accepted
+    by: ``"reduce_scatter+all_gather"`` means scatter+gather carry the
+    gradient volume AND every all-reduce is metric-sized (below
+    ``metric_bytes_floor`` per execution) — i.e. the full-gradient
+    all-reduce is gone; ``"all_reduce"`` means all-reduces carry it;
+    ``"none"`` means no substantial collectives at all."""
+    rs = a.collective_bytes.get("reduce-scatter", 0.0)
+    ag = a.collective_bytes.get("all-gather", 0.0)
+    ar = a.collective_bytes.get("all-reduce", 0.0)
+    ar_max = a.collective_max_exec_bytes.get("all-reduce", 0.0)
+    if rs > 0 and ag > 0 and ar_max < metric_bytes_floor:
+        return "reduce_scatter+all_gather"
+    if ar >= max(rs, ag) and ar_max >= metric_bytes_floor:
+        return "all_reduce"
+    if max(rs, ag, ar) == 0.0:
+        return "none"
+    return "mixed"

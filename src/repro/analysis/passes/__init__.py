@@ -1,0 +1,156 @@
+"""Pass framework for the compiled-program audit (DESIGN.md §12).
+
+A pass is a function ``(AuditContext) -> PassResult`` registered under a
+short name. Passes are pure: they read the parsed module / cost
+analysis off the context (both lazily computed and cached) plus any
+driver-supplied expectations, and return findings + a JSON-able summary.
+They never raise on ugly input — a parse-level surprise becomes an
+``error`` finding so the audit driver can gate on it.
+
+Adding a pass (the short version; DESIGN.md §12 has the full recipe):
+
+    from repro.analysis.passes import AuditContext, PassResult, \
+        register_pass
+
+    @register_pass("my_pass")
+    def my_pass(ctx: AuditContext) -> PassResult:
+        res = PassResult(name="my_pass")
+        for op in ctx.module.entry_ops:
+            ...
+            res.add("error", "what is wrong", op=op.name)
+        res.summary["whatever"] = 42
+        return res
+
+then drive it from a contract (``analysis/contracts.py``) or directly
+via ``run_pass("my_pass", ctx)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.analysis.cost import Analysis, analyze_hlo
+from repro.analysis.hlo_ir import HloModule, parse_module
+
+SEVERITIES = ("error", "warn", "info")
+
+
+@dataclasses.dataclass
+class Finding:
+    """One thing a pass noticed about the program."""
+    severity: str            # "error" | "warn" | "info"
+    message: str
+    op: str = ""             # op or computation name, when localizable
+    data: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def as_dict(self) -> Dict[str, Any]:
+        d = {"severity": self.severity, "message": self.message}
+        if self.op:
+            d["op"] = self.op
+        if self.data:
+            d["data"] = self.data
+        return d
+
+
+@dataclasses.dataclass
+class PassResult:
+    name: str
+    findings: List[Finding] = dataclasses.field(default_factory=list)
+    summary: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def add(self, severity: str, message: str, op: str = "",
+            **data: Any) -> None:
+        assert severity in SEVERITIES, severity
+        self.findings.append(Finding(severity, message, op, dict(data)))
+
+    @property
+    def errors(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == "error"]
+
+    @property
+    def warnings(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == "warn"]
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {
+            "pass": self.name,
+            "ok": not self.errors,
+            "findings": [f.as_dict() for f in self.findings],
+            "summary": self.summary,
+        }
+
+
+@dataclasses.dataclass
+class AuditContext:
+    """Everything a pass may look at for one compiled program.
+
+    ``expectations`` carries driver-computed facts the HLO alone cannot
+    know (number of donated state leaves, expected bucket count, wire
+    itemsize, ...) — passes and contracts reference them by key.
+    """
+    hlo_text: str
+    total_devices: int = 1
+    expectations: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    _module: Optional[HloModule] = dataclasses.field(
+        default=None, repr=False)
+    _analysis: Optional[Analysis] = dataclasses.field(
+        default=None, repr=False)
+
+    @property
+    def module(self) -> HloModule:
+        if self._module is None:
+            self._module = parse_module(self.hlo_text)
+        return self._module
+
+    @property
+    def analysis(self) -> Analysis:
+        if self._analysis is None:
+            self._analysis = analyze_hlo(
+                self.hlo_text, total_devices=self.total_devices)
+        return self._analysis
+
+
+_REGISTRY: Dict[str, Callable[[AuditContext], PassResult]] = {}
+
+
+def register_pass(name: str):
+    def deco(fn: Callable[[AuditContext], PassResult]):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_pass(name: str) -> Callable[[AuditContext], PassResult]:
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown audit pass {name!r}; available: "
+            f"{sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def available_passes() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def run_pass(name: str, ctx: AuditContext) -> PassResult:
+    """Run one pass; an unexpected exception becomes an error finding
+    rather than killing the audit."""
+    fn = get_pass(name)
+    try:
+        return fn(ctx)
+    except Exception as e:  # noqa: BLE001 — audit must not die mid-run
+        res = PassResult(name=name)
+        res.add("error", f"pass crashed: {type(e).__name__}: {e}")
+        return res
+
+
+# Register the built-in passes (import side effect, bottom of module to
+# avoid circularity: pass modules import the framework names above).
+from repro.analysis.passes import comm  # noqa: E402,F401
+from repro.analysis.passes import determinism  # noqa: E402,F401
+from repro.analysis.passes import donation  # noqa: E402,F401
+from repro.analysis.passes import fusion  # noqa: E402,F401
+from repro.analysis.passes import interleave  # noqa: E402,F401
+from repro.analysis.passes import memory  # noqa: E402,F401
+from repro.analysis.passes import precision  # noqa: E402,F401
+from repro.analysis.passes import schedule  # noqa: E402,F401

@@ -1,0 +1,67 @@
+"""Determinism lint (``determinism`` pass).
+
+The repo's parity rails (tests/test_parity.py, the ZeRO/bucketed
+bitwise-equality tests) assume the compiled step is a pure function of
+its inputs. Three op families can silently break that:
+
+- ``rng*`` ops (rng, rng-bit-generator, rng-get-and-update-state):
+  hidden state / backend-dependent streams → **error** unless the
+  driver sets ``expectations["allow_rng"]`` (a model that legitimately
+  uses dropout would).
+- ``scatter`` with overlapping indices: XLA's combine order is
+  unspecified on some backends → **warn** by default, **error** when
+  the contract sets ``expectations["forbid_scatter"]``.
+- ``select-and-scatter`` is *excluded*: it is max-pool's backward,
+  deterministic, and present in every ResNet program.
+
+Atomics never appear in CPU/TPU HLO text (they are a GPU lowering
+detail), so scatter is the textual proxy the lint can see.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict
+
+from repro.analysis.hlo_ir import compute_multipliers, parse_computations
+from repro.analysis.passes import AuditContext, PassResult, register_pass
+
+_RNG_OPS = {"rng", "rng-bit-generator", "rng-get-and-update-state"}
+
+
+@register_pass("determinism")
+def determinism_pass(ctx: AuditContext) -> PassResult:
+    res = PassResult(name="determinism")
+    comps = parse_computations(ctx.hlo_text)
+    comps.pop("__entry__", None)
+    mult, _ = compute_multipliers(comps)
+
+    counts: Dict[str, float] = defaultdict(float)
+    for cname, ops in comps.items():
+        m_c = mult.get(cname, 0.0)
+        if not m_c:
+            continue
+        for op in ops:
+            if op.opcode in _RNG_OPS or op.opcode == "scatter":
+                counts[op.opcode] += m_c
+                if op.opcode in _RNG_OPS:
+                    if not ctx.expectations.get("allow_rng"):
+                        res.add("error",
+                                f"{op.opcode} op breaks bitwise parity "
+                                f"(hidden rng state in the compiled "
+                                f"step)",
+                                op=op.name, computation=cname)
+                else:
+                    sev = ("error"
+                           if ctx.expectations.get("forbid_scatter")
+                           else "warn")
+                    res.add(sev,
+                            "scatter combine order is unspecified with "
+                            "overlapping indices; bitwise parity is "
+                            "backend-dependent",
+                            op=op.name, computation=cname)
+
+    res.summary.update({
+        "op_counts": {k: round(v, 2) for k, v in sorted(counts.items())},
+        "clean": not counts,
+    })
+    return res

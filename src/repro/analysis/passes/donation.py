@@ -1,0 +1,88 @@
+"""Donation/aliasing audit (``donation`` pass).
+
+``jit_train_step`` donates the state argument (``donate_argnums=(0,)``)
+so XLA can update params + optimizer state in place; if the aliasing is
+silently lost (a sharding mismatch, a dtype change, a new jit site
+without donation) every step pays a full extra copy of the state in
+HBM — invisible from Python, obvious in ``input_output_alias``.
+
+jax flattens the ``(state, batch)`` arguments state-first, and XLA
+prunes unused leaves from the entry, so the *donated* entry parameters
+are everything except the trailing batch leaves. The driver says how
+many batch leaves there are (``expectations["n_batch_params"]``); the
+pass checks every remaining (state) parameter appears in the module's
+``input_output_alias`` table and estimates the wasted bytes when not.
+Without the expectation it reports coverage at info level only.
+"""
+from __future__ import annotations
+
+from repro.analysis.hlo_ir import type_bytes
+from repro.analysis.passes import AuditContext, PassResult, register_pass
+
+
+@register_pass("donation")
+def donation_pass(ctx: AuditContext) -> PassResult:
+    res = PassResult(name="donation")
+    mod = ctx.module
+    params = mod.entry_params()
+    aliased_numbers = {e.param_number for e in mod.input_output_alias}
+
+    n_batch = ctx.expectations.get("n_batch_params")
+    gated = n_batch is not None
+    if gated:
+        n_batch = int(n_batch)
+        if n_batch > len(params):
+            res.add("warn",
+                    f"expected {n_batch} trailing batch parameters but "
+                    f"entry only has {len(params)}")
+            n_batch = len(params)
+        state = params[:len(params) - n_batch] if n_batch else params
+    else:
+        state = params
+
+    total_state_bytes = 0.0
+    wasted = 0.0
+    n_aliased = 0
+    for num, op in state:
+        b = type_bytes(op.result)
+        total_state_bytes += b
+        if num in aliased_numbers:
+            n_aliased += 1
+        else:
+            wasted += b
+            if gated and b >= 1024:
+                res.add("warn",
+                        f"state parameter {num} ({op.result[:40]}) is "
+                        f"not donated (no input_output_alias entry)",
+                        op=op.name, param_number=num, bytes=b)
+
+    # XLA prunes unused leaves entirely, so the flattened-leaf count
+    # from the driver is an upper bound, reported for context only
+    expected_leaves = ctx.expectations.get("n_state_params")
+    frac = n_aliased / len(state) if state else 1.0
+    res.summary.update({
+        "n_entry_params": len(params),
+        "n_state_params": len(state),
+        "n_state_leaves_declared": expected_leaves,
+        "n_aliased": n_aliased,
+        "n_alias_entries": len(mod.input_output_alias),
+        "state_alias_fraction": round(frac, 4),
+        "state_bytes": total_state_bytes,
+        "wasted_bytes": wasted,
+    })
+    if not gated:
+        res.add("info",
+                f"{n_aliased}/{len(state)} entry params aliased "
+                f"(no n_batch_params expectation; coverage not gated)")
+        return res
+
+    # XLA may legitimately decline an alias on a scalar (the step
+    # counter) or reshard a leaf; gate on bulk coverage, not perfection.
+    if wasted >= 4096 or frac < 0.95:
+        res.add(
+            "error",
+            f"donation lost: only {n_aliased}/{len(state)} state "
+            f"parameters aliased ({wasted:.0f} wasted bytes/device of "
+            f"extra HBM residency per step)",
+            wasted_bytes=wasted, state_alias_fraction=round(frac, 4))
+    return res

@@ -1,0 +1,108 @@
+"""BN fusion accounting (fused Pallas batch norm, DESIGN.md §10) —
+migrated from ``launch/hlo_analysis.py``. This is a two-program
+*comparison* report, not a single-program pass, so it is not in the
+pass registry; ``tests/test_fused_bn.py`` and ``benchmarks/bn_bench.py``
+drive it directly."""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict
+
+from repro.analysis.hlo_ir import (
+    _op_defs,
+    compute_multipliers,
+    parse_computations,
+    type_shape,
+)
+
+_BN_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                "bitcast", "convolution", "dot", "while", "call",
+                "conditional", "iota", "rng", "rng-bit-generator"}
+
+
+def bn_pass_counts(text: str, act_elems: int) -> Dict[str, float]:
+    """Count the passes one lowered BN-site program makes over its
+    activation: trip-weighted ``reduction_ops`` — reduce/reduce-window
+    ops that consume an activation-sized (>= ``act_elems``) operand,
+    fusion bodies included; counting only the activation-sized stage
+    makes a backend's hierarchical reduce-window -> reduce chain one
+    logical reduction, not several — and ``activation_writes``
+    (top-level materializing ops whose result is at least
+    ``act_elems`` elements — the elementwise normalize/ReLU/residual/
+    mask chains). Convolutions/dots are excluded: they are the useful
+    compute, identical on the fused and unfused paths."""
+    comps = parse_computations(text)
+    comps.pop("__entry__", None)
+    mult, _ = compute_multipliers(comps)
+    fusion_bodies = set()
+    for ops in comps.values():
+        for op in ops:
+            if op.opcode == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+                if m:
+                    fusion_bodies.add(m.group(1))
+    reduction = 0.0
+    writes = 0.0
+    for cname, ops in comps.items():
+        m_c = mult.get(cname, 0.0)
+        if not m_c:
+            continue
+        in_fusion = cname in fusion_bodies
+        defs = _op_defs(ops)
+        for op in ops:
+            if op.opcode in ("reduce", "reduce-window"):
+                big_in = False
+                for o in op.operands:
+                    d = defs.get(o)
+                    if d is None:
+                        continue
+                    _, dims = type_shape(d.result)
+                    if dims and math.prod(dims) >= act_elems:
+                        big_in = True
+                if big_in:
+                    reduction += m_c
+                continue
+            if in_fusion or op.opcode in _BN_SKIP_OPS:
+                continue
+            _, dims = type_shape(op.result)
+            if dims and math.prod(dims) >= act_elems:
+                writes += m_c
+    return {"reduction_ops": reduction, "activation_writes": writes}
+
+
+def fusion_report(fused_text: str, unfused_text: str, act_elems: int,
+                  n_sites: int = 1) -> Dict[str, object]:
+    """Per-BN-site op-count comparison the fused-BN claim
+    (DESIGN.md §10) is *verified* by, rather than assumed: the fused
+    fwd+bwd must
+    perform strictly fewer reduction ops than the unfused jnp path
+    (one stats pass + one dy/x-hat pass vs XLA's
+    mean/var/dscale/dbias/dmean/dvar chain) and no more activation-sized
+    materializing writes. Feed it the compiled HLO of the same
+    fwd(+vjp) program lowered both ways; the booleans are what
+    tests/test_fused_bn.py and benchmarks/bn_bench.py assert."""
+    fused = bn_pass_counts(fused_text, act_elems)
+    unfused = bn_pass_counts(unfused_text, act_elems)
+    n = max(n_sites, 1)
+    report: Dict[str, object] = {
+        "act_elems": act_elems,
+        "n_sites": n_sites,
+        "fused": fused,
+        "unfused": unfused,
+        "reduction_ops_per_site": {
+            "fused": fused["reduction_ops"] / n,
+            "unfused": unfused["reduction_ops"] / n,
+        },
+        "activation_writes_per_site": {
+            "fused": fused["activation_writes"] / n,
+            "unfused": unfused["activation_writes"] / n,
+        },
+        "reduction_collapse":
+            fused["reduction_ops"] < unfused["reduction_ops"],
+        "elementwise_collapse":
+            fused["activation_writes"] <= unfused["activation_writes"],
+    }
+    report["collapsed"] = bool(report["reduction_collapse"]
+                               and report["elementwise_collapse"])
+    return report

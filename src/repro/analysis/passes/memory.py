@@ -1,0 +1,82 @@
+"""Live-range peak-memory estimator (``memory`` pass).
+
+Linear-scan liveness over the *entry* computation in scheduled program
+order (the order XLA emits): each materializing op's buffer is live
+from its definition to its last use; peak temp footprint is the max
+over program points of the live-set byte sum. Entry parameters (params,
+optimizer state, batch) are resident for the whole step and accounted
+separately — their sum is what the ZeRO relation in the audit driver
+checks shrinks by ~1/N for the optimizer-state slice (DESIGN.md §9).
+
+This is an estimate, not bit-exact XLA buffer assignment: it ignores
+in-place sharing beyond trivial aliases (tuple/GTE/bitcast) and
+sub-computation temporaries. It is stable across runs of the same
+program, which is what a contract needs.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.analysis.hlo_ir import type_bytes
+from repro.analysis.passes import AuditContext, PassResult, register_pass
+
+# alias-ish / non-materializing at entry level
+_SKIP = {"parameter", "tuple", "get-tuple-element", "bitcast"}
+
+
+@register_pass("memory")
+def memory_pass(ctx: AuditContext) -> PassResult:
+    res = PassResult(name="memory")
+    ops = ctx.module.entry_ops
+    n = len(ops)
+
+    last_use: Dict[str, int] = {}
+    for i, op in enumerate(ops):
+        for o in op.operands:
+            last_use[o] = i
+
+    param_bytes = 0.0
+    events = [0.0] * (n + 1)  # delta at each program point
+    buffers = []
+    for i, op in enumerate(ops):
+        if op.opcode == "parameter":
+            param_bytes += type_bytes(op.result)
+            continue
+        if op.opcode in _SKIP:
+            continue
+        b = type_bytes(op.result)
+        if b <= 0:
+            continue
+        end = n - 1 if op.root else last_use.get(op.name, i)
+        events[i] += b
+        events[end + 1] -= b
+        buffers.append((b, op.opcode, op.name[:40]))
+
+    live = 0.0
+    temp_peak = 0.0
+    peak_at = 0
+    for i in range(n):
+        live += events[i]
+        if live > temp_peak:
+            temp_peak, peak_at = live, i
+
+    buffers.sort(reverse=True)
+    res.summary.update({
+        "entry_param_bytes": param_bytes,
+        "temp_peak_bytes": temp_peak,
+        "peak_bytes": param_bytes + temp_peak,
+        "peak_at_op_index": peak_at,
+        "n_buffers": len(buffers),
+        "top_buffers": [
+            {"bytes": b, "opcode": oc, "op": nm}
+            for b, oc, nm in buffers[:10]
+        ],
+    })
+
+    cap = ctx.expectations.get("max_peak_bytes")
+    if cap is not None and param_bytes + temp_peak > float(cap):
+        res.add("error",
+                f"estimated per-device peak {param_bytes + temp_peak:.0f} "
+                f"B exceeds contract cap {float(cap):.0f} B",
+                peak_bytes=param_bytes + temp_peak, cap=float(cap))
+    return res

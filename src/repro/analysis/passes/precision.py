@@ -1,0 +1,123 @@
+"""Precision-policy lint (``precision`` pass).
+
+Two rails from the large-batch literature (Goyal et al. 1706.02677,
+Yamazaki et al. 1903.12650 — wrong-dtype accumulations are where
+large-minibatch regressions hide):
+
+1. Every *big* reduction — BN statistics, LARS segment norms, loss
+   means: anything consuming an activation/param-sized operand — must
+   accumulate in a >= 4-byte float. An HLO ``reduce``/``reduce-window``
+   accumulates at its result dtype, so a bf16/f16/f8 result on a big
+   reduction is an **error**.
+2. Narrow round-trips (f32 -> bf16 -> f32 double casts) on the value
+   wire silently truncate mantissa. They are a **warn** (the bucketed
+   wire compression does this *on purpose*, with error feedback), and
+   round-trips whose outer convert only exists to feed a collective are
+   suppressed entirely — the CPU backend promotes bf16 collectives to
+   f32 and that inserted cast is a backend artifact, not a policy
+   violation.
+"""
+from __future__ import annotations
+
+import math
+
+from repro.analysis.hlo_ir import (
+    COLLECTIVES,
+    DTYPE_BYTES,
+    _op_defs,
+    compute_multipliers,
+    op_consumers,
+    parse_computations,
+    type_shape,
+)
+from repro.analysis.passes import AuditContext, PassResult, register_pass
+
+_FLOAT_PREFIXES = ("f", "bf")
+
+
+def _is_narrow_float(dtype: str) -> bool:
+    return (dtype.startswith(_FLOAT_PREFIXES)
+            and DTYPE_BYTES.get(dtype, 4) < 4)
+
+
+def _elems(result: str) -> int:
+    _, dims = type_shape(result)
+    return math.prod(dims) if dims else 1
+
+
+@register_pass("precision")
+def precision_pass(ctx: AuditContext) -> PassResult:
+    res = PassResult(name="precision")
+    floor = int(ctx.expectations.get("reduction_elems_floor", 2048))
+    comps = parse_computations(ctx.hlo_text)
+    comps.pop("__entry__", None)
+    mult, _ = compute_multipliers(comps)
+
+    n_checked = n_narrow = n_roundtrip = n_suppressed = 0
+    for cname, ops in comps.items():
+        if not mult.get(cname, 0.0):
+            continue
+        defs = _op_defs(ops)
+        consumers = op_consumers(ops)
+        for op in ops:
+            if op.opcode in ("reduce", "reduce-window"):
+                big = max((_elems(d.result) for o in op.operands
+                           if (d := defs.get(o)) is not None),
+                          default=0)
+                if big < floor:
+                    continue
+                n_checked += 1
+                acc_dtype, _ = type_shape(op.result)
+                if _is_narrow_float(acc_dtype):
+                    n_narrow += 1
+                    res.add(
+                        "error",
+                        f"big reduction ({big} elems) accumulates in "
+                        f"{acc_dtype}; activation-sized reductions must "
+                        f"accumulate f32",
+                        op=op.name, computation=cname, elems=big,
+                        dtype=acc_dtype)
+            elif op.opcode == "convert" and op.operands:
+                out_dt, _ = type_shape(op.result)
+                src = defs.get(op.operands[0])
+                if src is None or src.opcode != "convert" \
+                        or not src.operands:
+                    continue
+                mid_dt, _ = type_shape(src.result)
+                orig = defs.get(src.operands[0])
+                if orig is None:
+                    continue
+                orig_dt, _ = type_shape(orig.result)
+                if orig_dt != out_dt or not _is_narrow_float(mid_dt) \
+                        or DTYPE_BYTES.get(out_dt, 0) <= \
+                        DTYPE_BYTES.get(mid_dt, 0):
+                    continue
+                if _elems(op.result) < floor:
+                    continue  # scalar/metric casts are noise
+                # outer convert feeding only collectives = the CPU
+                # backend's bf16-collective promotion, not a policy bug
+                cons = consumers.get(op.name, [])
+                if cons and all(
+                        c.opcode in COLLECTIVES
+                        or (c.opcode.endswith("-start")
+                            and c.opcode[:-6] in COLLECTIVES)
+                        for c in cons):
+                    n_suppressed += 1
+                    continue
+                n_roundtrip += 1
+                res.add(
+                    "warn",
+                    f"{orig_dt} -> {mid_dt} -> {out_dt} round-trip on a "
+                    f"{_elems(op.result)}-elem value (mantissa "
+                    f"truncation outside the error-feedback wire)",
+                    op=op.name, computation=cname,
+                    narrow_dtype=mid_dt)
+
+    res.summary.update({
+        "big_reductions_checked": n_checked,
+        "narrow_reductions": n_narrow,
+        "roundtrips": n_roundtrip,
+        "roundtrips_suppressed_collective": n_suppressed,
+        "reduction_elems_floor": floor,
+    })
+    return res

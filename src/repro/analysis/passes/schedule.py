@@ -1,0 +1,96 @@
+"""Collective-schedule linter (``collectives`` pass).
+
+Generalizes ``gradient_sync_mode`` into contract-checkable facts about
+the step's collective schedule:
+
+- per-opcode *qualifying* execution counts (trip-weighted, sized by
+  ``max(input, output)`` bytes so an all-gather's big output counts),
+  with a byte floor that drops metric pmeans / LARS trust-ratio psums
+  out of the gradient accounting;
+- the largest single execution per opcode (what "zero has no all-reduce
+  above metric size" pins down);
+- optional expectation-driven gates: ``max_collectives_per_step``
+  (bucketed modes: the whole point of bucketing is a *bounded* number
+  of launches) and ``forbid_allreduce_above_bytes`` (ZeRO modes).
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict
+
+from repro.analysis.cost import gradient_sync_mode
+from repro.analysis.hlo_ir import (
+    COLLECTIVES,
+    _op_defs,
+    compute_multipliers,
+    parse_computations,
+    type_bytes,
+)
+from repro.analysis.passes import AuditContext, PassResult, register_pass
+
+
+@register_pass("collectives")
+def schedule_pass(ctx: AuditContext) -> PassResult:
+    res = PassResult(name="collectives")
+    floor = float(ctx.expectations.get("schedule_min_bytes", 2048))
+    comps = parse_computations(ctx.hlo_text)
+    comps.pop("__entry__", None)
+    mult, _ = compute_multipliers(comps)
+
+    execs: Dict[str, float] = defaultdict(float)
+    max_bytes: Dict[str, float] = defaultdict(float)
+    small_execs = 0.0
+    for cname, ops in comps.items():
+        m_c = mult.get(cname, 0.0)
+        if not m_c:
+            continue
+        defs = _op_defs(ops)
+        for op in ops:
+            base = op.opcode[:-6] if op.opcode.endswith("-start") \
+                else op.opcode
+            if base not in COLLECTIVES:
+                continue
+            in_b = sum(type_bytes(defs[o].result)
+                       for o in op.operands if o in defs)
+            b = max(type_bytes(op.result), in_b)
+            max_bytes[base] = max(max_bytes[base], b)
+            if b >= floor:
+                execs[base] += m_c
+            else:
+                small_execs += m_c
+
+    total = sum(execs.values())
+    res.summary.update({
+        "per_op": {
+            k: {"execs": round(v, 2), "max_bytes": max_bytes[k]}
+            for k, v in sorted(execs.items())
+        },
+        "qualifying_execs_total": round(total, 2),
+        "small_execs_total": round(small_execs, 2),
+        "schedule_min_bytes": floor,
+        # metric floor is driver-tunable: the LARS trust-ratio psum is
+        # (2, L+1) f32 ≈ 1.3 KiB on full ResNet-50, still "metric-sized"
+        "gradient_sync": gradient_sync_mode(
+            ctx.analysis,
+            metric_bytes_floor=int(
+                ctx.expectations.get("metric_bytes_floor", 1024))),
+        "allreduce_max_bytes": max_bytes.get("all-reduce", 0.0),
+    })
+
+    cap = ctx.expectations.get("max_collectives_per_step")
+    if cap is not None and total > float(cap):
+        res.add("error",
+                f"{total:.1f} qualifying collectives/step exceeds the "
+                f"contract cap of {float(cap):.0f} (bucketing is "
+                f"supposed to bound launches)",
+                qualifying_execs_total=total, cap=float(cap))
+    ar_cap = ctx.expectations.get("forbid_allreduce_above_bytes")
+    if ar_cap is not None and \
+            max_bytes.get("all-reduce", 0.0) > float(ar_cap):
+        res.add("error",
+                f"all-reduce moving {max_bytes['all-reduce']:.0f} B "
+                f"survives; this mode promises none above "
+                f"{float(ar_cap):.0f} B (metric size)",
+                allreduce_max_bytes=max_bytes["all-reduce"],
+                cap=float(ar_cap))
+    return res

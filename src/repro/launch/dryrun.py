@@ -32,6 +32,7 @@ from repro.configs import (
     shapes_for,
 )
 from repro.distributed.sharding import make_rules, spec_for, tree_shardings
+from repro.analysis import quick_audit
 from repro.launch.hlo_analysis import Analysis, analyze_hlo, comm_report
 from repro.launch.mesh import (
     HBM_BW,
@@ -414,6 +415,15 @@ def analyze_compiled(arch, shp, cfg, mesh, compiled, resident
         # interleave section proves (or refutes) that collectives overlap
         # the backward compute in scheduled program order (DESIGN.md §8)
         "comm_report": comm_report(a, hlo_text=hlo),
+        # context-free audit passes (repro.analysis, DESIGN.md §12):
+        # precision / donation / determinism / collective-schedule
+        # findings for this cell. Train cells donate their state arg,
+        # so the trailing batch leaves arm the donation coverage gate.
+        "audit": quick_audit(
+            hlo, total_devices=n_dev,
+            n_batch_params=(len(jax.tree.leaves(
+                input_specs(cfg, shp, jnp.bfloat16)))
+                if shp.kind == "train" else None)),
         "trip_counts_found": len(a.trip_counts),
         "resident_bytes_per_device": resident_bytes,
         "fits_v5e_16g": sum(resident_bytes.values()) < V5E_HBM_BYTES,

@@ -1,838 +1,32 @@
-"""Optimized-HLO analyzer: loop-aware FLOPs / bytes / collective accounting.
-
-XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified
-in this container), which under-reports scanned models by a factor of
-n_layers. This module parses ``compiled.as_text()`` into computations +
-ops, recovers while trip counts from loop-condition constants, and
-multiplies costs through the (possibly nested) loop structure.
-
-Outputs per program:
-  flops            dot + convolution FLOPs, trip-count weighted
-  collectives      per-op-kind wire bytes (ring-model factors), dtypes
-  memory_bytes     ~HBM traffic: sum of materialized buffer sizes x2
-                   (write + read) + parameter bytes (approximation,
-                   documented in EXPERIMENTS.md §Roofline)
+"""Back-compat shim: the HLO static analyzer grew into the
+``repro.analysis`` subsystem (DESIGN.md §12) — typed IR in
+``analysis/hlo_ir.py``, cost engine in ``analysis/cost.py``, reports as
+audit passes under ``analysis/passes/``. This module re-exports the
+original public surface so existing importers (tests, benchmarks,
+dryrun) and doc references keep resolving. New code should import
+from ``repro.analysis`` directly.
 """
-from __future__ import annotations
-
-import dataclasses
-import math
-import re
-from collections import defaultdict
-from typing import Dict, List, Optional, Tuple
-
-DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
-}
-
-COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-               "collective-permute", "collective-broadcast")
-
-# Ops counted as HBM-materializing for the memory-traffic model. The
-# CPU backend fuses far less than TPU, so raw elementwise/convert/
-# broadcast/transpose ops in CPU HLO are *excluded* — on TPU they fuse
-# into their consumers. What remains (matmuls, fusions, gathers,
-# reductions, copies, collectives, scan-stack slice updates) is the
-# traffic a TPU execution would actually see. Documented approximation
-# (EXPERIMENTS.md §Roofline).
-# (iota/rng excluded: XLA:TPU generates them in-register / fuses them;
-# the CPU backend materializes them — a backend artifact.)
-MATERIALIZING = {
-    "dot", "convolution", "fusion", "copy", "gather", "scatter",
-    "dynamic-slice", "dynamic-update-slice", "reduce", "reduce-window",
-    "sort", "cholesky", "triangular-solve", "pad", "concatenate",
-    "select-and-scatter",
-} | set(COLLECTIVES)
-
-
-@dataclasses.dataclass
-class Op:
-    name: str
-    opcode: str
-    result: str  # raw type string
-    operands: List[str]
-    attrs: str
-    root: bool = False
-
-
-@dataclasses.dataclass
-class Analysis:
-    flops: float
-    dot_flops: float
-    conv_flops: float
-    memory_bytes: float
-    parameter_bytes: float
-    collective_bytes: Dict[str, float]  # opcode -> wire bytes (per device)
-    collective_dtypes: Dict[str, Dict[str, float]]  # opcode -> dtype -> bytes
-    collective_count: int
-    trip_counts: Dict[str, int]
-    op_histogram: Dict[str, int]
-    top_memory_ops: List[tuple] = dataclasses.field(default_factory=list)
-    top_collective_ops: List[tuple] = dataclasses.field(
-        default_factory=list)
-    # opcode -> trip-count-weighted executions per step (a collective
-    # inside a scanned layer counts n_layers times) — what the bucketing
-    # fusion claim (DESIGN.md §6) is verified against
-    collective_exec_counts: Dict[str, float] = dataclasses.field(
-        default_factory=dict)
-    # opcode -> largest single-execution wire bytes — what the ZeRO
-    # "the full-gradient all-reduce is gone" claim (DESIGN.md §9) is
-    # verified against (a metric pmean stays tiny; a gradient bucket
-    # does not)
-    collective_max_exec_bytes: Dict[str, float] = dataclasses.field(
-        default_factory=dict)
-
-    @property
-    def total_collective_bytes(self) -> float:
-        return sum(self.collective_bytes.values())
-
-
-_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-
-
-def type_bytes(type_str: str) -> float:
-    """Bytes of a (possibly tuple) HLO type string."""
-    total = 0.0
-    for dtype, dims in _TYPE_RE.findall(type_str):
-        if dtype not in DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n * DTYPE_BYTES[dtype]
-    return total
-
-
-def type_shape(type_str: str) -> Tuple[str, Tuple[int, ...]]:
-    m = _TYPE_RE.search(type_str)
-    if not m:
-        return ("", ())
-    dims = tuple(int(d) for d in m.group(2).split(",")) if m.group(2) else ()
-    return m.group(1), dims
-
-
-_COMP_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
-_OP_RE = re.compile(
-    r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*"
-    r"((?:\([^()]*\))|(?:[\w\[\],{}.]+))\s+"
-    r"([\w\-]+)\((.*)$"
+from repro.analysis.cost import (  # noqa: F401
+    MATERIALIZING,
+    Analysis,
+    analyze_hlo,
+    gradient_sync_mode,
 )
-
-
-_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
-
-
-def parse_computations(text: str) -> Dict[str, List[Op]]:
-    """Column-0 lines open computations (headers may wrap over several
-    lines); indented lines are ops; a column-0 '}' closes."""
-    comps: Dict[str, List[Op]] = {}
-    current: Optional[str] = None
-    entry_marked: Optional[str] = None
-    for line in text.splitlines():
-        if line.startswith("}"):
-            current = None
-            continue
-        if line and not line[0].isspace():
-            m = _HEADER_RE.match(line)
-            if m:
-                current = m.group(2)
-                comps[current] = []
-                if m.group(1):
-                    entry_marked = current
-            continue
-        if current is None:
-            continue
-        m = _OP_RE.match(line)
-        if not m:
-            continue
-        root, name, rtype, opcode, rest = m.groups()
-        # operands: the leading %names inside the first paren group
-        operands = re.findall(r"%([\w.\-]+)", rest.split("),", 1)[0])
-        comps[current].append(Op(name=name, opcode=opcode, result=rtype,
-                                 operands=operands, attrs=rest,
-                                 root=bool(root)))
-    if entry_marked:
-        comps["__entry__"] = comps[entry_marked]
-    return comps
-
-
-def _op_defs(ops: List[Op]) -> Dict[str, Op]:
-    return {o.name: o for o in ops}
-
-
-def _trip_count(cond_ops: List[Op]) -> int:
-    """Trip count heuristic: the max scalar s32/u32/s64 constant in the
-    loop-condition computation (jax scans compare a counter against the
-    length constant)."""
-    best = 1
-    for o in cond_ops:
-        if o.opcode != "constant":
-            continue
-        dtype, dims = type_shape(o.result)
-        if dims != () or dtype not in ("s32", "u32", "s64", "u64"):
-            continue
-        m = re.search(r"constant\((-?\d+)\)", "constant(" + o.attrs)
-        if m:
-            best = max(best, int(m.group(1)))
-    return best
-
-
-_CALLED_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
-_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
-
-
-def compute_multipliers(comps: Dict[str, List[Op]]
-                        ) -> Tuple[Dict[str, float], Dict[str, int]]:
-    entry = comps.get("__entry__")
-    if entry is None:  # fall back: last computation is usually ENTRY
-        entry_name = list(comps)[-1]
-    else:
-        entry_name = [k for k, v in comps.items()
-                      if v is entry and k != "__entry__"][0]
-    mult: Dict[str, float] = defaultdict(float)
-    mult[entry_name] = 1.0
-    trips: Dict[str, int] = {}
-
-    # iterate to fixpoint (call graph is a DAG; few passes suffice)
-    for _ in range(20):
-        changed = False
-        new_mult = defaultdict(float)
-        new_mult[entry_name] = 1.0
-        for cname, ops in comps.items():
-            if cname == "__entry__" or mult.get(cname, 0) == 0:
-                continue
-            m_c = mult[cname]
-            for op in ops:
-                if op.opcode == "while":
-                    body = cond = None
-                    bm = re.search(r"body=%?([\w.\-]+)", op.attrs)
-                    cm = re.search(r"condition=%?([\w.\-]+)", op.attrs)
-                    if bm:
-                        body = bm.group(1)
-                    if cm:
-                        cond = cm.group(1)
-                    trip = _trip_count(comps.get(cond, [])) if cond else 1
-                    if body:
-                        trips[body] = trip
-                        new_mult[body] += m_c * trip
-                    if cond:
-                        new_mult[cond] += m_c * (trip + 1)
-                elif op.opcode == "conditional":
-                    bs = _BRANCHES_RE.search(op.attrs)
-                    names = []
-                    if bs:
-                        names = re.findall(r"%?([\w.\-]+)", bs.group(1))
-                    for nm in names:
-                        new_mult[nm] += m_c  # upper bound: every branch
-                else:
-                    for target in _CALLED_RE.findall(op.attrs):
-                        if target in comps and target != cname:
-                            new_mult[target] += m_c
-        if dict(new_mult) != {k: v for k, v in mult.items() if v}:
-            changed = True
-        mult = new_mult
-        if not changed:
-            break
-    return dict(mult), trips
-
-
-def _dot_flops(op: Op, defs: Dict[str, Op]) -> float:
-    _, out_dims = type_shape(op.result)
-    out_elems = math.prod(out_dims) if out_dims else 1
-    lhs = defs.get(op.operands[0]) if op.operands else None
-    contract = 1
-    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
-    if m and lhs is not None:
-        _, lhs_dims = type_shape(lhs.result)
-        for idx in m.group(1).split(","):
-            if idx != "" and int(idx) < len(lhs_dims):
-                contract *= lhs_dims[int(idx)]
-    return 2.0 * out_elems * contract
-
-
-def _conv_flops(op: Op, defs: Dict[str, Op]) -> float:
-    _, out_dims = type_shape(op.result)
-    out_elems = math.prod(out_dims) if out_dims else 1
-    rhs = defs.get(op.operands[1]) if len(op.operands) > 1 else None
-    if rhs is None:
-        return 0.0
-    _, k_dims = type_shape(rhs.result)
-    m = re.search(r"dim_labels=\S+?_(\w+?)->", op.attrs)
-    kernel_mult = 1
-    if m and k_dims:
-        labels = m.group(1)
-        for ch, d in zip(labels, k_dims):
-            if ch != "o":  # spatial digits and 'i' contribute; 'o' doesn't
-                kernel_mult *= d
-    else:
-        kernel_mult = math.prod(k_dims[:-1]) if k_dims else 1
-    return 2.0 * out_elems * kernel_mult
-
-
-def _group_size(op: Op, total_devices: int) -> int:
-    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", op.attrs)
-    if m:
-        return int(m.group(2))
-    m = re.search(r"replica_groups=\{\{([^}]*)\}", op.attrs)
-    if m:
-        return len(m.group(1).split(","))
-    return total_devices
-
-
-def _wire_bytes(op: Op, defs: Dict[str, Op], k: int) -> float:
-    """Ring-model per-device wire bytes for one collective execution."""
-    if k <= 1:
-        return 0.0
-    frac = (k - 1) / k
-    out_b = type_bytes(op.result)
-    in_b = sum(type_bytes(defs[o].result) for o in op.operands if o in defs)
-    if op.opcode == "all-reduce":
-        return 2.0 * in_b * frac
-    if op.opcode == "all-gather":
-        return out_b * frac
-    if op.opcode == "reduce-scatter":
-        return in_b * frac
-    if op.opcode == "all-to-all":
-        return in_b * frac
-    if op.opcode in ("collective-permute", "collective-broadcast"):
-        return max(in_b, out_b)
-    return in_b
-
-
-def analyze_hlo(text: str, total_devices: int = 1) -> Analysis:
-    comps = parse_computations(text)
-    comps.pop("__entry__", None)
-    mult, trips = compute_multipliers(comps)
-
-    flops = dot_flops = conv_flops = 0.0
-    mem = 0.0
-    param_bytes = 0.0
-    coll_bytes: Dict[str, float] = defaultdict(float)
-    coll_dtypes: Dict[str, Dict[str, float]] = defaultdict(
-        lambda: defaultdict(float))
-    coll_count = 0
-    coll_execs: Dict[str, float] = defaultdict(float)
-    coll_max: Dict[str, float] = defaultdict(float)
-    histogram: Dict[str, int] = defaultdict(int)
-    top_mem: List[tuple] = []
-    top_coll: List[tuple] = []
-
-    entry_name = None
-    for cname, ops in comps.items():
-        for o in ops:
-            if o.opcode == "parameter" and mult.get(cname, 0) == 1.0:
-                pass
-        # entry params counted below
-
-    # computations that are fusion bodies: their internals don't
-    # materialize — only the fusion op's output does.
-    fusion_bodies = set()
-    fusion_target = {}
-    for ops in comps.values():
-        for op in ops:
-            if op.opcode == "fusion":
-                m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
-                if m:
-                    fusion_bodies.add(m.group(1))
-                    fusion_target[op.name] = m.group(1)
-
-    # pure dtype-cast fusions (no layout movement): CPU artifacts — the
-    # TPU MXU consumes bf16 directly and these don't exist there.
-    CAST_ONLY = {"parameter", "convert", "bitcast", "get-tuple-element",
-                 "tuple"}
-    # + layout movement: still real traffic, but at the semantic dtype.
-    # slice/concatenate cover the bucketed gradient path (DESIGN.md §6),
-    # whose bucket is a slice of a concatenated bf16 stream.
-    PASSTHROUGH = CAST_ONLY | {"copy", "transpose", "reshape", "slice",
-                               "concatenate"}
-
-    def _convert_only(cname: str) -> bool:
-        return all(o.opcode in CAST_ONLY for o in comps.get(cname, []))
-
-    def _body_mentions_bf16(cname: str) -> bool:
-        return any(type_shape(o.result)[0] == "bf16"
-                   for o in comps.get(cname, []))
-
-    def _bf16_roundtrip(name: str, defs: Dict[str, Op],
-                        hops: int = 5) -> bool:
-        """True if the (f32) value named ``name`` is a converted bf16
-        value — semantically 2 bytes/element on TPU. Follows copy/
-        bitcast/transpose/convert-only-fusion chains."""
-        while hops > 0:
-            hops -= 1
-            d = defs.get(name)
-            if d is None:
-                return False
-            if type_shape(d.result)[0] == "bf16":
-                return True
-            if d.opcode == "convert":
-                src = defs.get(d.operands[0]) if d.operands else None
-                if src and type_shape(src.result)[0] == "bf16":
-                    return True
-                name = d.operands[0] if d.operands else None
-                continue
-            if d.opcode == "fusion" and d.name in fusion_target:
-                fops = comps.get(fusion_target[d.name], [])
-                # CPU promotes bf16 reductions to f32 by a convert that
-                # gets fused into the producer: a fusion whose ROOT
-                # converts a bf16 value is a bf16 round-trip regardless
-                # of what else the fusion computes (the bucketed
-                # gradient pack hits this).
-                froot = next((o for o in fops if o.root), None)
-                if froot is not None and froot.opcode == "convert" \
-                        and froot.operands:
-                    fdefs = _op_defs(fops)
-                    src = fdefs.get(froot.operands[0])
-                    if src is not None and \
-                            type_shape(src.result)[0] == "bf16":
-                        return True
-                if all(o.opcode in PASSTHROUGH for o in fops):
-                    if _body_mentions_bf16(fusion_target[d.name]):
-                        return True
-                    name = d.operands[0] if d.operands else None
-                    continue
-            if d.opcode == "call":
-                # outlined computation (XLA outlines the big gradient
-                # pack): the value is whatever the callee's root is
-                cm = re.search(r"to_apply=%?([\w.\-]+)", d.attrs)
-                if cm and cm.group(1) in comps:
-                    sub = comps[cm.group(1)]
-                    sroot = next((o for o in sub if o.root), None)
-                    if sroot is not None:
-                        return _bf16_roundtrip(sroot.name, _op_defs(sub),
-                                               hops)
-                return False
-            if d.opcode in ("copy", "bitcast", "transpose", "reshape",
-                            "all-reduce", "reduce-scatter", "all-gather",
-                            "slice", "dynamic-slice", "concatenate"):
-                name = d.operands[0] if d.operands else None
-                continue
-            return False
-        return False
-
-    def materialized_bytes(op: Op, defs: Dict[str, Op]) -> float:
-        """HBM write bytes for one op execution. dynamic-update-slice is
-        in-place in XLA: traffic = the updated slice, not the full array
-        (this is what makes scan stacks cheap per iteration)."""
-        if op.opcode == "dynamic-update-slice":
-            upd = defs.get(op.operands[1]) if len(op.operands) > 1 else None
-            return type_bytes(upd.result) if upd else type_bytes(op.result)
-        if op.opcode == "fusion":
-            m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
-            if m and m.group(1) in comps:
-                fops = comps[m.group(1)]
-                fbytes = type_bytes(op.result)
-                # in-place scan-stack update fused behind (bit)casts:
-                # count the update slice, not the whole stack buffer
-                for fo in fops:
-                    if fo.opcode == "dynamic-update-slice" and \
-                            type_bytes(fo.result) >= 0.5 * fbytes:
-                        fdefs = _op_defs(fops)
-                        upd = (fdefs.get(fo.operands[1])
-                               if len(fo.operands) > 1 else None)
-                        if upd is not None:
-                            return type_bytes(upd.result)
-        return type_bytes(op.result)
-
-    for cname, ops in comps.items():
-        m_c = mult.get(cname, 0.0)
-        if m_c == 0.0:
-            continue
-        in_fusion = cname in fusion_bodies
-        defs = _op_defs(ops)
-        for op in ops:
-            histogram[op.opcode] += 1
-            if op.opcode == "dot":
-                f = _dot_flops(op, defs) * m_c
-                dot_flops += f
-                flops += f
-            elif op.opcode == "convolution":
-                f = _conv_flops(op, defs) * m_c
-                conv_flops += f
-                flops += f
-            elif op.opcode in COLLECTIVES or (
-                    op.opcode.endswith("-start") and
-                    op.opcode[:-6] in COLLECTIVES):
-                base = op.opcode[:-6] if op.opcode.endswith("-start") \
-                    else op.opcode
-                k = _group_size(op, total_devices)
-                wb = _wire_bytes(op, defs, k) * m_c
-                dtype, _ = type_shape(op.result)
-                # semantic-dtype correction, per tuple element: each
-                # operand that is a bf16->f32 round-trip runs in bf16 on
-                # TPU. Factor = weighted by operand sizes.
-                if dtype == "f32" or op.result.startswith("("):
-                    tot = corr = 0.0
-                    for o in op.operands:
-                        d = defs.get(o)
-                        if d is None:
-                            continue
-                        ob = type_bytes(d.result)
-                        tot += ob
-                        if type_shape(d.result)[0] == "f32" and \
-                                _bf16_roundtrip(o, defs):
-                            corr += ob / 2
-                    if tot > 0 and corr > 0:
-                        wb *= (tot - corr) / tot
-                        dtype = "bf16*" if corr >= tot / 2 else "mixed*"
-                coll_bytes[base] += wb
-                coll_dtypes[base][dtype] += wb
-                coll_count += 1
-                coll_execs[base] += m_c
-                coll_max[base] = max(coll_max[base],
-                                     wb / m_c if m_c else wb)
-                top_coll.append((wb, base, k, m_c, cname[:30],
-                                 op.result[:46]))
-            if op.opcode in MATERIALIZING and not in_fusion:
-                b = materialized_bytes(op, defs) * m_c
-                if op.opcode == "fusion" and op.name in fusion_target \
-                        and _convert_only(fusion_target[op.name]):
-                    b = 0.0  # CPU dtype/layout artifact; fused on TPU
-                elif op.opcode in ("dot", "convolution") and op.operands \
-                        and all(_bf16_roundtrip(o, defs)
-                                for o in op.operands[:2]):
-                    b *= 0.5  # bf16 dot/conv upcast by the CPU backend
-                elif op.opcode in COLLECTIVES and op.operands and \
-                        type_shape(op.result)[0] == "f32" and \
-                        _bf16_roundtrip(op.operands[0], defs):
-                    b *= 0.5  # collective carries a bf16 value on TPU
-                elif op.opcode == "fusion" and type_shape(
-                        op.result)[0] == "f32" and \
-                        op.name in fusion_target and \
-                        _body_mentions_bf16(fusion_target[op.name]):
-                    b *= 0.5  # f32 fusion of bf16-origin values (CPU
-                    # upcast artifact; TPU keeps the chain in bf16)
-                mem += b
-                if b > 0:
-                    top_mem.append((b, op.opcode, m_c, cname[:30],
-                                    op.result[:42], op.name[:34]))
-
-    # entry parameters = resident inputs (params/opt state/batch), read once
-    entry = None
-    for cname, ops in comps.items():
-        if mult.get(cname) == 1.0 and any(
-                o.opcode == "parameter" for o in ops):
-            if entry is None or len(ops) > len(comps.get(entry, [])):
-                entry = cname
-    if entry:
-        for op in comps[entry]:
-            if op.opcode == "parameter":
-                param_bytes += type_bytes(op.result)
-
-    top_mem.sort(reverse=True)
-    top_coll.sort(reverse=True)
-    return Analysis(
-        flops=flops,
-        dot_flops=dot_flops,
-        conv_flops=conv_flops,
-        memory_bytes=2.0 * mem + param_bytes,
-        parameter_bytes=param_bytes,
-        collective_bytes=dict(coll_bytes),
-        collective_dtypes={k: dict(v) for k, v in coll_dtypes.items()},
-        collective_count=coll_count,
-        trip_counts=trips,
-        op_histogram=dict(histogram),
-        top_memory_ops=top_mem[:40],
-        top_collective_ops=top_coll[:40],
-        collective_exec_counts=dict(coll_execs),
-        collective_max_exec_bytes=dict(coll_max),
-    )
-
-
-def gradient_sync_mode(a: Analysis,
-                       metric_bytes_floor: int = 1024) -> str:
-    """Classify the program's gradient-sync mechanism from its
-    collective mix — the check the ZeRO mode (DESIGN.md §9) is accepted
-    by: ``"reduce_scatter+all_gather"`` means scatter+gather carry the
-    gradient volume AND every all-reduce is metric-sized (below
-    ``metric_bytes_floor`` per execution) — i.e. the full-gradient
-    all-reduce is gone; ``"all_reduce"`` means all-reduces carry it;
-    ``"none"`` means no substantial collectives at all."""
-    rs = a.collective_bytes.get("reduce-scatter", 0.0)
-    ag = a.collective_bytes.get("all-gather", 0.0)
-    ar = a.collective_bytes.get("all-reduce", 0.0)
-    ar_max = a.collective_max_exec_bytes.get("all-reduce", 0.0)
-    if rs > 0 and ag > 0 and ar_max < metric_bytes_floor:
-        return "reduce_scatter+all_gather"
-    if ar >= max(rs, ag) and ar_max >= metric_bytes_floor:
-        return "all_reduce"
-    if max(rs, ag, ar) == 0.0:
-        return "none"
-    return "mixed"
-
-
-def comm_report(a: Analysis, hlo_text: Optional[str] = None,
-                min_collective_bytes: int = 512) -> Dict[str, object]:
-    """Communication summary for one compiled program — the numbers the
-    bucketed sync mode (DESIGN.md §6) is *verified* by, rather than
-    assumed: how many collectives actually execute per step, how many
-    wire bytes each one moves, and in which dtype.
-
-    When ``hlo_text`` is given, the report also carries an
-    ``interleave`` section (``interleave_report``) proving — or
-    refuting — that the collectives overlap the backward compute in the
-    scheduled program order (DESIGN.md §8).
-    """
-    per_op = {}
-    for op, execs in sorted(a.collective_exec_counts.items()):
-        byts = a.collective_bytes.get(op, 0.0)
-        per_op[op] = {
-            "executions_per_step": round(execs, 2),
-            "wire_bytes_per_device": byts,
-            "bytes_per_collective": byts / execs if execs else 0.0,
-            "max_bytes_per_collective": a.collective_max_exec_bytes.get(
-                op, 0.0),
-            "dtype_bytes": dict(a.collective_dtypes.get(op, {})),
-        }
-    total_execs = sum(a.collective_exec_counts.values())
-    total_bytes = a.total_collective_bytes
-    report: Dict[str, object] = {
-        "per_op": per_op,
-        "total_executions_per_step": round(total_execs, 2),
-        "total_wire_bytes_per_device": total_bytes,
-        "mean_bytes_per_collective": (total_bytes / total_execs
-                                      if total_execs else 0.0),
-        # the claim the --zero acceptance test pins down: a ZeRO step
-        # must classify as reduce_scatter+all_gather, i.e. no all-reduce
-        # above metric size survives (DESIGN.md §9)
-        "gradient_sync": gradient_sync_mode(a),
-    }
-    if hlo_text is not None:
-        report["interleave"] = interleave_report(
-            hlo_text, min_collective_bytes=min_collective_bytes)
-    return report
-
-
-# ---------------------------------------------------------------------------
-# BN fusion accounting (fused Pallas batch norm, DESIGN.md §10)
-# ---------------------------------------------------------------------------
-
-_BN_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
-                "bitcast", "convolution", "dot", "while", "call",
-                "conditional", "iota", "rng", "rng-bit-generator"}
-
-
-def bn_pass_counts(text: str, act_elems: int) -> Dict[str, float]:
-    """Count the passes one lowered BN-site program makes over its
-    activation: trip-weighted ``reduction_ops`` — reduce/reduce-window
-    ops that consume an activation-sized (>= ``act_elems``) operand,
-    fusion bodies included; counting only the activation-sized stage
-    makes a backend's hierarchical reduce-window -> reduce chain one
-    logical reduction, not several — and ``activation_writes``
-    (top-level materializing ops whose result is at least
-    ``act_elems`` elements — the elementwise normalize/ReLU/residual/
-    mask chains). Convolutions/dots are excluded: they are the useful
-    compute, identical on the fused and unfused paths."""
-    comps = parse_computations(text)
-    comps.pop("__entry__", None)
-    mult, _ = compute_multipliers(comps)
-    fusion_bodies = set()
-    for ops in comps.values():
-        for op in ops:
-            if op.opcode == "fusion":
-                m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
-                if m:
-                    fusion_bodies.add(m.group(1))
-    reduction = 0.0
-    writes = 0.0
-    for cname, ops in comps.items():
-        m_c = mult.get(cname, 0.0)
-        if not m_c:
-            continue
-        in_fusion = cname in fusion_bodies
-        defs = _op_defs(ops)
-        for op in ops:
-            if op.opcode in ("reduce", "reduce-window"):
-                big_in = False
-                for o in op.operands:
-                    d = defs.get(o)
-                    if d is None:
-                        continue
-                    _, dims = type_shape(d.result)
-                    if dims and math.prod(dims) >= act_elems:
-                        big_in = True
-                if big_in:
-                    reduction += m_c
-                continue
-            if in_fusion or op.opcode in _BN_SKIP_OPS:
-                continue
-            _, dims = type_shape(op.result)
-            if dims and math.prod(dims) >= act_elems:
-                writes += m_c
-    return {"reduction_ops": reduction, "activation_writes": writes}
-
-
-def fusion_report(fused_text: str, unfused_text: str, act_elems: int,
-                  n_sites: int = 1) -> Dict[str, object]:
-    """Per-BN-site op-count comparison the fused-BN claim
-    (DESIGN.md §10) is *verified* by, rather than assumed: the fused
-    fwd+bwd must
-    perform strictly fewer reduction ops than the unfused jnp path
-    (one stats pass + one dy/x-hat pass vs XLA's
-    mean/var/dscale/dbias/dmean/dvar chain) and no more activation-sized
-    materializing writes. Feed it the compiled HLO of the same
-    fwd(+vjp) program lowered both ways; the booleans are what
-    tests/test_fused_bn.py and benchmarks/bn_bench.py assert."""
-    fused = bn_pass_counts(fused_text, act_elems)
-    unfused = bn_pass_counts(unfused_text, act_elems)
-    n = max(n_sites, 1)
-    report: Dict[str, object] = {
-        "act_elems": act_elems,
-        "n_sites": n_sites,
-        "fused": fused,
-        "unfused": unfused,
-        "reduction_ops_per_site": {
-            "fused": fused["reduction_ops"] / n,
-            "unfused": unfused["reduction_ops"] / n,
-        },
-        "activation_writes_per_site": {
-            "fused": fused["activation_writes"] / n,
-            "unfused": unfused["activation_writes"] / n,
-        },
-        "reduction_collapse":
-            fused["reduction_ops"] < unfused["reduction_ops"],
-        "elementwise_collapse":
-            fused["activation_writes"] <= unfused["activation_writes"],
-    }
-    report["collapsed"] = bool(report["reduction_collapse"]
-                               and report["elementwise_collapse"])
-    return report
-
-
-# ---------------------------------------------------------------------------
-# Collective/compute interleaving (backward-overlapped sync, DESIGN.md §8)
-# ---------------------------------------------------------------------------
-
-_COMPUTE_OPS = ("convolution", "dot")
-_CALLING_OPS = ("call", "fusion", "while", "conditional")
-
-
-def _transitive_compute_counts(comps: Dict[str, List[Op]]) -> Dict[str, int]:
-    """conv+dot ops per computation, following call/fusion/while bodies
-    (counted once, not trip-weighted — presence is what the interleave
-    check needs)."""
-    memo: Dict[str, int] = {}
-
-    def count(cname: str, seen) -> int:
-        if cname in memo:
-            return memo[cname]
-        if cname in seen:
-            return 0
-        seen = seen | {cname}
-        total = 0
-        for op in comps.get(cname, []):
-            if op.opcode in _COMPUTE_OPS:
-                total += 1
-            elif op.opcode in _CALLING_OPS:
-                for target in _CALLED_RE.findall(op.attrs):
-                    if target in comps:
-                        total += count(target, seen)
-                bs = _BRANCHES_RE.search(op.attrs)
-                if bs:
-                    for nm in re.findall(r"%?([\w.\-]+)", bs.group(1)):
-                        if nm in comps:
-                            total += count(nm, seen)
-        memo[cname] = total
-        return total
-
-    for cname in comps:
-        count(cname, frozenset())
-    return memo
-
-
-def _op_compute_weight(op: Op, memo: Dict[str, int]) -> int:
-    if op.opcode in _COMPUTE_OPS:
-        return 1
-    if op.opcode in _CALLING_OPS:
-        total = 0
-        for target in _CALLED_RE.findall(op.attrs):
-            total += memo.get(target, 0)
-        bs = _BRANCHES_RE.search(op.attrs)
-        if bs:
-            for nm in re.findall(r"%?([\w.\-]+)", bs.group(1)):
-                total += memo.get(nm, 0)
-        return total
-    return 0
-
-
-def _collective_bytes_of(op: Op, defs: Dict[str, Op]) -> float:
-    in_b = sum(type_bytes(defs[o].result) for o in op.operands if o in defs)
-    return max(type_bytes(op.result), in_b)
-
-
-def interleave_report(text: str,
-                      min_collective_bytes: int = 512) -> Dict[str, object]:
-    """Verify from the *scheduled* HLO whether the gradient collectives
-    are interleaved with backward compute or clustered at the tail.
-
-    The XLA text is emitted in scheduled program order, so position is
-    evidence: in the non-overlapped step every gradient all-reduce
-    depends on the full backward and must sit after the last backward
-    convolution/dot; in the overlapped step (DESIGN.md §8) the
-    ``optimization_barrier`` pipeline pins each bucket's collective
-    between backward segments, so substantial conv/dot compute appears
-    between the first and last collective and after the first one.
-
-    A program counts as ``interleaved`` when it has >= 2 qualifying
-    (>= ``min_collective_bytes``) collectives, at least one conv/dot
-    between the first and the last of them, and at least one conv/dot
-    after the first one. Tiny metric pmeans fall under the byte floor.
-    """
-    comps = parse_computations(text)
-    comps.pop("__entry__", None)
-    memo = _transitive_compute_counts(comps)
-
-    # the computation carrying the gradient sync = the one with the most
-    # qualifying collective bytes
-    best_name = None
-    best_bytes = -1.0
-    for cname, ops in comps.items():
-        defs = _op_defs(ops)
-        tot = 0.0
-        for op in ops:
-            base = op.opcode[:-6] if op.opcode.endswith("-start") \
-                else op.opcode
-            if base in COLLECTIVES:
-                b = _collective_bytes_of(op, defs)
-                if b >= min_collective_bytes:
-                    tot += b
-        if tot > best_bytes:
-            best_bytes, best_name = tot, cname
-
-    if best_name is None or best_bytes <= 0:
-        return {"n_collectives": 0, "interleaved": False,
-                "reason": "no qualifying collectives"}
-
-    ops = comps[best_name]
-    defs = _op_defs(ops)
-    coll_pos: List[int] = []
-    weights: List[int] = []
-    for idx, op in enumerate(ops):
-        weights.append(_op_compute_weight(op, memo))
-        base = op.opcode[:-6] if op.opcode.endswith("-start") else op.opcode
-        if base in COLLECTIVES and \
-                _collective_bytes_of(op, defs) >= min_collective_bytes:
-            coll_pos.append(idx)
-
-    total = sum(weights)
-    first, last = coll_pos[0], coll_pos[-1]
-    after_first = sum(weights[first + 1:])
-    between = sum(weights[first + 1:last])
-    gaps_with_compute = sum(
-        1 for lo, hi in zip(coll_pos, coll_pos[1:])
-        if sum(weights[lo + 1:hi]) > 0)
-    n = len(coll_pos)
-    interleaved = n >= 2 and between >= 1 and after_first >= 1
-    return {
-        "computation": best_name,
-        "n_collectives": n,
-        "compute_ops_total": total,
-        "compute_ops_before_first": sum(weights[:first]),
-        "compute_ops_after_first": after_first,
-        "compute_ops_between_first_last": between,
-        "gaps_with_compute": gaps_with_compute,
-        "interleaved": interleaved,
-    }
+from repro.analysis.hlo_ir import (  # noqa: F401
+    COLLECTIVES,
+    DTYPE_BYTES,
+    Op,
+    _op_defs,
+    compute_multipliers,
+    parse_computations,
+    type_bytes,
+    type_shape,
+)
+from repro.analysis.passes.comm import comm_report  # noqa: F401
+from repro.analysis.passes.fusion import (  # noqa: F401
+    bn_pass_counts,
+    fusion_report,
+)
+from repro.analysis.passes.interleave import (  # noqa: F401
+    interleave_report,
+)

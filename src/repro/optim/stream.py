@@ -82,11 +82,13 @@ def make_stream_optimizer(cfg: OptimizerConfig, steps_per_epoch: int,
     if cfg.kind == "lars":
         return _make_stream_lars(cfg, steps_per_epoch, global_batch,
                                  use_fused)
+    if cfg.kind == "momentum_sgd":
+        return _make_stream_momentum_sgd(cfg, steps_per_epoch,
+                                         global_batch)
     if cfg.kind != "rmsprop_warmup":
         raise ValueError(
-            f"the packed stream shards the rmsprop_warmup and lars "
-            f"updates; got optimizer kind {cfg.kind!r} (momentum_sgd "
-            "keeps the replicated tree update)")
+            f"the packed stream shards the rmsprop_warmup, momentum_sgd "
+            f"and lars updates; got optimizer kind {cfg.kind!r}")
     lr_fn = make_lr_schedule(cfg.schedule, global_batch,
                              base_lr_per_256=cfg.base_lr_per_256,
                              warmup_epochs=cfg.warmup_epochs)
@@ -128,6 +130,53 @@ def make_stream_optimizer(cfg: OptimizerConfig, steps_per_epoch: int,
         metrics = {"lr": eta, "alpha_sgd": a_sgd, "epoch": epoch}
         return (p_new, d_new.astype(state_dtype), m_new.astype(state_dtype),
                 metrics)
+
+    def wd_stream(tree: PyTree, plan: BucketPlan) -> np.ndarray:
+        return decay_wd_stream(tree, plan, cfg.weight_decay)
+
+    return StreamOptimizer(init=init, update_shard=update_shard,
+                           wd_stream=wd_stream, kind=cfg.kind)
+
+
+def _make_stream_momentum_sgd(cfg: OptimizerConfig, steps_per_epoch: int,
+                              global_batch: int) -> StreamOptimizer:
+    """Stream-layout momentum SGD — the Goyal baseline sharded over the
+    packed stream so ``--zero`` runs it too (the audit matrix lowers
+    every mode x optimizer cell). Same ``update_shard`` signature as the
+    rmsprop_warmup stream — ``m`` rides along untouched (zeros) so the
+    ZeRO caller's state plumbing is identical — and the math inlines
+    ``core.optimizer.momentum_sgd_update`` with the decay folded in
+    elementwise: ``wd_shard`` is 0.0 off the decay set, and adding
+    ``0.0 * p`` is value-neutral, so the parameters match the
+    replicated tree update exactly (tests/test_audit.py)."""
+    lr_fn = make_lr_schedule("goyal" if cfg.schedule == "goyal" else
+                             cfg.schedule, global_batch,
+                             base_lr_per_256=cfg.base_lr_per_256,
+                             warmup_epochs=cfg.warmup_epochs,
+                             total_epochs=cfg.total_epochs,
+                             poly_power=cfg.poly_power)
+    state_dtype = jnp.dtype(cfg.state_dtype)
+
+    def init(padded_total: int) -> PyTree:
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "delta": jnp.zeros((padded_total,), state_dtype),
+            "m": jnp.zeros((padded_total,), state_dtype),
+        }
+
+    def update_shard(p_shard, g_shard, delta_shard, m_shard, step,
+                     wd_shard):
+        epoch = step.astype(jnp.float32) / steps_per_epoch
+        eta = lr_fn(epoch)
+        d32 = delta_shard.astype(jnp.float32)
+        g = g_shard.astype(jnp.float32) + wd_shard * \
+            p_shard.astype(jnp.float32)
+        d_new = cfg.mu1 * d32 - g
+        p_new = (p_shard.astype(jnp.float32) + eta * d_new
+                 ).astype(p_shard.dtype)
+        metrics = {"lr": eta, "epoch": epoch}
+        return (p_new, d_new.astype(state_dtype),
+                m_shard.astype(state_dtype), metrics)
 
     def wd_stream(tree: PyTree, plan: BucketPlan) -> np.ndarray:
         return decay_wd_stream(tree, plan, cfg.weight_decay)

@@ -79,6 +79,24 @@ def jit_train_step(step, *, donate: bool = True, **jit_kwargs):
                    **jit_kwargs)
 
 
+def lower_train_hlo(step, state, batch, *, donate: bool = True,
+                    **jit_kwargs):
+    """Compiled-HLO text of one train step — the hook the audit
+    subsystem (repro.analysis, DESIGN.md §12) uses to statically verify
+    a jit site: donation/aliasing coverage, collective schedule,
+    accumulation precision. ``state``/``batch`` may be real arrays or
+    ``ShapeDtypeStruct`` trees (AOT — nothing is allocated).
+
+    Returns ``(hlo_text, n_batch_params)`` where ``n_batch_params`` is
+    the flattened batch leaf count — jax flattens ``(state, batch)``
+    state-first, so the audit's donation pass treats every entry
+    parameter except the trailing ``n_batch_params`` as donated state
+    (``repro.analysis.quick_audit``)."""
+    jitted = jit_train_step(step, donate=donate, **jit_kwargs)
+    hlo = jitted.lower(state, batch).compile().as_text()
+    return hlo, len(jax.tree.leaves(batch))
+
+
 def make_train_step(model, optimizer: Optimizer, train_cfg: TrainConfig,
                     mesh: Optional[Mesh] = None,
                     rules: Optional[Dict] = None,

@@ -1,0 +1,254 @@
+"""Typed HLO IR unit tests (repro.analysis.hlo_ir, DESIGN.md §12).
+
+Covers the type-table hardening (pred / s8 / u8 / f8 family / scalar
+``[]`` / sub-byte packing — the seed table silently sized these as 0
+bytes), the parse -> render -> parse roundtrip, and module-level facts
+(entry selection, ``input_output_alias``, entry params, trip-count
+multipliers) on a synthetic module written in XLA's emitted grammar.
+"""
+import pytest
+
+from repro.analysis.hlo_ir import (
+    AliasEntry,
+    DTYPE_BYTES,
+    Op,
+    compute_multipliers,
+    op_consumers,
+    parse_computations,
+    parse_input_output_alias,
+    parse_module,
+    parse_op_line,
+    render_op,
+    type_bytes,
+    type_shape,
+)
+
+# ---------------------------------------------------------------------------
+# type table
+# ---------------------------------------------------------------------------
+
+
+def test_type_bytes_seed_cases_unchanged():
+    # the three shapes the seed-era tests pinned — must keep holding
+    assert type_bytes("f32[4,8]{1,0}") == 128
+    assert type_bytes("bf16[10]") == 20
+    assert type_bytes("(f32[2,2]{1,0}, s32[])") == 20
+
+
+def test_type_bytes_hardened_dtypes():
+    assert type_bytes("pred[8]") == 8
+    assert type_bytes("s8[4]") == 4
+    assert type_bytes("u8[16]{0}") == 16
+    assert type_bytes("f8e4m3[8]") == 8
+    assert type_bytes("f8e4m3fn[8]") == 8
+    assert type_bytes("f8e5m2[16]") == 16
+    assert type_bytes("f16[3]") == 6
+
+
+def test_type_bytes_scalar_and_subbyte():
+    assert type_bytes("f32[]") == 4
+    assert type_bytes("pred[]") == 1
+    assert type_bytes("s4[8]") == 4.0  # packed two per byte
+    assert type_bytes("u4[2]") == 1.0
+    assert type_bytes("s2[8]") == 2.0
+
+
+def test_type_bytes_zero_size_types():
+    assert type_bytes("token[]") == 0
+    assert type_bytes("(f32[4], token[])") == 16
+
+
+def test_type_bytes_strict_raises_on_unknown_dtype():
+    with pytest.raises(ValueError, match="unknown HLO dtype"):
+        type_bytes("f6e3m2[8]", strict=True)
+    # non-strict keeps the lenient seed behaviour: skip, don't crash
+    assert type_bytes("f6e3m2[8]") == 0
+
+
+def test_dtype_table_covers_f8_family():
+    for dt in ("f8e4m3", "f8e4m3fn", "f8e4m3fnuz", "f8e5m2",
+               "f8e5m2fnuz", "f8e3m4"):
+        assert DTYPE_BYTES[dt] == 1, dt
+
+
+def test_type_shape():
+    assert type_shape("f32[4,8]{1,0}") == ("f32", (4, 8))
+    assert type_shape("pred[]") == ("pred", ())
+    assert type_shape("(s32[], f32[128])") == ("s32", ())
+    assert type_shape("no-type-here") == ("", ())
+
+
+# ---------------------------------------------------------------------------
+# op parse / render roundtrip
+# ---------------------------------------------------------------------------
+
+OP_LINES = [
+    "  %p0 = f32[128]{0} parameter(0), sharding={replicated}",
+    "  ROOT %sum = f32[] add(%a, %b)",
+    "  %t = (s32[], f32[128]) tuple(%i.2, %x.2)",
+    ("  %ar = f32[4096]{0} all-reduce(%g), "
+     "replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add.1"),
+    ("  %w = (s32[], f32[128]) while(%init), condition=%cond.2, "
+     "body=%body.3"),
+    ("  %d = f32[64,64]{1,0} dot(%a, %b), lhs_contracting_dims={1}, "
+     "rhs_contracting_dims={0}"),
+    "  %c = s32[] constant(42)",
+    ("  %f = f32[16]{0} fusion(%x, %y), kind=kLoop, "
+     "calls=%fused_computation.1"),
+    "  %pred.1 = pred[] compare(%i, %n), direction=LT",
+]
+
+
+@pytest.mark.parametrize("line", OP_LINES)
+def test_parse_render_parse_is_identity(line):
+    op = parse_op_line(line)
+    assert op is not None, line
+    op2 = parse_op_line(render_op(op))
+    assert op2 == op
+
+
+def test_parse_op_line_fields():
+    op = parse_op_line(OP_LINES[3])
+    assert op.name == "ar"
+    assert op.opcode == "all-reduce"
+    assert op.result == "f32[4096]{0}"
+    assert op.operands == ["g"]
+    assert op.args_raw == "%g"
+    assert op.suffix.startswith(", replica_groups=")
+    assert "to_apply=%add.1" in op.suffix
+    assert not op.root
+
+
+def test_parse_op_line_root_and_tuple_result():
+    op = parse_op_line(OP_LINES[1])
+    assert op.root and op.opcode == "add" and op.operands == ["a", "b"]
+    op = parse_op_line(OP_LINES[2])
+    assert op.result == "(s32[], f32[128])"
+    assert op.operands == ["i.2", "x.2"]
+
+
+def test_parse_op_line_rejects_non_ops():
+    assert parse_op_line("}") is None
+    assert parse_op_line("ENTRY %main (p: f32[4]) -> f32[4] {") is None
+    assert parse_op_line("") is None
+
+
+def test_render_op_canonical_text():
+    op = Op(name="x", opcode="add", result="f32[4]",
+            operands=["a", "b"], attrs="%a, %b)", root=True,
+            args_raw="%a, %b", suffix="")
+    assert render_op(op) == "  ROOT %x = f32[4] add(%a, %b)"
+
+
+# ---------------------------------------------------------------------------
+# module-level facts on a synthetic module
+# ---------------------------------------------------------------------------
+
+MODULE = """\
+HloModule jit_step, input_output_alias={ {0}: (0, {}, may-alias), \
+{1}: (1, {}, must-alias) }, entry_computation_layout=whatever
+
+%add.1 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %sum = f32[] add(%a, %b)
+}
+
+%cond.2 (s: (s32[], f32[128])) -> pred[] {
+  %s = (s32[], f32[128]) parameter(0)
+  %i = s32[] get-tuple-element(%s), index=0
+  %n = s32[] constant(4)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%body.3 (s: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %s.1 = (s32[], f32[128]) parameter(0)
+  %i.1 = s32[] get-tuple-element(%s.1), index=0
+  %x = f32[128]{0} get-tuple-element(%s.1), index=1
+  %one = s32[] constant(1)
+  %i.2 = s32[] add(%i.1, %one)
+  %x.2 = f32[128]{0} all-reduce(%x), \
+replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add.1
+  ROOT %t = (s32[], f32[128]) tuple(%i.2, %x.2)
+}
+
+ENTRY %main.4 (p0: f32[128], p1: f32[4096], p2: f32[16]) -> \
+(f32[128], f32[4096]) {
+  %p0 = f32[128]{0} parameter(0), sharding={replicated}
+  %p1 = f32[4096]{0} parameter(1)
+  %p2 = f32[16]{0} parameter(2)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[128]) tuple(%zero, %p0)
+  %w = (s32[], f32[128]) while(%init), condition=%cond.2, body=%body.3
+  %x.3 = f32[128]{0} get-tuple-element(%w), index=1
+  %p1.2 = f32[4096]{0} add(%p1, %p1)
+  ROOT %out = (f32[128], f32[4096]) tuple(%x.3, %p1.2)
+}
+"""
+
+
+def test_parse_computations_entry_alias():
+    comps = parse_computations(MODULE)
+    assert set(comps) == {"add.1", "cond.2", "body.3", "main.4",
+                          "__entry__"}
+    assert comps["__entry__"] is comps["main.4"]
+    assert [o.opcode for o in comps["add.1"]] == \
+        ["parameter", "parameter", "add"]
+
+
+def test_parse_module_entry_and_alias():
+    mod = parse_module(MODULE)
+    assert mod.entry_name == "main.4"
+    assert "__entry__" not in mod.computations
+    assert mod.input_output_alias == [
+        AliasEntry(output_index=(0,), param_number=0, param_index=(),
+                   kind="may-alias"),
+        AliasEntry(output_index=(1,), param_number=1, param_index=(),
+                   kind="must-alias"),
+    ]
+    assert mod.entry_ops[-1].root
+
+
+def test_parse_module_no_computations_raises():
+    with pytest.raises(ValueError, match="no computations"):
+        parse_module("")
+
+
+def test_parse_input_output_alias_absent():
+    assert parse_input_output_alias("HloModule bare\n") == []
+
+
+def test_entry_params_sorted_by_number():
+    mod = parse_module(MODULE)
+    params = mod.entry_params()
+    assert [n for n, _ in params] == [0, 1, 2]
+    assert [op.result for _, op in params] == \
+        ["f32[128]{0}", "f32[4096]{0}", "f32[16]{0}"]
+
+
+def test_op_consumers():
+    mod = parse_module(MODULE)
+    users = op_consumers(mod.entry_ops)
+    assert [u.opcode for u in users["init"]] == ["while"]
+    assert [u.name for u in users["p1"]] == ["p1.2", "p1.2"]
+    assert "out" not in users  # root has no consumers
+
+
+def test_trip_count_multipliers():
+    mod = parse_module(MODULE)
+    mult = mod.multipliers
+    assert mult["main.4"] == 1.0
+    assert mult["body.3"] == 4.0          # trip count from constant(4)
+    assert mult["cond.2"] == 5.0          # trips + 1
+    assert mult["add.1"] == 4.0           # to_apply from the loop body
+    assert mod.trip_counts == {"body.3": 4}
+
+
+def test_compute_multipliers_fallback_last_computation():
+    # no ENTRY marker: the last computation is treated as entry
+    text = MODULE.replace("ENTRY %main.4", "%main.4")
+    comps = parse_computations(text)
+    assert "__entry__" not in comps
+    mult, _ = compute_multipliers(comps)
+    assert mult["main.4"] == 1.0
+    assert mult["body.3"] == 4.0

@@ -1,0 +1,554 @@
+"""Audit-pass unit tests (repro.analysis.passes, DESIGN.md §12).
+
+Each pass gets a positive program (clean HLO -> no errors) and a
+seeded-violation program (the defect the pass exists to catch -> error
+finding), written in XLA's emitted grammar. Also covers the pass
+registry/framework and contract evaluation (repro.analysis.contracts)
+including ``$``-expectation resolution and every violation kind.
+"""
+import pytest
+
+from repro.analysis import quick_audit
+from repro.analysis.contracts import (
+    BASE_FORBID,
+    Check,
+    Contract,
+    contract_for,
+    evaluate,
+    lookup,
+    resolve,
+)
+from repro.analysis.passes import (
+    AuditContext,
+    PassResult,
+    available_passes,
+    get_pass,
+    run_pass,
+)
+
+ADD_COMP = """\
+%add.1 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %sum = f32[] add(%a, %b)
+}
+"""
+
+
+def ctx_for(text, **expectations):
+    return AuditContext(hlo_text=text, total_devices=2,
+                        expectations=dict(expectations))
+
+
+# ---------------------------------------------------------------------------
+# framework / registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_all_builtin_passes():
+    assert {"comm", "interleave", "precision", "donation", "memory",
+            "collectives", "determinism"} <= set(available_passes())
+
+
+def test_get_pass_unknown_raises():
+    with pytest.raises(KeyError, match="unknown audit pass"):
+        get_pass("no_such_pass")
+
+
+def test_run_pass_turns_crash_into_error_finding():
+    # empty HLO makes parse_module raise; the audit must not die mid-run
+    res = run_pass("donation", ctx_for(""))
+    assert not res.as_dict()["ok"]
+    assert any("pass crashed" in f.message for f in res.errors)
+
+
+def test_pass_result_shape():
+    res = PassResult(name="x")
+    res.add("warn", "something", op="op.1", extra=3)
+    d = res.as_dict()
+    assert d["pass"] == "x" and d["ok"] is True
+    assert d["findings"][0] == {
+        "severity": "warn", "message": "something", "op": "op.1",
+        "data": {"extra": 3}}
+    res.add("error", "bad")
+    assert res.as_dict()["ok"] is False
+    with pytest.raises(AssertionError):
+        res.add("fatal", "not a severity")
+
+
+# ---------------------------------------------------------------------------
+# precision pass
+# ---------------------------------------------------------------------------
+
+PRECISION_BAD_REDUCE = ADD_COMP + """
+ENTRY %main (p: f32[4096]) -> bf16[] {
+  %p = f32[4096]{0} parameter(0)
+  %c = bf16[4096]{0} convert(%p)
+  %z = bf16[] constant(0)
+  ROOT %r = bf16[] reduce(%c, %z), dimensions={0}, to_apply=%add.1
+}
+"""
+
+PRECISION_GOOD_REDUCE = ADD_COMP + """
+ENTRY %main (p: f32[4096]) -> f32[] {
+  %p = f32[4096]{0} parameter(0)
+  %z = f32[] constant(0)
+  ROOT %r = f32[] reduce(%p, %z), dimensions={0}, to_apply=%add.1
+}
+"""
+
+
+def test_precision_flags_narrow_big_reduction():
+    res = run_pass("precision", ctx_for(PRECISION_BAD_REDUCE))
+    assert len(res.errors) == 1
+    assert "accumulates in bf16" in res.errors[0].message
+    assert res.summary["narrow_reductions"] == 1
+
+
+def test_precision_accepts_f32_reduction():
+    res = run_pass("precision", ctx_for(PRECISION_GOOD_REDUCE))
+    assert not res.errors
+    assert res.summary["big_reductions_checked"] == 1
+    assert res.summary["narrow_reductions"] == 0
+
+
+def test_precision_small_reduction_below_floor_ignored():
+    small = PRECISION_BAD_REDUCE.replace("4096", "16")
+    res = run_pass("precision", ctx_for(small))
+    assert not res.errors
+    assert res.summary["big_reductions_checked"] == 0
+
+
+PRECISION_ROUNDTRIP = """\
+ENTRY %main (p: f32[4096]) -> f32[4096] {
+  %p = f32[4096]{0} parameter(0)
+  %down = bf16[4096]{0} convert(%p)
+  %up = f32[4096]{0} convert(%down)
+  ROOT %u = f32[4096]{0} add(%up, %up)
+}
+"""
+
+PRECISION_ROUNDTRIP_COLLECTIVE = ADD_COMP + """
+ENTRY %main (p: f32[4096]) -> f32[4096] {
+  %p = f32[4096]{0} parameter(0)
+  %down = bf16[4096]{0} convert(%p)
+  %up = f32[4096]{0} convert(%down)
+  ROOT %ar = f32[4096]{0} all-reduce(%up), \
+replica_groups={{0,1}}, to_apply=%add.1
+}
+"""
+
+
+def test_precision_warns_on_narrow_roundtrip():
+    res = run_pass("precision", ctx_for(PRECISION_ROUNDTRIP))
+    assert not res.errors
+    assert len(res.warnings) == 1
+    assert "round-trip" in res.warnings[0].message
+    assert res.summary["roundtrips"] == 1
+
+
+def test_precision_suppresses_roundtrip_feeding_collective():
+    # the CPU backend promotes bf16 collectives to f32; that inserted
+    # cast pair is a backend artifact, not a policy violation
+    res = run_pass("precision", ctx_for(PRECISION_ROUNDTRIP_COLLECTIVE))
+    assert not res.errors and not res.warnings
+    assert res.summary["roundtrips_suppressed_collective"] == 1
+    assert res.summary["roundtrips"] == 0
+
+
+# ---------------------------------------------------------------------------
+# donation pass
+# ---------------------------------------------------------------------------
+
+def donation_module(alias_entries):
+    return (f"HloModule jit_step, input_output_alias={{ {alias_entries} }}, "
+            "frontend_attributes={}\n\n" + """\
+ENTRY %main (p0: f32[4096], p1: f32[4096], p2: f32[1024]) -> \
+(f32[4096], f32[4096]) {
+  %p0 = f32[4096]{0} parameter(0)
+  %p1 = f32[4096]{0} parameter(1)
+  %p2 = f32[1024]{0} parameter(2)
+  %u0 = f32[4096]{0} add(%p0, %p0)
+  %u1 = f32[4096]{0} add(%p1, %p1)
+  ROOT %out = (f32[4096], f32[4096]) tuple(%u0, %u1)
+}
+""")
+
+
+DONATION_GOOD = donation_module(
+    "{0}: (0, {}, may-alias), {1}: (1, {}, may-alias)")
+DONATION_BAD = donation_module("{0}: (0, {}, may-alias)")
+
+
+def test_donation_full_coverage_passes():
+    res = run_pass("donation", ctx_for(DONATION_GOOD, n_batch_params=1))
+    assert not res.errors
+    s = res.summary
+    assert s["n_entry_params"] == 3
+    assert s["n_state_params"] == 2      # trailing batch leaf excluded
+    assert s["n_aliased"] == 2
+    assert s["state_alias_fraction"] == 1.0
+    assert s["wasted_bytes"] == 0
+
+
+def test_donation_lost_alias_is_error():
+    res = run_pass("donation", ctx_for(DONATION_BAD, n_batch_params=1))
+    assert len(res.errors) == 1
+    assert "donation lost" in res.errors[0].message
+    assert res.summary["wasted_bytes"] == 16384.0
+    # plus the per-parameter warning naming the culprit
+    assert any("parameter 1" in w.message for w in res.warnings)
+
+
+def test_donation_ungated_without_expectation():
+    # no n_batch_params -> info-level coverage report only, never errors
+    res = run_pass("donation", ctx_for(DONATION_BAD))
+    assert not res.errors
+    assert any(f.severity == "info" for f in res.findings)
+
+
+# ---------------------------------------------------------------------------
+# determinism pass
+# ---------------------------------------------------------------------------
+
+DETERMINISM_RNG = """\
+ENTRY %main (p: u64[2]) -> u32[128] {
+  %p = u64[2]{0} parameter(0)
+  ROOT %r = u32[128]{0} rng-bit-generator(%p), algorithm=rng_default
+}
+"""
+
+DETERMINISM_SCATTER = ADD_COMP + """
+ENTRY %main (p: f32[128], i: s32[4,1], u: f32[4]) -> f32[128] {
+  %p = f32[128]{0} parameter(0)
+  %i = s32[4,1]{1,0} parameter(1)
+  %u = f32[4]{0} parameter(2)
+  ROOT %sc = f32[128]{0} scatter(%p, %i, %u), \
+update_window_dims={}, inserted_window_dims={0}, \
+scatter_dims_to_operand_dims={0}, index_vector_dim=1, to_apply=%add.1
+}
+"""
+
+
+def test_determinism_rng_is_error_by_default():
+    res = run_pass("determinism", ctx_for(DETERMINISM_RNG))
+    assert len(res.errors) == 1
+    assert "rng" in res.errors[0].message
+    assert res.summary["clean"] is False
+
+
+def test_determinism_allow_rng_expectation():
+    res = run_pass("determinism", ctx_for(DETERMINISM_RNG, allow_rng=True))
+    assert not res.errors
+    assert res.summary["op_counts"] == {"rng-bit-generator": 1.0}
+
+
+def test_determinism_scatter_warns_then_errors_when_forbidden():
+    res = run_pass("determinism", ctx_for(DETERMINISM_SCATTER))
+    assert not res.errors and len(res.warnings) == 1
+    res = run_pass("determinism",
+                   ctx_for(DETERMINISM_SCATTER, forbid_scatter=True))
+    assert len(res.errors) == 1
+
+
+def test_determinism_clean_program():
+    res = run_pass("determinism", ctx_for(PRECISION_GOOD_REDUCE))
+    assert not res.findings
+    assert res.summary["clean"] is True
+
+
+# ---------------------------------------------------------------------------
+# collectives (schedule) pass
+# ---------------------------------------------------------------------------
+
+SCHEDULE_PROGRAM = ADD_COMP + """
+ENTRY %main (g0: f32[4096], g1: f32[4096], m: f32[2]) -> \
+(f32[4096], f32[4096], f32[2]) {
+  %g0 = f32[4096]{0} parameter(0)
+  %g1 = f32[4096]{0} parameter(1)
+  %m = f32[2]{0} parameter(2)
+  %ar0 = f32[4096]{0} all-reduce(%g0), \
+replica_groups={{0,1}}, to_apply=%add.1
+  %ar1 = f32[4096]{0} all-reduce(%g1), \
+replica_groups={{0,1}}, to_apply=%add.1
+  %arm = f32[2]{0} all-reduce(%m), \
+replica_groups={{0,1}}, to_apply=%add.1
+  ROOT %out = (f32[4096], f32[4096], f32[2]) tuple(%ar0, %ar1, %arm)
+}
+"""
+
+
+def test_schedule_counts_qualifying_collectives():
+    res = run_pass("collectives", ctx_for(SCHEDULE_PROGRAM))
+    s = res.summary
+    assert s["per_op"]["all-reduce"]["execs"] == 2     # metric psum below floor
+    assert s["per_op"]["all-reduce"]["max_bytes"] == 16384
+    assert s["qualifying_execs_total"] == 2
+    assert s["small_execs_total"] == 1
+    assert s["gradient_sync"] == "all_reduce"
+    assert not res.errors
+
+
+def test_schedule_launch_budget_gate():
+    res = run_pass("collectives",
+                   ctx_for(SCHEDULE_PROGRAM, max_collectives_per_step=2))
+    assert not res.errors
+    res = run_pass("collectives",
+                   ctx_for(SCHEDULE_PROGRAM, max_collectives_per_step=1))
+    assert len(res.errors) == 1
+    assert "exceeds the contract cap" in res.errors[0].message
+
+
+def test_schedule_forbid_allreduce_gate():
+    # the ZeRO promise: no all-reduce above metric size survives
+    res = run_pass("collectives",
+                   ctx_for(SCHEDULE_PROGRAM,
+                           forbid_allreduce_above_bytes=1024))
+    assert len(res.errors) == 1
+    assert "this mode promises none above" in res.errors[0].message
+    res = run_pass("collectives",
+                   ctx_for(SCHEDULE_PROGRAM,
+                           forbid_allreduce_above_bytes=65536))
+    assert not res.errors
+
+
+# ---------------------------------------------------------------------------
+# memory pass
+# ---------------------------------------------------------------------------
+
+MEMORY_PROGRAM = """\
+ENTRY %main (p0: f32[1024]) -> f32[1024] {
+  %p0 = f32[1024]{0} parameter(0)
+  %a = f32[1024]{0} multiply(%p0, %p0)
+  %b = f32[1024]{0} add(%a, %p0)
+  ROOT %c = f32[1024]{0} add(%b, %b)
+}
+"""
+
+
+def test_memory_liveness_estimate():
+    res = run_pass("memory", ctx_for(MEMORY_PROGRAM))
+    s = res.summary
+    assert s["entry_param_bytes"] == 4096
+    # %a (4 KiB) and %b (4 KiB) are simultaneously live at %b's def
+    assert s["temp_peak_bytes"] == 8192
+    assert s["peak_bytes"] == 12288
+    assert s["n_buffers"] == 3
+    assert not res.errors
+
+
+def test_memory_peak_cap_gate():
+    res = run_pass("memory", ctx_for(MEMORY_PROGRAM, max_peak_bytes=16384))
+    assert not res.errors
+    res = run_pass("memory", ctx_for(MEMORY_PROGRAM, max_peak_bytes=8192))
+    assert len(res.errors) == 1
+    assert "exceeds contract cap" in res.errors[0].message
+
+
+# ---------------------------------------------------------------------------
+# interleave pass
+# ---------------------------------------------------------------------------
+
+def interleave_module(schedule):
+    return ADD_COMP + f"""
+ENTRY %main (a: f32[64,64], b: f32[64,64]) -> f32[64,64] {{
+{schedule}
+}}
+"""
+
+
+_DOT = ("%{n} = f32[64,64]{{1,0}} dot({a}, {b}), "
+        "lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}")
+_AR = ("%{n} = f32[64,64]{{1,0}} all-reduce({a}), "
+       "replica_groups={{{{0,1}}}}, to_apply=%add.1")
+
+INTERLEAVED = interleave_module("\n".join("  " + ln for ln in [
+    "%a = f32[64,64]{1,0} parameter(0)",
+    "%b = f32[64,64]{1,0} parameter(1)",
+    _DOT.format(n="d1", a="%a", b="%b"),
+    _AR.format(n="ar1", a="%d1"),
+    _DOT.format(n="d2", a="%ar1", b="%b"),
+    _AR.format(n="ar2", a="%d2"),
+    _DOT.format(n="d3", a="%ar2", b="%a"),
+    "ROOT %s = f32[64,64]{1,0} add(%d3, %d3)",
+]))
+
+CLUSTERED = interleave_module("\n".join("  " + ln for ln in [
+    "%a = f32[64,64]{1,0} parameter(0)",
+    "%b = f32[64,64]{1,0} parameter(1)",
+    _DOT.format(n="d1", a="%a", b="%b"),
+    _DOT.format(n="d2", a="%d1", b="%b"),
+    _AR.format(n="ar1", a="%d1"),
+    _AR.format(n="ar2", a="%d2"),
+    "ROOT %s = f32[64,64]{1,0} add(%ar1, %ar2)",
+]))
+
+
+def test_interleave_detects_overlap():
+    res = run_pass("interleave", ctx_for(INTERLEAVED))
+    assert res.summary["interleaved"] is True
+    assert res.summary["n_collectives"] == 2
+    assert not res.errors
+
+
+def test_interleave_clustered_tail_fails_when_required():
+    res = run_pass("interleave", ctx_for(CLUSTERED))
+    assert res.summary["interleaved"] is False
+    assert not res.errors  # informational unless the contract arms it
+    res = run_pass("interleave",
+                   ctx_for(CLUSTERED, require_interleaved=True))
+    assert len(res.errors) == 1
+    assert "clustered at the tail" in res.errors[0].message
+
+
+# ---------------------------------------------------------------------------
+# comm pass (informational)
+# ---------------------------------------------------------------------------
+
+
+def test_comm_pass_summary():
+    res = run_pass("comm", ctx_for(SCHEDULE_PROGRAM))
+    assert not res.errors
+    ar = res.summary["per_op"]["all-reduce"]
+    assert ar["executions_per_step"] == 3
+    assert ar["max_bytes_per_collective"] == 16384
+
+
+# ---------------------------------------------------------------------------
+# quick_audit (the dryrun embedding)
+# ---------------------------------------------------------------------------
+
+
+def test_quick_audit_clean_program():
+    rec = quick_audit(DONATION_GOOD, total_devices=2, n_batch_params=1)
+    assert rec["ok"] is True
+    assert set(rec) == {"precision", "donation", "determinism",
+                        "collectives", "ok"}
+    assert all(rec[p]["ok"] for p in
+               ("precision", "donation", "determinism", "collectives"))
+
+
+def test_quick_audit_flags_seeded_violation():
+    rec = quick_audit(DONATION_BAD, total_devices=2, n_batch_params=1)
+    assert rec["ok"] is False
+    assert rec["donation"]["ok"] is False
+
+
+# ---------------------------------------------------------------------------
+# contracts
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_expectations():
+    assert resolve(7, {}) == 7
+    assert resolve("$n", {"n": 9}) == 9
+    with pytest.raises(KeyError, match="driver did not compute"):
+        resolve("$missing", {"n": 9})
+
+
+def test_lookup_dotted_path():
+    rec = {"collectives": {"summary": {"per_op": {"all-reduce":
+                                                  {"execs": 8}}}}}
+    assert lookup(rec, "collectives.per_op.all-reduce.execs") == 8
+    with pytest.raises(KeyError, match="no pass record"):
+        lookup(rec, "memory.peak_bytes")
+    with pytest.raises(KeyError, match="missing"):
+        lookup(rec, "collectives.per_op.all-gather.execs")
+
+
+def _fake_record(execs=8, sync="all_reduce", with_error=False):
+    findings = ([{"severity": "error", "message": "seeded"}]
+                if with_error else [])
+    return {
+        "collectives": {"pass": "collectives", "ok": not with_error,
+                        "findings": findings,
+                        "summary": {"qualifying_execs_total": execs,
+                                    "gradient_sync": sync,
+                                    "per_op": {"all-reduce":
+                                               {"execs": execs}}}},
+    }
+
+
+def test_evaluate_clean_contract():
+    c = Contract(name="t", forbid_errors=("collectives",), checks=(
+        Check("collectives.per_op.all-reduce.execs", "==", "$n_buckets"),
+        Check("collectives.gradient_sync", "==", "all_reduce"),
+    ))
+    assert evaluate(c, _fake_record(), {"n_buckets": 8}) == []
+
+
+def test_evaluate_check_failed():
+    c = Contract(name="t", forbid_errors=(), checks=(
+        Check("collectives.per_op.all-reduce.execs", "==", "$n_buckets",
+              label="one all-reduce per bucket"),))
+    v = evaluate(c, _fake_record(execs=9), {"n_buckets": 8})
+    assert [x["kind"] for x in v] == ["check_failed"]
+    assert v[0]["expected"] == 8 and v[0]["actual"] == 9
+    assert v[0]["check"] == "one all-reduce per bucket"
+
+
+def test_evaluate_pass_error_and_missing_pass():
+    c = Contract(name="t", forbid_errors=("collectives", "memory"),
+                 checks=())
+    v = evaluate(c, _fake_record(with_error=True), {})
+    kinds = sorted(x["kind"] for x in v)
+    assert kinds == ["missing_pass", "pass_error"]
+
+
+def test_evaluate_check_error_on_bad_field():
+    c = Contract(name="t", forbid_errors=(), checks=(
+        Check("collectives.per_op.reduce-scatter.execs", ">=", 1),))
+    v = evaluate(c, _fake_record(), {})
+    assert v[0]["kind"] == "check_error"
+
+
+def test_evaluate_is_true_ops():
+    c = Contract(name="t", forbid_errors=(), checks=(
+        Check("interleave.interleaved", "is_true"),))
+    rec = {"interleave": {"summary": {"interleaved": False},
+                          "findings": []}}
+    v = evaluate(c, rec, {})
+    assert v and v[0]["kind"] == "check_failed"
+    rec["interleave"]["summary"]["interleaved"] = True
+    assert evaluate(c, rec, {}) == []
+
+
+def test_contract_table_per_mode():
+    gspmd = contract_for("resnet50", "gspmd", "sgd")
+    assert gspmd.forbid_errors == BASE_FORBID
+    assert not gspmd.expectations
+
+    bucketed = contract_for("resnet50", "bucketed", "sgd")
+    assert bucketed.expectations["max_collectives_per_step"] == \
+        "$collective_budget"
+    assert any(c.value == "$n_buckets" for c in bucketed.checks)
+
+    overlap = contract_for("resnet50", "overlap", "lars")
+    assert overlap.expectations["require_interleaved"] is True
+
+    zero = contract_for("resnet50", "zero", "sgd")
+    assert zero.expectations["forbid_allreduce_above_bytes"] == \
+        "$metric_bytes_floor"
+    fields = [c.field for c in zero.checks]
+    assert "collectives.per_op.reduce-scatter.execs" in fields
+    assert "collectives.per_op.all-gather.execs" in fields
+
+    with pytest.raises(ValueError, match="no contract for mode"):
+        contract_for("resnet50", "nope", "sgd")
+
+
+def test_zero_contract_rejects_bucketed_style_record():
+    # cross-check: a bucketed-looking program must violate the zero
+    # contract (gradient carried by all-reduce, no reduce-scatter)
+    zero = contract_for("resnet50", "zero", "sgd")
+    zero = Contract(name=zero.name, passes=zero.passes,
+                    expectations=zero.expectations, checks=zero.checks,
+                    forbid_errors=())
+    v = evaluate(zero, _fake_record(execs=8, sync="all_reduce"),
+                 {"n_buckets": 8, "metric_bytes_floor": 2048,
+                  "collective_budget": 10})
+    kinds = {x["kind"] for x in v}
+    assert "check_failed" in kinds or "check_error" in kinds
+    # specifically: gradient_sync mismatch is among the violations
+    assert any(x.get("field") == "collectives.gradient_sync"
+               for x in v if x["kind"] == "check_failed")

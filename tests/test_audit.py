@@ -1,0 +1,197 @@
+"""Audit-driver tests (repro.analysis.audit, DESIGN.md §12).
+
+Fast tier: the driver's expectation arithmetic (shared with
+``distributed/bucketing.py:stream_layout``), CLI validation, exit
+codes, and stream-vs-tree momentum-SGD parity (the optimizer added so
+the zero x sgd audit cells lower).
+
+Slow tier: the real thing — AOT-lower the train step on the 8-virtual-
+device mesh for a bucketed and a zero cell, run every pass, gate the
+contracts, and cross-check that a zero-mode contract rejects the
+bucketed program (fails loudly on a real, not synthetic, mismatch).
+"""
+import json
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.audit import (
+    MODES,
+    OPTIMIZERS,
+    _cell_expectations,
+    main,
+)
+from repro.analysis.contracts import contract_for, evaluate
+
+from conftest import SUBPROCESS_ENV_8DEV
+
+
+# ---------------------------------------------------------------------------
+# expectation arithmetic (no compile)
+# ---------------------------------------------------------------------------
+
+INFO = {"total_param_elems": 32794, "n_workers": 8,
+        "n_state_leaves": 86, "n_batch_params": 2}
+
+
+def test_mode_table_covers_claimed_matrix():
+    assert set(MODES) == {"gspmd", "perleaf", "bucketed", "overlap",
+                          "zero", "zero_overlap"}
+    assert set(OPTIMIZERS) == {"sgd", "lars"}
+    for spec in MODES.values():
+        assert spec["compression"].startswith("f16")  # CPU-surviving wire
+
+
+def test_cell_expectations_bucketed_drops_tiny_tail():
+    # 32794 f16 elems / 8 KiB buckets -> 9 planned cuts, but the 26-elem
+    # tail (52 B) is under the 2 KiB qualifying floor
+    exp = _cell_expectations(INFO, "bucketed", "sgd", bucket_bytes=8192)
+    assert exp["n_buckets_planned"] == 9
+    assert exp["n_buckets"] == 8
+    assert exp["collective_budget"] == 8 + 2
+    assert exp["n_batch_params"] == 2
+
+
+def test_cell_expectations_zero_doubles_budget():
+    # zero runs reduce-scatter in + all-gather out per bucket
+    exp = _cell_expectations(INFO, "zero", "sgd", bucket_bytes=8192)
+    assert exp["collective_budget"] == 2 * exp["n_buckets"] + 2
+
+
+def test_cell_expectations_single_bucket():
+    exp = _cell_expectations(INFO, "bucketed", "sgd",
+                             bucket_bytes=1 << 30)
+    assert exp["n_buckets"] == 1
+    assert exp["collective_budget"] == 3
+
+
+def test_cell_expectations_wire_floor():
+    exp = _cell_expectations(INFO, "perleaf", "sgd", bucket_bytes=8192)
+    # ring all-reduce: 2 * bytes * (n-1)/n, with 10% slack
+    want = 2 * (32794 * 2) * (7 / 8) * 0.9
+    assert exp["min_gradient_wire_bytes"] == pytest.approx(want)
+
+
+# ---------------------------------------------------------------------------
+# CLI surface
+# ---------------------------------------------------------------------------
+
+
+def test_cli_rejects_unknown_mode_and_optimizer(tmp_path):
+    with pytest.raises(SystemExit):
+        main(["--modes", "bogus", "--out", str(tmp_path / "a.json")])
+    with pytest.raises(SystemExit):
+        main(["--optimizers", "adamw", "--out", str(tmp_path / "a.json")])
+
+
+def test_cli_exit_codes_follow_report(monkeypatch, tmp_path):
+    import repro.analysis.audit as audit_mod
+
+    def fake_run_audit(*a, **k):
+        return {"cells": [{"ok": False, "violations": [
+            {"kind": "check_failed"}]}], "relations": [], "ok": False}
+
+    monkeypatch.setattr(audit_mod, "run_audit", fake_run_audit)
+    out = tmp_path / "AUDIT.json"
+    assert audit_mod.main(["--out", str(out)]) == 1
+    assert json.loads(out.read_text())["ok"] is False
+
+    monkeypatch.setattr(
+        audit_mod, "run_audit",
+        lambda *a, **k: {"cells": [{"ok": True, "violations": []}],
+                         "relations": [], "ok": True})
+    assert audit_mod.main(["--out", str(out)]) == 0
+
+
+# ---------------------------------------------------------------------------
+# stream momentum SGD == tree momentum SGD (the zero x sgd cell's math)
+# ---------------------------------------------------------------------------
+
+
+def test_stream_momentum_sgd_matches_tree_update(key):
+    import jax
+
+    from repro.configs.base import OptimizerConfig
+    from repro.distributed.bucketing import pack, plan_buckets, unpack
+    from repro.optim import make_optimizer
+    from repro.optim.stream import make_stream_optimizer
+
+    cfg = OptimizerConfig(kind="momentum_sgd")
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params = {"conv": {"kernel": jax.random.normal(k1, (3, 3, 4))},
+              "bn": {"scale": jax.random.normal(k2, (4,)) + 1.0,
+                     "bias": jax.random.normal(k3, (4,))}}
+    grads = jax.tree.map(
+        lambda p: jax.random.normal(k4, p.shape) * 0.1, params)
+
+    tree_opt = make_optimizer(cfg, steps_per_epoch=10, global_batch=256)
+    new_p, new_state, metrics = tree_opt.update(
+        params, grads, tree_opt.init(params))
+
+    stream_opt = make_stream_optimizer(cfg, steps_per_epoch=10,
+                                       global_batch=256)
+    plan = plan_buckets(params, bucket_bytes=1 << 20, wire=None)
+    assert plan.n_buckets == 1
+    (p_stream,) = pack(params, plan)
+    (g_stream,) = pack(grads, plan)
+    wd = jnp.asarray(stream_opt.wd_stream(params, plan))
+    # the decay mask must actually discriminate (kernel decays, bias/
+    # scale exempt) or this parity test proves nothing
+    assert 0 < float((wd > 0).sum()) < wd.size
+    opt = stream_opt.init(p_stream.size)
+    p2, d2, m2, metrics2 = stream_opt.update_shard(
+        p_stream, g_stream, opt["delta"], opt["m"], opt["step"], wd)
+
+    stream_p = unpack([p2], plan)
+    stream_d = unpack([d2], plan)
+    for a, b in zip(jax.tree.leaves(stream_p), jax.tree.leaves(new_p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(stream_d),
+                    jax.tree.leaves(new_state["delta"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(metrics2["lr"]) == float(metrics["lr"])
+    assert np.all(np.asarray(m2) == 0)  # m rides along untouched
+
+
+# ---------------------------------------------------------------------------
+# the real thing: lower + audit on the 8-device mesh (slow)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_audit_driver_bucketed_and_zero_cells(tmp_path):
+    out = tmp_path / "AUDIT.json"
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.audit",
+         "--model", "resnet50", "--modes", "bucketed,zero",
+         "--optimizers", "sgd", "--out", str(out)],
+        env=SUBPROCESS_ENV_8DEV, capture_output=True, text=True,
+        timeout=900)
+    assert res.returncode == 0, res.stdout + res.stderr
+
+    report = json.loads(out.read_text())
+    assert report["ok"] is True
+    assert [c["mode"] for c in report["cells"]] == ["bucketed", "zero"]
+    for cell in report["cells"]:
+        assert cell["ok"], cell["violations"]
+        assert cell["violations"] == []
+        assert set(cell["passes"]) == {
+            "comm", "interleave", "precision", "donation", "memory",
+            "collectives", "determinism"}
+        assert cell["expectations"]["n_buckets"] >= 2
+    # the ZeRO residency relation ran and held
+    assert [r["ok"] for r in report["relations"]] == [True]
+
+    # fails loudly: the zero contract must reject the *real* bucketed
+    # program (all-reduce carries the gradient; no reduce-scatter)
+    bucketed = report["cells"][0]
+    zero_contract = contract_for("resnet50", "zero", "sgd")
+    violations = evaluate(zero_contract, bucketed["passes"],
+                          bucketed["expectations"])
+    assert violations, "zero contract accepted a bucketed program"
+    fields = {v.get("field") for v in violations
+              if v["kind"] == "check_failed"}
+    assert "collectives.gradient_sync" in fields

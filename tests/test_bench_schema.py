@@ -163,3 +163,60 @@ def test_bench_scaling_covers_lars_and_baseline():
     kinds = {r["optimizer"] for r in _load_scaling()["recipes"]}
     assert "rmsprop_warmup" in kinds
     assert "lars" in kinds
+
+
+# ---------------------------------------------------------------------------
+# AUDIT.json (the compiled-program audit report, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+AUDIT_PASSES = ("comm", "interleave", "precision", "donation", "memory",
+                "collectives", "determinism")
+
+AUDIT_CELL_FIELDS = ("mode", "optimizer", "contract", "ok", "violations",
+                     "expectations", "info", "passes")
+
+AUDIT_EXPECTATION_KEYS = ("n_buckets", "n_buckets_planned",
+                          "collective_budget", "n_batch_params",
+                          "metric_bytes_floor", "schedule_min_bytes",
+                          "min_gradient_wire_bytes")
+
+
+def _load_audit():
+    with open(os.path.join(REPO, "AUDIT.json")) as f:
+        return json.load(f)
+
+
+def test_audit_json_covers_full_mode_matrix():
+    data = _load_audit()
+    assert data["ok"] is True, "committed AUDIT.json must be green"
+    cells = {(c["mode"], c["optimizer"]) for c in data["cells"]}
+    want = {(m, o)
+            for m in ("gspmd", "perleaf", "bucketed", "overlap", "zero",
+                      "zero_overlap")
+            for o in ("sgd", "lars")}
+    assert cells == want, f"AUDIT.json lost cells: {want - cells}"
+
+
+def test_audit_json_cell_schema():
+    data = _load_audit()
+    for cell in data["cells"]:
+        for field in AUDIT_CELL_FIELDS:
+            assert field in cell, (cell["mode"], field)
+        assert cell["ok"] is True and cell["violations"] == []
+        missing = [p for p in AUDIT_PASSES if p not in cell["passes"]]
+        assert not missing, (cell["mode"], missing)
+        for pname, rec in cell["passes"].items():
+            assert {"pass", "ok", "findings", "summary"} <= set(rec), \
+                (cell["mode"], pname)
+        for k in AUDIT_EXPECTATION_KEYS:
+            assert k in cell["expectations"], (cell["mode"], k)
+
+
+def test_audit_json_relations():
+    data = _load_audit()
+    rels = {(r["relation"], r["optimizer"]) for r in data["relations"]}
+    assert rels == {("zero_shrinks_optimizer_residency", "sgd"),
+                    ("zero_shrinks_optimizer_residency", "lars")}
+    for r in data["relations"]:
+        assert r["ok"] is True
+        assert r["actual_shrink_bytes"] > 0

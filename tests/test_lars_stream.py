@@ -204,9 +204,14 @@ def test_stream_optimizer_lars_wiring():
     assert st["delta"].shape == (16,)
 
 
-def test_stream_optimizer_still_rejects_momentum_sgd():
+def test_stream_optimizer_still_rejects_unknown_kind():
+    # momentum_sgd joined the stream family (the audit matrix lowers
+    # every mode x optimizer cell, tests/test_audit.py pins parity);
+    # anything outside {rmsprop_warmup, momentum_sgd, lars} still raises
     with pytest.raises(ValueError, match="rmsprop_warmup"):
-        make_stream_optimizer(OptimizerConfig(kind="momentum_sgd"), 5, 32)
+        make_stream_optimizer(OptimizerConfig(kind="adamw"), 5, 32)
+    sopt = make_stream_optimizer(OptimizerConfig(kind="momentum_sgd"), 5, 32)
+    assert set(sopt.init(16)) == {"step", "delta", "m"}
 
 
 def test_stream_checks_require_bucketed_and_lars():

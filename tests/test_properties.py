@@ -394,3 +394,123 @@ def test_shard_layout_permutation_roundtrip(seed, n, bucket_bytes):
                     plan.bucket_bounds(b)[0] + (w + 1) * c]
              for b, c in enumerate(chunks)])
         np.testing.assert_array_equal(lay[w * s:(w + 1) * s], want)
+
+
+# ---------------------------------------------------------------------------
+# HLO IR (repro.analysis.hlo_ir, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+from repro.analysis.hlo_ir import (  # noqa: E402
+    DTYPE_BYTES,
+    compute_multipliers,
+    parse_computations,
+    parse_op_line,
+    render_op,
+    type_bytes,
+)
+
+_hlo_ident = st.from_regex(r"[A-Za-z][A-Za-z0-9_.\-]{0,12}",
+                           fullmatch=True)
+_hlo_opcode = st.from_regex(r"[a-z][a-z0-9]{0,8}(-[a-z0-9]{1,8}){0,2}",
+                            fullmatch=True)
+_hlo_dtype = st.sampled_from(sorted(DTYPE_BYTES))
+
+
+@st.composite
+def _hlo_type(draw):
+    dt = draw(_hlo_dtype)
+    dims = draw(st.lists(st.integers(1, 64), max_size=3))
+    t = f"{dt}[{','.join(map(str, dims))}]"
+    if dims and draw(st.booleans()):  # layout annotation
+        t += "{" + ",".join(map(str, reversed(range(len(dims))))) + "}"
+    if draw(st.booleans()):  # tuple result
+        t2 = draw(_hlo_dtype) + "[]"
+        t = f"({t}, {t2})"
+    return t
+
+
+_hlo_suffix = st.sampled_from([
+    "", ", dimensions={0}", ", to_apply=%add.1",
+    ", replica_groups={{0,1,2,3}}", ", sharding={replicated}",
+    ", index=0", ", direction=LT",
+    ", condition=%cond.2, body=%body.3",
+])
+
+
+@st.composite
+def _hlo_op_line(draw):
+    root = draw(st.booleans())
+    name = draw(_hlo_ident)
+    rtype = draw(_hlo_type())
+    opcode = draw(_hlo_opcode)
+    operands = draw(st.lists(_hlo_ident, max_size=4))
+    args_raw = ", ".join(f"%{o}" for o in operands) \
+        if operands else draw(st.sampled_from(["", "0", "42"]))
+    head = "ROOT " if root else ""
+    return f"  {head}%{name} = {rtype} {opcode}({args_raw})" + \
+        draw(_hlo_suffix)
+
+
+@given(_hlo_op_line())
+def test_hlo_op_parse_render_parse_roundtrip(line):
+    op = parse_op_line(line)
+    assert op is not None, line
+    rendered = render_op(op)
+    op2 = parse_op_line(rendered)
+    assert op2 == op
+    assert render_op(op2) == rendered  # render is a fixpoint
+
+
+@given(_hlo_type())
+def test_hlo_type_bytes_strict_accepts_known_dtypes(t):
+    # every generated type uses table dtypes: strict == lenient > 0
+    # unless every component is a zero-byte token/opaque
+    assert type_bytes(t, strict=True) == type_bytes(t)
+
+
+def _loop_module_blocks(trip):
+    add = ("%add.1 (a: f32[], b: f32[]) -> f32[] {\n"
+           "  %a = f32[] parameter(0)\n"
+           "  %b = f32[] parameter(1)\n"
+           "  ROOT %sum = f32[] add(%a, %b)\n"
+           "}\n")
+    cond = ("%cond.2 (s: (s32[], f32[64])) -> pred[] {\n"
+            "  %s = (s32[], f32[64]) parameter(0)\n"
+            "  %i = s32[] get-tuple-element(%s), index=0\n"
+            f"  %n = s32[] constant({trip})\n"
+            "  ROOT %lt = pred[] compare(%i, %n), direction=LT\n"
+            "}\n")
+    body = ("%body.3 (s: (s32[], f32[64])) -> (s32[], f32[64]) {\n"
+            "  %s.1 = (s32[], f32[64]) parameter(0)\n"
+            "  %i.1 = s32[] get-tuple-element(%s.1), index=0\n"
+            "  %x = f32[64]{0} get-tuple-element(%s.1), index=1\n"
+            "  %one = s32[] constant(1)\n"
+            "  %i.2 = s32[] add(%i.1, %one)\n"
+            "  %x.2 = f32[64]{0} all-reduce(%x), "
+            "replica_groups={{0,1}}, to_apply=%add.1\n"
+            "  ROOT %t = (s32[], f32[64]) tuple(%i.2, %x.2)\n"
+            "}\n")
+    entry = ("ENTRY %main.4 (p0: f32[64]) -> f32[64] {\n"
+             "  %p0 = f32[64]{0} parameter(0)\n"
+             "  %zero = s32[] constant(0)\n"
+             "  %init = (s32[], f32[64]) tuple(%zero, %p0)\n"
+             "  %w = (s32[], f32[64]) while(%init), "
+             "condition=%cond.2, body=%body.3\n"
+             "  ROOT %x.3 = f32[64]{0} get-tuple-element(%w), index=1\n"
+             "}\n")
+    return [add, cond, body, entry]
+
+
+@given(st.integers(1, 12), st.permutations([0, 1, 2, 3]))
+def test_hlo_multipliers_invariant_under_computation_order(trip, perm):
+    # trip-count weighting must depend on the call graph, not on the
+    # textual order XLA happens to emit the computations in (ENTRY is
+    # marked, so entry detection is order-independent)
+    blocks = _loop_module_blocks(trip)
+    text = "\n".join(blocks[i] for i in perm)
+    mult, trips = compute_multipliers(parse_computations(text))
+    assert mult["main.4"] == 1.0
+    assert mult["body.3"] == float(trip)
+    assert mult["cond.2"] == float(trip + 1)
+    assert mult["add.1"] == float(trip)  # to_apply inside the loop body
+    assert trips == {"body.3": trip}

@@ -218,9 +218,11 @@ def test_zero_requires_stream_optimizer():
         make_dp_shardmap_train_step(object(), opt, cfg, mesh, ("data",))
 
 
-def test_stream_optimizer_rejects_non_rmsprop():
+def test_stream_optimizer_rejects_unsupported_kind():
+    # momentum_sgd is stream-supported now (the zero x sgd audit cells,
+    # DESIGN.md §12); kinds outside the stream family still raise
     with pytest.raises(ValueError, match="rmsprop_warmup"):
-        make_stream_optimizer(OptimizerConfig(kind="momentum_sgd"), 5, 32)
+        make_stream_optimizer(OptimizerConfig(kind="adamw"), 5, 32)
 
 
 def test_zero_rejected_outside_shardmap():
