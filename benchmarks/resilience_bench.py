@@ -1,0 +1,203 @@
+"""Chaos soak: drive every fault class through the full recovery path
+and report recovery metrics (DESIGN.md §13).
+
+Each scenario runs the epoch-driven Trainer on the reduced synthetic
+proxy with a deterministic ``--chaos`` spec (resilience/chaos.py) and a
+fresh checkpoint dir, all from the same init/data/jitted step, then
+checks that the expected recovery events fired, the run completed, and
+the final validation top-1 stayed within tolerance of the fault-free
+baseline (a skipped batch or replayed window shifts the trajectory, so
+parity is a tolerance, not an equality). Emits a JSON artifact:
+
+    {"meta": {...}, "baseline_top1": float,
+     "scenarios": {name: {"chaos", "completed", "final_top1",
+                          "top1_delta", "within_tolerance",
+                          "skipped_steps", "rollbacks", "wasted_steps",
+                          "steps_to_recover", "events", "ok", ...}},
+     "all_ok": bool}
+
+Exits nonzero if any scenario fails — CI treats a recovery regression
+like a test failure.
+
+    PYTHONPATH=src python benchmarks/resilience_bench.py --quick \
+        --out BENCH_resilience.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import OptimizerConfig, get_config, reduced_config  # noqa: E402
+from repro.launch.train import build_eval_setup, build_train_setup  # noqa: E402
+from repro.resilience import ResilienceConfig, parse_chaos  # noqa: E402
+from repro.training import Trainer, TrainerConfig  # noqa: E402
+
+K_BAD = 3  # max_consecutive_bad in every scenario
+
+
+def scenarios(ckpt_every: int):
+    """Chaos specs placed relative to the checkpoint cadence so each
+    scenario exercises its intended path (E = ckpt_every):
+
+    * rollback needs K_BAD consecutive NaN steps right after the save
+      at 2E, so the rollback target is the step-2E checkpoint;
+    * ckpt_corrupt additionally truncates that newest checkpoint (the
+      trigger at 2E-1 fires on the save completing at 2E), forcing the
+      restore to fall back to the step-E checkpoint.
+    """
+    e = ckpt_every
+    return {
+        "baseline": {"chaos": None,
+                     "expect": [], "forbid": ["step_skipped", "rollback",
+                                              "data_restart"]},
+        "nan_bucket": {"chaos": f"nan_grad@{e + 2}",
+                       "expect": ["chaos_injected", "step_skipped"],
+                       "forbid": ["rollback"]},
+        "rollback": {"chaos": f"nan_grad@{2 * e + 1}-{2 * e + K_BAD}",
+                     "expect": ["step_skipped", "rollback"],
+                     "forbid": []},
+        "ckpt_corrupt": {"chaos": (f"ckpt_truncate@{2 * e - 1},"
+                                   f"nan_grad@{2 * e + 1}-{2 * e + K_BAD}"),
+                         "expect": ["corrupt_checkpoint_skipped",
+                                    "rollback"],
+                         "forbid": []},
+        "data_crash": {"chaos": f"data_crash@{e + 1}",
+                       "expect": ["data_restart"],
+                       "forbid": ["rollback"]},
+        "straggler": {"chaos": f"straggler@{e}:0.3,data_stall@{2 * e}:0.3",
+                      "expect": ["chaos_injected"],
+                      "forbid": ["step_skipped", "rollback"]},
+    }
+
+
+def run_scenario(name, spec, setup, args) -> dict:
+    train_step, host_state0, data, put_batch, eval_pieces = setup
+    eval_step, val_data, finalize = eval_pieces
+    state = jax.tree.map(jnp.asarray, host_state0)  # fresh init per run
+    t0 = time.time()
+    rec = {"chaos": spec["chaos"], "completed": False,
+           "final_top1": None, "skipped_steps": 0, "rollbacks": 0,
+           "wasted_steps": 0, "steps_to_recover": 0, "events": {}}
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        tcfg = TrainerConfig(
+            epochs=args.epochs, steps_per_epoch=args.steps_per_epoch,
+            eval_every_epochs=1, val_batches=args.val_batches,
+            checkpoint_every=args.ckpt_every, checkpoint_dir=ckpt_dir,
+            log_every=args.steps_per_epoch)
+        resilience = ResilienceConfig(max_consecutive_bad=K_BAD)
+        chaos = (parse_chaos(spec["chaos"], seed=args.seed)
+                 if spec["chaos"] else None)
+        try:
+            result = Trainer(train_step, state, data, tcfg,
+                             eval_step=eval_step, val_data=val_data,
+                             finalize_state=finalize, put_batch=put_batch,
+                             resilience=resilience, chaos=chaos).run()
+        except Exception as e:  # a scenario crash is a failed scenario
+            rec["error"] = f"{type(e).__name__}: {e}"
+            rec["ok"] = False
+            rec["wall_s"] = time.time() - t0
+            return rec
+    rec["completed"] = True
+    for r in result.events:
+        rec["events"][r["kind"]] = rec["events"].get(r["kind"], 0) + 1
+    rec["skipped_steps"] = rec["events"].get("step_skipped", 0)
+    rollbacks = [r for r in result.events if r["kind"] == "rollback"]
+    rec["rollbacks"] = len(rollbacks)
+    rec["wasted_steps"] = sum(r["wasted_steps"] for r in rollbacks)
+    # total extra step budget the faults cost: abandoned batches plus
+    # replayed windows
+    rec["steps_to_recover"] = rec["skipped_steps"] + rec["wasted_steps"]
+    if result.epoch_history:
+        rec["final_top1"] = result.epoch_history[-1].get("top1")
+    missing = [k for k in spec["expect"] if k not in rec["events"]]
+    fired = [k for k in spec["forbid"] if k in rec["events"]]
+    rec["ok"] = not missing and not fired
+    if missing:
+        rec["missing_events"] = missing
+    if fired:
+        rec["forbidden_events"] = fired
+    rec["wall_s"] = time.time() - t0
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="resnet50")
+    ap.add_argument("--epochs", type=int, default=3)
+    ap.add_argument("--steps-per-epoch", type=int, default=8)
+    ap.add_argument("--ckpt-every", type=int, default=4)
+    ap.add_argument("--global-batch", type=int, default=32)
+    ap.add_argument("--val-batches", type=int, default=2)
+    ap.add_argument("--data-noise", type=float, default=2.0)
+    # a fault costs a minibatch or a replayed window, so final accuracy
+    # is trajectory-shifted, not bit-equal; the soak asserts it stays
+    # within this band of the fault-free run
+    ap.add_argument("--tolerance", type=float, default=0.2)
+    ap.add_argument("--quick", action="store_true",
+                    help="2 epochs x 6 steps (CI fast lane)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_resilience.json")
+    args = ap.parse_args()
+    if args.quick:
+        args.epochs, args.steps_per_epoch, args.ckpt_every = 2, 6, 3
+
+    cfg = reduced_config(get_config(args.arch))
+    opt_cfg = OptimizerConfig(kind="momentum_sgd", schedule="constant")
+    model, state, train_step, data, put_batch, _ = build_train_setup(
+        cfg, global_batch=args.global_batch, seq_len=16, opt_cfg=opt_cfg,
+        steps_per_epoch=args.steps_per_epoch, seed=args.seed,
+        data_noise=args.data_noise, sentinel=True)
+    eval_pieces = build_eval_setup(
+        model, cfg, global_batch=args.global_batch, seq_len=16,
+        seed=args.seed, data_noise=args.data_noise)
+    # one host snapshot of the init: the jitted step donates its input
+    # state, so every scenario re-materializes fresh device buffers from
+    # this copy (and reuses the compiled program)
+    host_state0 = jax.tree.map(lambda x: np.array(x), state)
+    setup = (train_step, host_state0, data, put_batch, eval_pieces)
+
+    specs = scenarios(args.ckpt_every)
+    out = {"meta": {"arch": args.arch, "epochs": args.epochs,
+                    "steps_per_epoch": args.steps_per_epoch,
+                    "ckpt_every": args.ckpt_every,
+                    "global_batch": args.global_batch,
+                    "data_noise": args.data_noise,
+                    "tolerance": args.tolerance, "quick": args.quick,
+                    "seed": args.seed, "max_consecutive_bad": K_BAD},
+           "scenarios": {}}
+    baseline_top1 = None
+    for name, spec in specs.items():
+        rec = run_scenario(name, spec, setup, args)
+        if name == "baseline":
+            baseline_top1 = rec["final_top1"]
+            rec["ok"] = rec["ok"] and baseline_top1 is not None
+        if baseline_top1 is not None and rec["final_top1"] is not None:
+            rec["top1_delta"] = rec["final_top1"] - baseline_top1
+            rec["within_tolerance"] = (abs(rec["top1_delta"])
+                                       <= args.tolerance)
+            rec["ok"] = rec["ok"] and rec["within_tolerance"]
+        print(f"{name}: ok={rec['ok']} events={rec['events']} "
+              f"top1={rec['final_top1']} ({rec['wall_s']:.1f}s)",
+              flush=True)
+        out["scenarios"][name] = rec
+    out["baseline_top1"] = baseline_top1
+    out["all_ok"] = all(r["ok"] for r in out["scenarios"].values())
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out} (all_ok={out['all_ok']})")
+    if not out["all_ok"]:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,27 @@
-"""Fault-tolerant checkpointer: atomic, async, topology-elastic.
+"""Fault-tolerant checkpointer: atomic, async, integrity-checked,
+topology-elastic.
 
 Layout:  <dir>/step_<n>/
             arrays.npz        flattened state tree (keystr -> array)
-            manifest.json     step, tree structure hash, metadata
+            manifest.json     step, key list, per-array crc32, metadata
 Manifest is written LAST and fsync'd; restore ignores directories without
 a valid manifest, so a crash mid-save can never corrupt resume (tested).
+
+Atomic replace (DESIGN.md §13): a re-save of an existing step never
+destroys the old data before the new data is in place — the old
+directory is *moved aside*, the tmp directory renamed in, the parent
+directory fsync'd, and only then is the old copy deleted. A crash in
+the window loses at most the directory *listing* for that one step
+(the bytes survive under an aside name and every other checkpoint is
+untouched); an exception moves the old copy straight back. Stale
+``.tmp_ckpt_*`` / aside directories left by killed runs are GC'd when a
+new ``AsyncCheckpointer`` opens the directory.
+
+Integrity: the manifest carries a crc32 per array. ``restore`` verifies
+the payload (zip structure, key coverage, checksums) and — when asked
+for the newest checkpoint — falls back to the next-newest intact one
+instead of raising, reporting each corrupt candidate via ``on_corrupt``
+(the recovery state machine logs these as events).
 
 Elasticity: arrays are saved as *full logical* arrays (gathered from the
 addressable shards), so a restore may re-shard onto any mesh/DP degree —
@@ -18,7 +35,8 @@ import re
 import shutil
 import tempfile
 import threading
-from typing import Any, Dict, Optional, Tuple
+import zlib
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import numpy as np
@@ -27,6 +45,13 @@ PyTree = Any
 
 MANIFEST = "manifest.json"
 ARRAYS = "arrays.npz"
+_TMP_PREFIX = ".tmp_ckpt_"
+_ASIDE_PREFIX = ".old_ckpt_"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """The checkpoint's payload failed validation (torn/bit-flipped
+    arrays.npz, missing keys, or a crc32 mismatch)."""
 
 
 def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
@@ -37,18 +62,54 @@ def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
     return out
 
 
-def save(directory: str, step: int, state: PyTree,
-         metadata: Optional[Dict] = None) -> str:
-    """Atomic synchronous save. Returns the checkpoint path."""
+def _crc32(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
+def _fsync_dir(path: str):
+    """Durably record a rename in the parent directory (best effort:
+    some filesystems reject O_RDONLY fsync on directories)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def gc_stale_tmpdirs(directory: str) -> int:
+    """Remove ``.tmp_ckpt_*`` / aside directories left behind by killed
+    runs. Call only when no save can be in flight in ``directory`` (a
+    fresh ``AsyncCheckpointer`` does, at open). Returns the count."""
+    if not os.path.isdir(directory):
+        return 0
+    n = 0
+    for name in os.listdir(directory):
+        if name.startswith((_TMP_PREFIX, _ASIDE_PREFIX)):
+            shutil.rmtree(os.path.join(directory, name),
+                          ignore_errors=True)
+            n += 1
+    return n
+
+
+def _write_checkpoint(directory: str, step: int,
+                      arrays: Dict[str, np.ndarray],
+                      metadata: Optional[Dict] = None) -> str:
+    """Write already-flattened host arrays as ``step_<n>`` atomically."""
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:010d}")
-    tmp = tempfile.mkdtemp(prefix=".tmp_ckpt_", dir=directory)
+    tmp = tempfile.mkdtemp(prefix=_TMP_PREFIX, dir=directory)
+    aside = None
     try:
-        arrays = _flatten(state)
         np.savez(os.path.join(tmp, ARRAYS), **arrays)
         manifest = {
             "step": int(step),
             "keys": sorted(arrays.keys()),
+            "crc32": {k: _crc32(v) for k, v in arrays.items()},
             "metadata": metadata or {},
         }
         mpath = os.path.join(tmp, MANIFEST)
@@ -57,20 +118,41 @@ def save(directory: str, step: int, state: PyTree,
             f.flush()
             os.fsync(f.fileno())
         if os.path.exists(final):
-            shutil.rmtree(final)
+            # move the existing good checkpoint ASIDE, never rmtree it
+            # before its replacement is in place: a crash here leaves
+            # the data recoverable and all other checkpoints intact
+            aside = tempfile.mkdtemp(prefix=_ASIDE_PREFIX, dir=directory)
+            os.rmdir(aside)
+            os.rename(final, aside)
         os.rename(tmp, final)
+        _fsync_dir(directory)
+        if aside is not None:
+            shutil.rmtree(aside, ignore_errors=True)
+            aside = None
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
+        if aside is not None and not os.path.exists(final):
+            os.rename(aside, final)  # restore the previous good copy
+        elif aside is not None:
+            shutil.rmtree(aside, ignore_errors=True)
         raise
     return final
+
+
+def save(directory: str, step: int, state: PyTree,
+         metadata: Optional[Dict] = None) -> str:
+    """Atomic synchronous save. Returns the checkpoint path."""
+    return _write_checkpoint(directory, step, _flatten(state), metadata)
 
 
 class AsyncCheckpointer:
     """Background-thread checkpointing; at most one save in flight.
 
-    The state is snapshotted (device_get) on the caller thread so the
-    training loop can donate/overwrite buffers immediately; serialization
-    and fsync happen off-thread.
+    The state is snapshotted to host arrays **once**, on the caller
+    thread (``_flatten``), so the training loop can donate/overwrite
+    device buffers immediately; the worker thread serializes that same
+    dict — no second host copy, halving the host-memory spike of a
+    save. Opening a directory GC's stale tmp dirs from killed runs.
     """
 
     def __init__(self, directory: str, keep: int = 3):
@@ -78,16 +160,16 @@ class AsyncCheckpointer:
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        gc_stale_tmpdirs(directory)
 
     def save(self, step: int, state: PyTree, metadata=None,
              block: bool = False):
         self.wait()
-        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
-                                  state)
+        arrays = _flatten(state)  # the ONE host snapshot
 
         def _worker():
             try:
-                save(self.directory, step, host_state, metadata)
+                _write_checkpoint(self.directory, step, arrays, metadata)
                 self._gc()
             except BaseException as e:  # surfaced on next wait()
                 self._error = e
@@ -148,6 +230,9 @@ def restore_best(directory: str, target: Optional[PyTree] = None,
 
 
 def list_checkpoints(directory: str):
+    """Steps with a parseable manifest AND a present payload — a torn
+    save missing ``arrays.npz`` must not be offered for resume (deep
+    payload validation happens in ``restore``)."""
     if not os.path.isdir(directory):
         return []
     out = []
@@ -155,6 +240,8 @@ def list_checkpoints(directory: str):
         m = re.fullmatch(r"step_(\d+)", name)
         if not m:
             continue
+        if not os.path.exists(os.path.join(directory, name, ARRAYS)):
+            continue  # payload never landed: skip
         if os.path.exists(os.path.join(directory, name, MANIFEST)):
             try:
                 with open(os.path.join(directory, name, MANIFEST)) as f:
@@ -165,14 +252,46 @@ def list_checkpoints(directory: str):
     return sorted(out)
 
 
+def _load_arrays(path: str, manifest: Dict) -> Dict[str, np.ndarray]:
+    """Load + validate one checkpoint's payload against its manifest.
+    Raises ``CheckpointCorruptError`` on any integrity failure."""
+    try:
+        with np.load(os.path.join(path, ARRAYS)) as z:
+            arrays = {k: z[k] for k in z.files}
+    except Exception as e:  # zipfile/np errors on torn or flipped bytes
+        raise CheckpointCorruptError(
+            f"unreadable {ARRAYS} under {path}: {e}") from e
+    missing = [k for k in manifest.get("keys", []) if k not in arrays]
+    if missing:
+        raise CheckpointCorruptError(
+            f"{path} payload lost {len(missing)} arrays "
+            f"(first: {missing[0]!r})")
+    crcs = manifest.get("crc32")
+    if crcs:  # absent in pre-integrity checkpoints: skip verification
+        for k, want in crcs.items():
+            if k in arrays and _crc32(arrays[k]) != want:
+                raise CheckpointCorruptError(
+                    f"crc32 mismatch for {k!r} under {path}")
+    return arrays
+
+
 def restore(directory: str, step: Optional[int] = None,
             target: Optional[PyTree] = None,
             shardings: Optional[PyTree] = None,
-            transform=None) -> Tuple[PyTree, Dict]:
-    """Restore ``step`` (default: newest valid). If ``target`` is given,
+            transform=None,
+            on_corrupt: Optional[Callable[[int, Exception], None]] = None
+            ) -> Tuple[PyTree, Dict]:
+    """Restore ``step`` (default: newest intact). If ``target`` is given,
     arrays are unflattened into its structure; with ``shardings`` each
     leaf is device_put with its (possibly new-topology) sharding —
     the elastic-restart path.
+
+    With ``step=None`` the candidates are tried newest-first and a
+    corrupt payload (torn write, flipped bytes, crc mismatch) makes the
+    restore *fall back to the next-newest intact checkpoint* instead of
+    raising — losing a checkpoint interval, not the run. Each skipped
+    candidate is reported through ``on_corrupt(step, error)``. An
+    explicitly requested ``step`` still raises on corruption.
 
     ``transform(arrays, manifest) -> arrays`` rewrites the loaded array
     dict before key matching — the resharding hook that lets a --zero
@@ -181,12 +300,26 @@ def restore(directory: str, step: Optional[int] = None,
     steps = list_checkpoints(directory)
     if not steps:
         raise FileNotFoundError(f"no valid checkpoint under {directory}")
-    step = steps[-1] if step is None else step
-    path = os.path.join(directory, f"step_{step:010d}")
-    with open(os.path.join(path, MANIFEST)) as f:
-        manifest = json.load(f)
-    with np.load(os.path.join(path, ARRAYS)) as z:
-        arrays = {k: z[k] for k in z.files}
+    candidates = [step] if step is not None else list(reversed(steps))
+    arrays = manifest = None
+    last_err: Optional[Exception] = None
+    for s in candidates:
+        path = os.path.join(directory, f"step_{s:010d}")
+        with open(os.path.join(path, MANIFEST)) as f:
+            manifest = json.load(f)
+        try:
+            arrays = _load_arrays(path, manifest)
+            break
+        except CheckpointCorruptError as e:
+            if step is not None:
+                raise
+            last_err = e
+            if on_corrupt is not None:
+                on_corrupt(s, e)
+    else:
+        raise CheckpointCorruptError(
+            f"no intact checkpoint under {directory}: every candidate "
+            f"failed validation (last: {last_err})")
     if transform is not None:
         arrays = transform(arrays, manifest)
     if target is None:

@@ -62,13 +62,22 @@ def build_train_setup(cfg, *, global_batch: int, seq_len: int,
                       zero_dp: bool = False,
                       fused_bn: bool = False,
                       label_smoothing: float = 0.0,
-                      data_noise: Optional[float] = None):
+                      data_noise: Optional[float] = None,
+                      sentinel: bool = False):
     """Returns (model, state, train_step, data, put_batch,
     state_shardings).
 
     ``data_noise``: difficulty of the synthetic image task (None = the
     pipeline default); the recipe/ablation proxies raise it so training
     is still in progress at the schedule-transition epochs.
+
+    ``sentinel``: wrap the train step with the divergence sentinel
+    (resilience/sentinel.py, DESIGN.md §13) — the jitted step becomes
+    the 3-arg ``(state, batch, controls)`` form that the Trainer's
+    recovery state machine drives. On the GSPMD path this forces
+    ``log_grad_norm`` on (the one extra tree reduction documented
+    there); the shard_map modes already get the norm free from the
+    packed gradient stream.
     """
     if fused_bn:
         if cfg.family != "conv":
@@ -102,7 +111,11 @@ def build_train_setup(cfg, *, global_batch: int, seq_len: int,
                             attention_impl=attention_impl,
                             remat=cfg.n_layers > 8)
     train_cfg = TrainConfig(optimizer=opt_cfg, parallel=parallel,
-                            label_smoothing=label_smoothing)
+                            label_smoothing=label_smoothing,
+                            # sentinel needs grad_norm as its whole-
+                            # gradient health flag; GSPMD is the only
+                            # mode where it is not already free
+                            log_grad_norm=sentinel and dp_mode != "shardmap")
     from repro.core.compression import parse_compression
     _, bucketed = parse_compression(compression)
     # packed-stream optimizer layout: always under --zero; also for LARS
@@ -157,6 +170,15 @@ def build_train_setup(cfg, *, global_batch: int, seq_len: int,
     if ef_residual is not None:
         state["ef_residual"] = ef_residual
 
+    def _finalize_step(step):
+        # sentinel wraps OUTSIDE the sync-mode builder and INSIDE jit:
+        # the skip gate must live in the compiled program because the
+        # jitted step donates its input state (DESIGN.md §13)
+        if sentinel:
+            from repro.resilience.sentinel import wrap_step_with_sentinel
+            step = wrap_step_with_sentinel(step)
+        return jit_train_step(step)
+
     rules = None
     state_shardings = None
     put_batch = None
@@ -177,7 +199,7 @@ def build_train_setup(cfg, *, global_batch: int, seq_len: int,
             else:
                 step = make_dp_shardmap_train_step(
                     model, optimizer, train_cfg, mesh, parallel.dp_axes)
-            train_step = jit_train_step(step)
+            train_step = _finalize_step(step)
         else:
             p_shard = tree_shardings(axes, mesh, rules)
             state_shardings = {
@@ -189,10 +211,10 @@ def build_train_setup(cfg, *, global_batch: int, seq_len: int,
             }
             state = jax.device_put(state, state_shardings)
             step = make_train_step(model, optimizer, train_cfg, mesh, rules)
-            train_step = jit_train_step(step)
+            train_step = _finalize_step(step)
     else:
         step = make_train_step(model, optimizer, train_cfg)
-        train_step = jit_train_step(step)
+        train_step = _finalize_step(step)
 
     data = make_data(cfg, shape, seed=seed, noise=data_noise)
     return model, state, train_step, data, put_batch, state_shardings
@@ -282,9 +304,27 @@ def main():
                          "one-pass stats + normalize/ReLU/residual "
                          "epilogue + fused custom-VJP backward "
                          "(kernels/fused_bn.py, DESIGN.md §10)")
+    ap.add_argument("--sentinel", action="store_true",
+                    help="divergence sentinel + recovery state machine: "
+                         "skip non-finite/spiking steps in-jit, roll "
+                         "back to the last good checkpoint after "
+                         "repeated bad steps (DESIGN.md §13; needs "
+                         "--epochs and, for rollback, --ckpt-dir)")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="deterministic fault injection, e.g. "
+                         "'nan_grad@6,ckpt_truncate@10,seed=3' "
+                         "(resilience/chaos.py grammar; implies "
+                         "--sentinel)")
+    ap.add_argument("--event-log", default=None,
+                    help="JSONL path for resilience events")
     ap.add_argument("--log-json", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.chaos:
+        args.sentinel = True
+    if args.sentinel and args.epochs is None:
+        ap.error("--sentinel/--chaos need the epoch-driven loop: "
+                 "pass --epochs")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -309,7 +349,8 @@ def main():
             error_feedback=args.error_feedback,
             overlap_comm=args.overlap_comm, zero_dp=args.zero,
             fused_bn=args.fused_bn,
-            label_smoothing=args.label_smoothing)
+            label_smoothing=args.label_smoothing,
+            sentinel=args.sentinel)
 
     metadata = {"arch": args.arch, "optimizer": args.optimizer,
                 "opt_layout": "zero_stream" if args.zero else "tree"}
@@ -328,15 +369,28 @@ def main():
             checkpoint_every=args.ckpt_every if args.ckpt_dir else 0,
             checkpoint_dir=args.ckpt_dir,
             log_every=max(1, total_steps // 20))
+        resilience = chaos = None
+        if args.sentinel:
+            from repro.resilience import ResilienceConfig, parse_chaos
+            resilience = ResilienceConfig(event_log=args.event_log)
+            if args.chaos:
+                chaos = parse_chaos(args.chaos, seed=args.seed)
         result = Trainer(train_step, state, data, tcfg,
                          eval_step=eval_step, val_data=val_data,
                          finalize_state=finalize, put_batch=put_batch,
                          metadata=metadata,
-                         state_shardings=shardings).run()
+                         state_shardings=shardings,
+                         resilience=resilience, chaos=chaos).run()
         wall = time.time() - t0
         print(f"trained {args.epochs} epochs x {args.steps_per_epoch} "
               f"steps in {wall:.1f}s (dp_mode={args.dp_mode}, "
               f"resumed_from={result.resumed_from})")
+        if result.events:
+            kinds: Dict[str, int] = {}
+            for r in result.events:
+                kinds[r["kind"]] = kinds.get(r["kind"], 0) + 1
+            print("resilience events: " + ", ".join(
+                f"{k}={v}" for k, v in sorted(kinds.items())))
         for r in result.epoch_history:
             top1 = r.get("top1")  # LM archs eval loss only
             t = f"val top1 {top1:.4f} " if top1 is not None else ""
@@ -350,7 +404,8 @@ def main():
                 json.dump({"history": result.history,
                            "epoch_history": result.epoch_history,
                            "best": result.best, "wall": wall,
-                           "resumed_from": result.resumed_from}, f)
+                           "resumed_from": result.resumed_from,
+                           "events": result.events}, f)
         return
 
     # ---- legacy step-driven run (no validation) ----

@@ -1,0 +1,45 @@
+"""Fault-tolerant training (DESIGN.md §13).
+
+At the paper's scale — 1024 GPUs, 15 minutes — a single NaN'd gradient
+bucket, a torn checkpoint, or a dead input worker destroys the whole
+run. This package is the resilience layer under the training loop:
+
+* ``sentinel``      — on-device divergence detection: non-finite flags
+                      piggy-backed on the packed-stream grad norm plus
+                      an EMA spike threshold, and a ``jnp.where`` gate
+                      that suppresses a bad step's update inside the
+                      jitted program (donation-safe skip).
+* ``recovery``      — host-side state machine: skip, then after K
+                      consecutive bad steps restore-from-last-good
+                      checkpoint with LR backoff and bounded retries.
+* ``events``        — structured JSON-lines event log every recovery
+                      action is emitted to.
+* ``chaos``         — deterministic, seed-driven fault injection
+                      (``--chaos`` in launch/train.py) for testing and
+                      the ``benchmarks/resilience_bench.py`` soak.
+"""
+from repro.resilience.chaos import ChaosEngine, ChaosError, parse_chaos
+from repro.resilience.events import EventLog
+from repro.resilience.recovery import (
+    Action,
+    RecoveryManager,
+    ResilienceConfig,
+)
+from repro.resilience.sentinel import (
+    SENTINEL_METRICS,
+    sentinel_controls,
+    wrap_step_with_sentinel,
+)
+
+__all__ = [
+    "Action",
+    "ChaosEngine",
+    "ChaosError",
+    "EventLog",
+    "RecoveryManager",
+    "ResilienceConfig",
+    "SENTINEL_METRICS",
+    "parse_chaos",
+    "sentinel_controls",
+    "wrap_step_with_sentinel",
+]

@@ -1,0 +1,126 @@
+"""Divergence sentinel: on-device bad-step detection + in-jit skip gate
+(DESIGN.md §13).
+
+Large-minibatch SGD is known to be fragile early (the warm-up schedules
+of Goyal et al. and Akiba et al. exist precisely because 32k-batch
+training diverges in the first epochs), and at 1024 workers a single
+flipped bit turns one gradient bucket into NaNs that poison every
+replica within one all-reduce. The sentinel makes each train step
+self-checking at ~zero cost:
+
+* **Non-finite flags come free from the packed gradient stream.** All
+  explicit sync modes already reduce the synced stream to a squared L2
+  norm in one fused pass (``distributed/bucketing.py:unpack(
+  with_sq_norm=True)``, the ZeRO paths' ``grad_sq_local`` psum) and
+  report it as ``metrics["grad_norm"]``. A NaN/Inf *anywhere* in the
+  gradient makes that scalar non-finite, so ``isfinite(grad_norm)`` is
+  a whole-gradient health check with no extra reduction. The loss is
+  checked the same way. (GSPMD has no packed stream; the launcher
+  forces ``log_grad_norm`` on when the sentinel is enabled, paying the
+  one documented extra tree reduction.)
+
+* **Spike detection** compares ``grad_norm`` against a threshold that
+  rides in as a step *input* (``controls["spike_threshold"]``), so the
+  host-side EMA detector (``recovery.RecoveryManager``) can tighten it
+  every step without recompiling. ``inf`` disables the check.
+
+* **The skip gate is inside the jitted program.** The step builders all
+  donate the input state (``training/step.py:jit_train_step``), so by
+  the time the host learns a step was bad the input buffers are gone —
+  a bad step cannot be "not applied" after the fact. Instead the
+  wrapped step computes the update unconditionally and selects
+  ``jnp.where(bad, old, new)`` per leaf: on a good step the select
+  passes ``new`` through bitwise-unchanged (the no-fault parity
+  contract, tests/test_resilience.py), on a bad step the state —
+  params, optimizer (including its step counter), BN statistics, EF
+  residuals — is carried over untouched, as if the step never ran.
+  Every worker computes the same flag from all-reduced scalars, so the
+  gate can never desynchronize replicas.
+
+* **LR backoff** (``controls["lr_scale"]``) damps re-entry after a
+  rollback: params take ``old + scale * (new - old)`` — exactly an
+  LR-scaled parameter step for SGD-family updates (``p' = p + eta*d``),
+  with the optimizer state advancing normally. ``scale >= 1`` selects
+  the untouched ``new`` (no float blend), keeping the parity bitwise.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+#: metric keys every sentinel-wrapped step adds (bool scalars).
+SENTINEL_METRICS = ("bad_step", "nonfinite_step", "grad_spike")
+
+
+def sentinel_controls(spike_threshold: float = float("inf"),
+                      lr_scale: float = 1.0) -> Dict[str, jax.Array]:
+    """The per-step host->device control inputs of a wrapped step."""
+    return {"spike_threshold": jnp.float32(spike_threshold),
+            "lr_scale": jnp.float32(lr_scale)}
+
+
+def _flags(metrics: Dict, threshold: jax.Array):
+    """(bad, nonfinite, spike) bool scalars from the step's metrics.
+
+    Keys are inspected at trace time (dict membership is static), so a
+    mode without ``grad_norm`` simply traces a loss-only check."""
+    nonfinite = jnp.zeros((), bool)
+    loss = metrics.get("loss")
+    if loss is not None:
+        nonfinite |= ~jnp.isfinite(jnp.asarray(loss, jnp.float32))
+    spike = jnp.zeros((), bool)
+    gnorm = metrics.get("grad_norm")
+    if gnorm is not None:
+        g32 = jnp.asarray(gnorm, jnp.float32)
+        nonfinite |= ~jnp.isfinite(g32)
+        spike = jnp.isfinite(g32) & (g32 > threshold)
+    return nonfinite | spike, nonfinite, spike
+
+
+def wrap_step_with_sentinel(step: Callable) -> Callable:
+    """Wrap a ``(state, batch) -> (state', metrics)`` train step into a
+    ``(state, batch, controls) -> (state', metrics)`` resilient step.
+
+    Works on any of the six sync-mode builders — the wrapper runs
+    *outside* shard_map on replicated scalars, so it composes with
+    GSPMD, per-leaf, bucketed, overlap, zero and zero-overlap steps
+    unchanged, and ``jit_train_step`` donation stays valid (state in /
+    state out, same treedef). ``controls`` is ``sentinel_controls()``.
+    """
+
+    def resilient_step(state: PyTree, batch: PyTree,
+                       controls: Dict[str, jax.Array]):
+        new_state, metrics = step(state, batch)
+        bad, nonfinite, spike = _flags(metrics,
+                                       controls["spike_threshold"])
+        scale = controls["lr_scale"]
+
+        def keep(old, new):
+            return jnp.where(bad, old, new)
+
+        def keep_param(old, new):
+            if not jnp.issubdtype(old.dtype, jnp.floating):
+                return keep(old, new)
+            o32 = old.astype(jnp.float32)
+            damped = (o32 + scale * (new.astype(jnp.float32) - o32)
+                      ).astype(old.dtype)
+            # scale >= 1 must select `new` itself: old + 1.0*(new-old)
+            # is NOT bitwise new in floating point
+            return jnp.where(bad, old, jnp.where(scale >= 1.0, new,
+                                                 damped))
+
+        gated = {}
+        for key, new_sub in new_state.items():
+            gate = keep_param if key == "params" else keep
+            gated[key] = jax.tree.map(gate, state[key], new_sub)
+        metrics = dict(metrics)
+        metrics["bad_step"] = bad
+        metrics["nonfinite_step"] = nonfinite
+        metrics["grad_spike"] = spike
+        return gated, metrics
+
+    return resilient_step

@@ -32,6 +32,10 @@ import numpy as np
 from repro.checkpoint import AsyncCheckpointer, list_checkpoints, restore
 from repro.checkpoint.checkpointer import BEST_DIR
 from repro.data.synthetic import Prefetcher
+from repro.resilience.events import EventLog
+from repro.resilience.recovery import (Action, RecoveryManager,
+                                       ResilienceConfig)
+from repro.resilience.sentinel import SENTINEL_METRICS
 
 PyTree = Any
 
@@ -63,6 +67,9 @@ class TrainResult:
     straggler_events: list
     resumed_from: Optional[int]
     best: Optional[Dict]  # {"top1", "epoch", "step"} (eval enabled only)
+    # resilience event records (DESIGN.md §13): skipped steps, rollbacks,
+    # chaos injections, corrupt checkpoints skipped on restore
+    events: list = dataclasses.field(default_factory=list)
 
 
 class Trainer:
@@ -87,7 +94,9 @@ class Trainer:
                  val_data=None, finalize_state: Optional[Callable] = None,
                  put_batch: Optional[Callable] = None,
                  metadata: Optional[Dict] = None,
-                 state_shardings: Optional[PyTree] = None):
+                 state_shardings: Optional[PyTree] = None,
+                 resilience: Optional[ResilienceConfig] = None,
+                 chaos=None):
         if cfg.eval_every_epochs and eval_step is not None \
                 and val_data is None:
             raise ValueError("eval enabled but no val_data given")
@@ -101,6 +110,12 @@ class Trainer:
         self.put_batch = put_batch
         self.metadata = dict(metadata or {})
         self.state_shardings = state_shardings
+        # fault tolerance (DESIGN.md §13): with `resilience` set,
+        # ``train_step`` must be the 3-arg sentinel-wrapped form
+        # (resilience.sentinel.wrap_step_with_sentinel); `chaos` is a
+        # resilience.chaos.ChaosEngine for deterministic fault injection
+        self.resilience = resilience
+        self.chaos = chaos
         self._val_batches = None  # built once: the held-out set is fixed
 
     # ------------------------------------------------------------- eval
@@ -154,6 +169,23 @@ class Trainer:
             os.path.join(cfg.checkpoint_dir, BEST_DIR), keep=1)
             if ckpt and self._eval_enabled() and cfg.keep_best else None)
 
+        # ---- resilience plumbing (DESIGN.md §13) ----
+        events = (EventLog(self.resilience.event_log
+                           if self.resilience else None)
+                  if (self.resilience or self.chaos) is not None else None)
+        manager = (RecoveryManager(self.resilience, events)
+                   if self.resilience is not None else None)
+        chaos = self.chaos
+        if chaos is not None and chaos.events is None:
+            chaos.events = events
+        train_source = (chaos.wrap_source(self.train_data)
+                        if chaos is not None else self.train_data)
+
+        def on_corrupt(s, exc):  # corrupt checkpoint skipped on restore
+            if events is not None:
+                events.emit("corrupt_checkpoint_skipped", step=s,
+                            error=str(exc))
+
         # ---- resume (fault tolerance: newest valid manifest), restoring
         # the eval trajectory and best-so-far alongside the arrays ----
         state = self.state
@@ -163,25 +195,66 @@ class Trainer:
         best: Optional[Dict] = None
         if ckpt and list_checkpoints(cfg.checkpoint_dir):
             state, manifest = restore(cfg.checkpoint_dir, target=state,
-                                      shardings=self.state_shardings)
+                                      shardings=self.state_shardings,
+                                      on_corrupt=on_corrupt)
             start_step = manifest["step"]
             resumed_from = start_step
             eval_history = list(manifest["metadata"].get(
                 "eval_history", []))
             best = manifest["metadata"].get("best")
 
-        prefetch = Prefetcher(self.train_data, start_step=start_step,
+        prefetch = Prefetcher(train_source, start_step=start_step,
                               transform=self.put_batch)
         history = []
         straggler_events = []
         step_times = []
         last_saved = start_step if resumed_from is not None else -1
         try:
-            for step in range(start_step, total_steps):
+            # anchor checkpoint: rollback must always have a target, even
+            # when the divergence hits before the first periodic save
+            if manager is not None and ckpt and not list_checkpoints(
+                    cfg.checkpoint_dir):
+                ckpt.save(start_step, state,
+                          metadata=self._ckpt_metadata(eval_history, best))
+                last_saved = start_step
+
+            step = start_step
+            data_retries_left = (self.resilience.data_retries
+                                 if self.resilience else 0)
+            while step < total_steps:
+                if chaos is not None:
+                    chaos.on_step_start(step)
                 t0 = time.perf_counter()  # includes data wait: that's what
-                got_step, batch = next(prefetch)  # a straggling host looks like
-                assert got_step == step, (got_step, step)
-                state, metrics = self.train_step(state, batch)
+                try:                      # a straggling host looks like
+                    got_step, batch = next(prefetch)
+                except Exception as exc:
+                    # a dead input worker (Prefetcher re-raises from the
+                    # consumer). With resilience: bounded pipeline
+                    # restarts at the current step; without: propagate
+                    # (the pre-existing error contract).
+                    if manager is None or data_retries_left <= 0:
+                        raise
+                    data_retries_left -= 1
+                    events.emit("data_restart", step=step,
+                                error=str(exc),
+                                retries_left=data_retries_left)
+                    prefetch.close()
+                    prefetch = Prefetcher(train_source, start_step=step,
+                                          transform=self.put_batch)
+                    continue
+                if got_step != step:
+                    # a real error, not an assert: data/step misalignment
+                    # silently trains on wrong batches under `python -O`
+                    raise RuntimeError(
+                        f"prefetcher misalignment: got batch for step "
+                        f"{got_step}, expected {step}")
+                if self.resilience is not None:
+                    data_retries_left = self.resilience.data_retries
+                if manager is not None:
+                    state, metrics = self.train_step(
+                        state, batch, manager.controls(step))
+                else:
+                    state, metrics = self.train_step(state, batch)
                 loss = metrics.get("loss")
                 if loss is not None:
                     loss = float(jax.device_get(loss))  # sync point
@@ -191,12 +264,68 @@ class Trainer:
                 if len(step_times) > 5 and dt > cfg.deadline_factor * med:
                     straggler_events.append({"step": step, "time": dt,
                                              "median": med})
+                    if events is not None:
+                        events.emit("straggler", step=step, time=dt,
+                                    median=med)
+
+                # ---- recovery decision (before eval/save: a bad step
+                # must never be checkpointed or scored) ----
+                if manager is not None:
+                    host = {"loss": loss}
+                    for k in SENTINEL_METRICS + ("grad_norm",):
+                        if k in metrics:
+                            host[k] = float(jax.device_get(metrics[k]))
+                    action = manager.observe(step, host)
+                    if action is Action.ABORT:
+                        raise RuntimeError(
+                            f"training aborted at step {step}: "
+                            f"{manager.cfg.max_rollbacks} rollbacks "
+                            "exhausted and the step is still diverging "
+                            "(see the resilience event log)")
+                    if action is Action.ROLLBACK:
+                        if ckpt is None:
+                            raise RuntimeError(
+                                "resilience rollback requires "
+                                "TrainerConfig.checkpoint_dir (no "
+                                "checkpoint to restore from)")
+                        ckpt.wait()  # flush in-flight save + its errors
+                        state, manifest = restore(
+                            cfg.checkpoint_dir, target=state,
+                            shardings=self.state_shardings,
+                            on_corrupt=on_corrupt)
+                        restored = manifest["step"]
+                        eval_history = list(manifest["metadata"].get(
+                            "eval_history", []))
+                        best = manifest["metadata"].get("best")
+                        history = [r for r in history
+                                   if r["step"] < restored]
+                        prefetch.close()
+                        prefetch = Prefetcher(train_source,
+                                              start_step=restored,
+                                              transform=self.put_batch)
+                        manager.on_rollback(from_step=step,
+                                            to_step=restored)
+                        last_saved = restored
+                        step = restored
+                        continue
+                    # CONTINUE / SKIPPED fall through: on a skipped step
+                    # the state was carried over in-jit, the batch is
+                    # simply abandoned
+
+                # mid-streak, hold back eval and checkpoints: the state
+                # is identical to the pre-streak state, and saving here
+                # would advance the rollback target past the steps that
+                # need replaying
+                in_bad_streak = (manager is not None
+                                 and manager.consecutive_bad > 0)
+
                 if step % cfg.log_every == 0 or step == total_steps - 1:
                     history.append({"step": step, "loss": loss, "time": dt})
 
                 done = step + 1
                 # ---- epoch boundary: the paper's eval path ----
-                if self._eval_enabled() and done % cfg.steps_per_epoch == 0:
+                if self._eval_enabled() and not in_bad_streak \
+                        and done % cfg.steps_per_epoch == 0:
                     epoch = done // cfg.steps_per_epoch
                     if (epoch % cfg.eval_every_epochs == 0
                             or epoch == cfg.epochs):
@@ -214,12 +343,17 @@ class Trainer:
                                         eval_history, best))
                 # eval before checkpoint so a resume replays from a
                 # manifest that already contains this epoch's record
-                if ckpt and cfg.checkpoint_every \
+                if ckpt and cfg.checkpoint_every and not in_bad_streak \
                         and done % cfg.checkpoint_every == 0:
                     ckpt.save(done, state,
                               metadata=self._ckpt_metadata(eval_history,
                                                            best))
                     last_saved = done
+                    if chaos is not None \
+                            and chaos.has_pending_ckpt_fault(done):
+                        ckpt.wait()  # land the save, then corrupt it
+                        chaos.after_save(cfg.checkpoint_dir, done)
+                step = done
             # final checkpoint — skipped when the periodic save above
             # already wrote this exact step (previously the same step was
             # saved async then immediately re-saved blocking, rmtree-ing
@@ -234,10 +368,13 @@ class Trainer:
                 best_ckpt.wait()
             if ckpt:
                 ckpt.wait()
+            if events is not None:
+                events.close()
         return TrainResult(state=state, history=history,
                            epoch_history=eval_history,
                            straggler_events=straggler_events,
-                           resumed_from=resumed_from, best=best)
+                           resumed_from=resumed_from, best=best,
+                           events=list(events.records) if events else [])
 
 
 # ---------------------------------------------------------------------------

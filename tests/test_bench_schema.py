@@ -220,3 +220,54 @@ def test_audit_json_relations():
     for r in data["relations"]:
         assert r["ok"] is True
         assert r["actual_shrink_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# BENCH_resilience.json (benchmarks/resilience_bench.py, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+RESILIENCE_SCENARIOS = ("baseline", "nan_bucket", "rollback",
+                        "ckpt_corrupt", "data_crash", "straggler")
+
+RESILIENCE_FIELDS = ("chaos", "completed", "final_top1", "skipped_steps",
+                     "rollbacks", "wasted_steps", "steps_to_recover",
+                     "events", "ok", "wall_s")
+
+
+def _load_resilience():
+    with open(os.path.join(REPO, "BENCH_resilience.json")) as f:
+        return json.load(f)
+
+
+def test_bench_resilience_json_covers_all_fault_classes():
+    data = _load_resilience()
+    assert data["all_ok"] is True, "committed soak must be green"
+    missing = [s for s in RESILIENCE_SCENARIOS
+               if s not in data["scenarios"]]
+    assert not missing, f"BENCH_resilience.json lost scenarios: {missing}"
+    assert isinstance(data["baseline_top1"], (int, float))
+
+
+def test_bench_resilience_json_scenario_schema():
+    data = _load_resilience()
+    for name, rec in data["scenarios"].items():
+        for field in RESILIENCE_FIELDS:
+            assert field in rec, (name, field)
+        assert rec["completed"] is True and rec["ok"] is True, name
+        if name != "baseline":
+            assert rec["within_tolerance"] is True, name
+
+
+def test_bench_resilience_json_recovery_contracts():
+    """Each fault class must have driven its intended recovery path."""
+    sc = _load_resilience()["scenarios"]
+    assert sc["baseline"]["events"] == {}
+    assert sc["nan_bucket"]["skipped_steps"] >= 1
+    assert sc["nan_bucket"]["rollbacks"] == 0
+    assert sc["rollback"]["rollbacks"] >= 1
+    assert sc["rollback"]["wasted_steps"] >= 1
+    assert sc["ckpt_corrupt"]["events"].get(
+        "corrupt_checkpoint_skipped", 0) >= 1
+    assert sc["ckpt_corrupt"]["rollbacks"] >= 1
+    assert sc["data_crash"]["events"].get("data_restart", 0) >= 1
+    assert sc["straggler"]["events"].get("chaos_injected", 0) >= 1

@@ -135,16 +135,18 @@ def test_prefetcher_close_unblocks_pending_next():
 def test_no_duplicate_final_checkpoint_save(tmp_path, monkeypatch):
     """Regression: when total_steps %% checkpoint_every == 0 the final
     step was saved async then immediately re-saved blocking (rmtree-ing
-    the fresh directory). Each step must be serialized exactly once."""
+    the fresh directory). Each step must be serialized exactly once —
+    counted at _write_checkpoint, the choke point both the sync save()
+    and the AsyncCheckpointer worker funnel through."""
     import repro.checkpoint.checkpointer as cp
     saved = []
-    real_save = cp.save
+    real_write = cp._write_checkpoint
 
-    def counting_save(directory, step, state, metadata=None):
+    def counting_write(directory, step, arrays, metadata=None):
         saved.append(step)
-        return real_save(directory, step, state, metadata)
+        return real_write(directory, step, arrays, metadata)
 
-    monkeypatch.setattr(cp, "save", counting_save)
+    monkeypatch.setattr(cp, "_write_checkpoint", counting_write)
     model, state, step_fn, data, _, _ = _setup()
     run_training(step_fn, state, data,
                  LoopConfig(total_steps=10, checkpoint_every=5,
