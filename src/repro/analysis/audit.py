@@ -5,8 +5,11 @@ the per-(model, mode) contracts (DESIGN.md §12).
         --model resnet50 --modes all            # reduced config, ~2 min
 
 For each cell of {gspmd, perleaf, bucketed, overlap, zero,
-zero_overlap} x {sgd, lars} the driver AOT-lowers the real
+zero_overlap, hier, hier_overlap, hier_zero, hier_zero_overlap} x
+{sgd, lars} the driver AOT-lowers the real
 ``training/step.py`` train step on the local 8-virtual-device mesh
+(flat cells on (8,1); hierarchical cells on the 2-axis DP mesh (2,4)
+with hier_split=1, DESIGN.md §14)
 (ShapeDtypeStructs only — nothing is allocated, no data pipeline),
 runs every audit pass on the compiled HLO, and evaluates the mode's
 contract (``analysis/contracts.py``). Facts the HLO cannot know —
@@ -74,7 +77,24 @@ MODES: Dict[str, Dict[str, Any]] = {
                  overlap=False, zero=True),
     "zero_overlap": dict(dp_mode="shardmap", compression="f16+bucketed",
                          overlap=True, zero=True),
+    # hierarchical schedules (DESIGN.md §14) lower on a 2-axis DP mesh
+    # (2, 4) with hier_split=1: outer=("data",) size 2, inner=("model",)
+    # size 4 — inner > outer so the shard-level inter-axis all-reduce is
+    # strictly smaller than a flat full-bucket all-reduce would be,
+    # which lets the byte ceilings prove the flat sync is gone
+    "hier": dict(dp_mode="shardmap", compression="f16+bucketed",
+                 overlap=False, zero=False, hier=1),
+    "hier_overlap": dict(dp_mode="shardmap", compression="f16+bucketed",
+                         overlap=True, zero=False, hier=1),
+    "hier_zero": dict(dp_mode="shardmap", compression="f16+bucketed",
+                      overlap=False, zero=True, hier=1),
+    "hier_zero_overlap": dict(dp_mode="shardmap",
+                              compression="f16+bucketed",
+                              overlap=True, zero=True, hier=1),
 }
+
+#: mesh shape for the hierarchical cells; flat cells use (8, 1)
+HIER_MESH_SHAPE = (2, 4)
 
 OPTIMIZERS = {"sgd": "momentum_sgd", "lars": "lars"}
 
@@ -92,11 +112,17 @@ def _lower_cell(cfg, mode: str, opt_kind: str, mesh: Mesh, *,
     launch/dryrun.py:lower_cell, minus the data pipeline and with f32
     compute."""
     spec = MODES[mode]
+    hier = spec.get("hier")
+    # hierarchical cells run pure DP over both mesh axes (the paper's
+    # ResNet regime); flat cells keep the single "data" DP axis
+    dp_axes = ("data", "model") if hier is not None else ("data",)
     shp = ShapeConfig("audit", cfg.image_size, global_batch, "train")
     parallel = ParallelConfig(
-        dp_axes=("data",), tp_axis="model", zero_1=False,
+        dp_axes=dp_axes,
+        tp_axis=None if hier is not None else "model", zero_1=False,
         compression=spec["compression"], bucket_bytes=bucket_bytes,
-        overlap_comm=spec["overlap"], zero_dp=spec["zero"])
+        overlap_comm=spec["overlap"], zero_dp=spec["zero"],
+        hier_split=hier)
     opt_cfg = OptimizerConfig(kind=OPTIMIZERS[opt_kind])
     train_cfg = TrainConfig(optimizer=opt_cfg, parallel=parallel)
     compute_dtype = jnp.float32
@@ -106,7 +132,9 @@ def _lower_cell(cfg, mode: str, opt_kind: str, mesh: Mesh, *,
     leaves = jax.tree.leaves(p_shapes)
     total_elems = sum(math.prod(l.shape) for l in leaves)
     repl = NamedSharding(mesh, P())
-    n_workers = mesh.shape["data"]
+    n_workers = 1
+    for a in dp_axes:
+        n_workers *= mesh.shape[a]
     batch = input_specs(cfg, shp, compute_dtype)
 
     info: Dict[str, Any] = {
@@ -114,6 +142,11 @@ def _lower_cell(cfg, mode: str, opt_kind: str, mesh: Mesh, *,
         "n_param_leaves": len(leaves),
         "n_workers": n_workers,
     }
+    if hier is not None:
+        from repro.distributed.bucketing import make_hierarchy
+        h = make_hierarchy(dp_axes, mesh.shape, hier)
+        info["hier_outer"] = h.outer_size
+        info["hier_inner"] = h.inner_size
 
     if spec["dp_mode"] == "gspmd":
         from repro.training.step import make_train_step
@@ -144,7 +177,7 @@ def _lower_cell(cfg, mode: str, opt_kind: str, mesh: Mesh, *,
             make_dp_shardmap_train_step,
             replicate_model_state,
         )
-        dp_shard = NamedSharding(mesh, P(("data",)))
+        dp_shard = NamedSharding(mesh, P(dp_axes))
         # stream layout: always under zero; also LARS on the bucketed
         # explicit-DP paths (stream-LARS, DESIGN.md §11) — same rule as
         # launch/train.py:build_train_setup
@@ -195,7 +228,7 @@ def _lower_cell(cfg, mode: str, opt_kind: str, mesh: Mesh, *,
             lambda v: dp_shard if v.ndim else repl, batch)
         step_builder = (make_dp_overlap_train_step if spec["overlap"]
                         else make_dp_shardmap_train_step)
-        step = step_builder(model, optimizer, train_cfg, mesh, ("data",))
+        step = step_builder(model, optimizer, train_cfg, mesh, dp_axes)
 
     jitted = jax.jit(step, in_shardings=(state_shard, b_shard),
                      out_shardings=(state_shard, None),
@@ -212,14 +245,17 @@ def _cell_expectations(info: Dict[str, Any], mode: str, opt_kind: str,
     """The ``$``-facts the contracts resolve against, computed from the
     same bucket arithmetic the training step uses."""
     spec = MODES[mode]
+    hier = spec.get("hier")
     wire_itemsize = 2  # f16 wire in every audit cell
     n = info["n_workers"]
     # align mirrors training/step.py: shard-aligned under zero; the
     # stream-LARS non-zero paths align too (identical layout to zero,
-    # DESIGN.md §11); plain bucketed/overlap sgd uses the tree update
-    # with align=1
-    if spec["zero"] or (opt_kind == "lars" and
-                        "bucketed" in (spec["compression"] or "")):
+    # DESIGN.md §11); hierarchical schedules always align to the full
+    # DP size (the double scatter needs n_workers-divisible buckets);
+    # plain bucketed/overlap sgd uses the tree update with align=1
+    if hier is not None or spec["zero"] or (
+            opt_kind == "lars" and
+            "bucketed" in (spec["compression"] or "")):
         align = n
     else:
         align = 1
@@ -253,6 +289,40 @@ def _cell_expectations(info: Dict[str, Any], mode: str, opt_kind: str,
             2 * (info["total_param_elems"] * wire_itemsize) *
             (n - 1) / n * 0.9,
     }
+    if hier is not None:
+        # per-op qualifying counts + byte ceilings for the hierarchical
+        # pipeline (DESIGN.md §14). Buckets travel as f32 between the
+        # inner reduce-scatter and the final cast (round-once
+        # semantics), so intermediates are 4 B/elem; only the non-zero
+        # modes' final all-gather is wire-dtype (2 B/elem). Sized like
+        # the collectives pass: max(input, output) bytes per execution.
+        inner = info["hier_inner"]
+        sizes = [bucket_elems] * (n_buckets - 1) + [tail_elems]
+        fl = schedule_min_bytes
+        if spec["zero"]:
+            # inner RS (4E) + outer RS (4E/inner) in; outer AG
+            # (4E/inner) + inner AG (4E, f32 param stream) out
+            rs_b = [b for e in sizes for b in (4 * e, 4 * e // inner)]
+            ag_b = [b for e in sizes for b in (4 * e // inner, 4 * e)]
+            n_rs = sum(b >= fl for b in rs_b)
+            n_ar = 0
+            n_ag = sum(b >= fl for b in ag_b)
+            rs_ceil, ag_ceil = max(rs_b), max(ag_b)
+            ar_ceil = exp["metric_bytes_floor"]
+        else:
+            n_rs = sum(4 * e >= fl for e in sizes)
+            n_ar = sum(4 * e // inner >= fl for e in sizes)
+            n_ag = sum(2 * e >= fl for e in sizes)
+            rs_ceil = 4 * max(sizes)
+            ar_ceil = 4 * max(sizes) // inner
+            ag_ceil = 2 * max(sizes)
+        exp.update({
+            "n_rs": n_rs, "n_ar": n_ar, "n_ag": n_ag,
+            "rs_bytes_ceiling": rs_ceil,
+            "ar_bytes_ceiling": ar_ceil,
+            "ag_bytes_ceiling": ag_ceil,
+            "collective_budget": n_rs + n_ar + n_ag + 2,
+        })
     return exp
 
 
@@ -335,15 +405,19 @@ def run_audit(model: str = "resnet50", modes: Optional[List[str]] = None,
         # small enough that even the reduced param stream cuts >1 bucket
         bucket_bytes = 4 * 2 ** 20 if full else 8 * 2 ** 10
     mesh = jax.make_mesh((8, 1), ("data", "model"))
+    # hierarchical cells need a genuinely 2-axis DP mesh (outer x inner)
+    hier_mesh = jax.make_mesh(HIER_MESH_SHAPE, ("data", "model"))
 
     cells = []
     for mode in modes:
         for opt in optimizers:
+            cell_mesh = (hier_mesh if MODES[mode].get("hier") is not None
+                         else mesh)
             if verbose:
                 print(f"[audit] {model}/{mode}/{opt} ...",
                       flush=True)
             try:
-                cell = audit_cell(cfg, model, mode, opt, mesh,
+                cell = audit_cell(cfg, model, mode, opt, cell_mesh,
                                   global_batch=global_batch,
                                   bucket_bytes=bucket_bytes)
             except Exception as e:  # lowering itself failed the cell
@@ -365,6 +439,7 @@ def run_audit(model: str = "resnet50", modes: Optional[List[str]] = None,
         "model": model,
         "config": "full" if full else "reduced",
         "mesh": list(mesh.devices.shape),
+        "hier_mesh": list(HIER_MESH_SHAPE),
         "global_batch": global_batch,
         "bucket_bytes": bucket_bytes,
         "modes": modes,

@@ -24,11 +24,21 @@ gspmd      gradient sync is all-reduce; ≥1 qualifying all-reduce
 perleaf    all-reduce per big leaf (≥ the big-leaf count unless XLA's
            combiner merged them — gated by total wire bytes instead)
 bucketed   exactly ``n_buckets`` qualifying all-reduces; total
-           qualifying collectives ≤ the mode's launch budget
+           qualifying collectives ≤ the mode's launch budget; no
+           reduce-scatter/all-gather above metric size (flat schedule)
 overlap    bucketed + collectives interleaved with backward compute
 zero       reduce-scatter+all-gather carry the gradient;
            ``n_buckets`` of each; NO all-reduce above metric size
 zero_ovl   zero + interleaved
+hier       every bucket lowers to intra-axis reduce-scatter +
+           inter-axis all-reduce + intra-axis all-gather: exact
+           per-op execution counts, per-op byte ceilings, and NO
+           all-reduce above the shard size (the flat full-bucket
+           all-reduce is gone, DESIGN.md §14)
+hier_ovl   hier + interleaved
+hier_zero  double reduce-scatter in, double all-gather out per
+           bucket; NO all-reduce above metric size; byte ceilings
+hier_z_ovl hier_zero + interleaved
 all        no precision / donation / determinism errors
 ========== ==========================================================
 """
@@ -169,6 +179,10 @@ def contract_for(model: str, mode: str, optimizer: str) -> Contract:
         )
     elif mode in ("bucketed", "overlap"):
         exp["max_collectives_per_step"] = "$collective_budget"
+        # flat schedule: a reduce-scatter or all-gather above metric
+        # size would mean a hierarchical stage leaked in (DESIGN.md §14)
+        exp["forbid_reduce_scatter_above_bytes"] = "$metric_bytes_floor"
+        exp["forbid_allgather_above_bytes"] = "$metric_bytes_floor"
         checks += (
             Check("collectives.gradient_sync", "==", "all_reduce"),
             Check("collectives.per_op.all-reduce.execs", "==",
@@ -176,6 +190,54 @@ def contract_for(model: str, mode: str, optimizer: str) -> Contract:
                   label="exactly one all-reduce per gradient bucket"),
         )
         if mode == "overlap":
+            exp["require_interleaved"] = True
+            checks += (Check("interleave.interleaved", "is_true"),)
+    elif mode in ("hier", "hier_overlap"):
+        exp["max_collectives_per_step"] = "$collective_budget"
+        # the inter-axis all-reduce runs on the 1/inner shard: any
+        # all-reduce above that ceiling is a surviving flat big sync
+        exp["forbid_allreduce_above_bytes"] = "$ar_bytes_ceiling"
+        checks += (
+            Check("collectives.gradient_sync", "==", "hierarchical"),
+            Check("collectives.per_op.reduce-scatter.execs", "==",
+                  "$n_rs",
+                  label="one intra-axis reduce-scatter per bucket"),
+            Check("collectives.per_op.all-reduce.execs", "==", "$n_ar",
+                  label="one inter-axis all-reduce per bucket shard"),
+            Check("collectives.per_op.all-gather.execs", "==", "$n_ag",
+                  label="one intra-axis all-gather per bucket"),
+            Check("collectives.per_op.reduce-scatter.max_bytes", "<=",
+                  "$rs_bytes_ceiling",
+                  label="reduce-scatter stays bucket-sized (f32)"),
+            Check("collectives.per_op.all-reduce.max_bytes", "<=",
+                  "$ar_bytes_ceiling",
+                  label="all-reduce stays 1/inner shard-sized"),
+            Check("collectives.per_op.all-gather.max_bytes", "<=",
+                  "$ag_bytes_ceiling",
+                  label="all-gather stays bucket-sized (wire dtype)"),
+        )
+        if mode == "hier_overlap":
+            exp["require_interleaved"] = True
+            checks += (Check("interleave.interleaved", "is_true"),)
+    elif mode in ("hier_zero", "hier_zero_overlap"):
+        exp["max_collectives_per_step"] = "$collective_budget"
+        exp["forbid_allreduce_above_bytes"] = "$metric_bytes_floor"
+        checks += (
+            Check("collectives.gradient_sync", "==",
+                  "reduce_scatter+all_gather"),
+            Check("collectives.per_op.reduce-scatter.execs", "==",
+                  "$n_rs",
+                  label="inner + outer reduce-scatter per bucket"),
+            Check("collectives.per_op.all-gather.execs", "==", "$n_ag",
+                  label="outer + inner all-gather per param bucket"),
+            Check("collectives.per_op.reduce-scatter.max_bytes", "<=",
+                  "$rs_bytes_ceiling",
+                  label="reduce-scatter stays bucket-sized (f32)"),
+            Check("collectives.per_op.all-gather.max_bytes", "<=",
+                  "$ag_bytes_ceiling",
+                  label="all-gather stays bucket-sized (f32 stream)"),
+        )
+        if mode == "hier_zero_overlap":
             exp["require_interleaved"] = True
             checks += (Check("interleave.interleaved", "is_true"),)
     elif mode in ("zero", "zero_overlap"):

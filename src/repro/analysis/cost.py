@@ -388,14 +388,20 @@ def gradient_sync_mode(a: Analysis,
     by: ``"reduce_scatter+all_gather"`` means scatter+gather carry the
     gradient volume AND every all-reduce is metric-sized (below
     ``metric_bytes_floor`` per execution) — i.e. the full-gradient
-    all-reduce is gone; ``"all_reduce"`` means all-reduces carry it;
-    ``"none"`` means no substantial collectives at all."""
+    all-reduce is gone; ``"hierarchical"`` means scatter+gather carry it
+    AND a substantial (but shard-sized, not full-gradient) all-reduce
+    runs between them — the intra-axis RS -> inter-axis AR ->
+    intra-axis AG pipeline (DESIGN.md §14); ``"all_reduce"`` means
+    all-reduces carry it; ``"none"`` means no substantial collectives
+    at all."""
     rs = a.collective_bytes.get("reduce-scatter", 0.0)
     ag = a.collective_bytes.get("all-gather", 0.0)
     ar = a.collective_bytes.get("all-reduce", 0.0)
     ar_max = a.collective_max_exec_bytes.get("all-reduce", 0.0)
     if rs > 0 and ag > 0 and ar_max < metric_bytes_floor:
         return "reduce_scatter+all_gather"
+    if rs > 0 and ag > 0 and ar_max >= metric_bytes_floor:
+        return "hierarchical"
     if ar >= max(rs, ag) and ar_max >= metric_bytes_floor:
         return "all_reduce"
     if max(rs, ag, ar) == 0.0:

@@ -11,7 +11,12 @@ the step's collective schedule:
   above metric size" pins down);
 - optional expectation-driven gates: ``max_collectives_per_step``
   (bucketed modes: the whole point of bucketing is a *bounded* number
-  of launches) and ``forbid_allreduce_above_bytes`` (ZeRO modes).
+  of launches) and per-opcode byte caps —
+  ``forbid_allreduce_above_bytes`` (ZeRO: the full-gradient all-reduce
+  is gone; hierarchical: only the shard-sized inter-axis all-reduce
+  survives), ``forbid_reduce_scatter_above_bytes`` /
+  ``forbid_allgather_above_bytes`` (flat modes: no stray hierarchical
+  stages, DESIGN.md §14).
 """
 from __future__ import annotations
 
@@ -75,6 +80,8 @@ def schedule_pass(ctx: AuditContext) -> PassResult:
             metric_bytes_floor=int(
                 ctx.expectations.get("metric_bytes_floor", 1024))),
         "allreduce_max_bytes": max_bytes.get("all-reduce", 0.0),
+        "reduce_scatter_max_bytes": max_bytes.get("reduce-scatter", 0.0),
+        "allgather_max_bytes": max_bytes.get("all-gather", 0.0),
     })
 
     cap = ctx.expectations.get("max_collectives_per_step")
@@ -84,13 +91,17 @@ def schedule_pass(ctx: AuditContext) -> PassResult:
                 f"contract cap of {float(cap):.0f} (bucketing is "
                 f"supposed to bound launches)",
                 qualifying_execs_total=total, cap=float(cap))
-    ar_cap = ctx.expectations.get("forbid_allreduce_above_bytes")
-    if ar_cap is not None and \
-            max_bytes.get("all-reduce", 0.0) > float(ar_cap):
-        res.add("error",
-                f"all-reduce moving {max_bytes['all-reduce']:.0f} B "
-                f"survives; this mode promises none above "
-                f"{float(ar_cap):.0f} B (metric size)",
-                allreduce_max_bytes=max_bytes["all-reduce"],
-                cap=float(ar_cap))
+    for opname, key in (
+            ("all-reduce", "forbid_allreduce_above_bytes"),
+            ("reduce-scatter", "forbid_reduce_scatter_above_bytes"),
+            ("all-gather", "forbid_allgather_above_bytes")):
+        op_cap = ctx.expectations.get(key)
+        if op_cap is not None and \
+                max_bytes.get(opname, 0.0) > float(op_cap):
+            res.add("error",
+                    f"{opname} moving {max_bytes[opname]:.0f} B "
+                    f"survives; this mode promises none above "
+                    f"{float(op_cap):.0f} B",
+                    **{f"{opname.replace('-', '_')}_max_bytes":
+                       max_bytes[opname], "cap": float(op_cap)})
     return res

@@ -316,6 +316,13 @@ class ParallelConfig:
     # only; composes with overlap_comm. Distinct from zero_1, which is
     # the GSPMD-mode sharding-constraint flavor of the same idea.
     zero_dp: bool = False
+    # hierarchical collective schedule (DESIGN.md §14): split dp_axes at
+    # this index into outer (inter-node) / inner (intra-node) stages and
+    # run each bucket as intra reduce-scatter -> inter all-reduce ->
+    # intra all-gather instead of one flat psum. None = flat. Needs a
+    # multi-axis DP mesh with both factors >= 2 and bucketed compression;
+    # usually set via launch/train.py --comm-plan (distributed/comm_plan).
+    hier_split: Optional[int] = None
     remat: str = "block"  # none | block  (activation checkpoint per layer)
     sequence_sharding: bool = False  # shard seq dim of activations (SP)
     kv_seq_sharding: bool = False  # serve: shard KV cache seq on model

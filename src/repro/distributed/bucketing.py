@@ -257,7 +257,8 @@ def bucketed_psum(grads: PyTree, axis_names: Sequence[str],
                   mean: bool = True,
                   plan: Optional[BucketPlan] = None,
                   use_kernel: Optional[bool] = None,
-                  with_sq_norm: bool = False):
+                  with_sq_norm: bool = False,
+                  hierarchy: Optional["Hierarchy"] = None):
     """Drop-in for ``compressed_psum`` issuing one psum per bucket.
 
     Same contract: cast each gradient element to the wire dtype, sum over
@@ -266,13 +267,23 @@ def bucketed_psum(grads: PyTree, axis_names: Sequence[str],
     instead of one per leaf. ``with_sq_norm=True`` returns
     ``(grads, sq_norm)`` with the synced gradients' squared L2 norm from
     one pass over the stream (see ``unpack``).
+
+    ``hierarchy`` replaces each bucket's flat psum with the two-level
+    reduce-scatter → all-reduce → all-gather schedule of DESIGN.md §14
+    (``hierarchical_psum``); the plan is then laid out shard-aligned
+    (``align = hierarchy.n_workers``) so every bucket splits evenly
+    across the inner axis.
     """
     if plan is None:
-        plan = plan_buckets(grads, bucket_bytes, wire)
+        align = hierarchy.n_workers if hierarchy is not None else 1
+        plan = plan_buckets(grads, bucket_bytes, wire, align=align)
     # psum of a python constant folds to the static axis-size product
     n = jax.lax.psum(1, tuple(axis_names))
     buckets = pack(grads, plan, use_kernel=use_kernel)
-    synced = [jax.lax.psum(b, tuple(axis_names)) for b in buckets]
+    if hierarchy is not None:
+        synced = [hierarchical_psum(b, hierarchy) for b in buckets]
+    else:
+        synced = [jax.lax.psum(b, tuple(axis_names)) for b in buckets]
     return unpack(synced, plan, use_kernel=use_kernel,
                   denom=n if mean else None, with_sq_norm=with_sq_norm)
 
@@ -284,7 +295,8 @@ def bucketed_psum_ef(grads: PyTree, residual: PyTree,
                      mean: bool = True,
                      plan: Optional[BucketPlan] = None,
                      use_kernel: Optional[bool] = None,
-                     with_sq_norm: bool = False):
+                     with_sq_norm: bool = False,
+                     hierarchy: Optional["Hierarchy"] = None):
     """Bucketed psum with error feedback (core/compression.py) threaded
     through: q = Q(g + r) is what gets packed and reduced; r' stays
     worker-local. The residual update is identical to the per-leaf
@@ -295,7 +307,7 @@ def bucketed_psum_ef(grads: PyTree, residual: PyTree,
     out = bucketed_psum(quant, axis_names, wire=wire,
                         bucket_bytes=bucket_bytes, mean=mean,
                         plan=plan, use_kernel=use_kernel,
-                        with_sq_norm=with_sq_norm)
+                        with_sq_norm=with_sq_norm, hierarchy=hierarchy)
     if with_sq_norm:
         synced, sq_norm = out
         return synced, new_residual, sq_norm
@@ -516,6 +528,162 @@ def shard_layout_to_stream(arr, plan: BucketPlan, n_shards: int):
     import numpy as np
 
     return arr[np.argsort(shard_perm(plan, n_shards), kind="stable")]
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical collective schedules (topology-aware sync, DESIGN.md §14)
+# ---------------------------------------------------------------------------
+#
+# Over a multi-axis DP mesh (e.g. ("node", "device")) a flat psum makes
+# every transfer cross the slowest link. The 2D-torus schedule of
+# Yamazaki et al. (arXiv:1903.12650) — and the host-level reduction of
+# Goyal et al. (arXiv:1706.02677) — instead runs, per bucket:
+#
+#   intra-axis reduce-scatter  (cheap links, full bucket)
+#   inter-axis all-reduce      (expensive links, 1/inner_size shard)
+#   intra-axis all-gather      (cheap links, full bucket)
+#
+# so the expensive inter-node link carries ``1/inner_size`` of the bucket
+# instead of all of it. Ranks are linearized row-major over the DP axis
+# tuple — ``w = outer_lin * inner_size + inner_lin`` — exactly the
+# ``_dp_linear_index`` order (training/step.py), which is what lets the
+# ZeRO double-scatter below hand every worker the *same* chunk the flat
+# ``psum_scatter`` would (after the ``inner_major_perm`` pre-permutation)
+# and keeps param slicing, optimizer-state layout and checkpoint
+# resharding untouched.
+#
+# Numerics: the bucket is accumulated in f32 throughout both stages and
+# rounded to the wire dtype exactly once ("round-once"), so the result is
+# association-stable at wire precision — equal to the flat collective
+# bitwise whenever the additions are order-exact (the property tests and
+# the slow collective battery pin this with exponent-bounded data), to
+# last-ulp otherwise. A reassociated reduction can never be
+# *unconditionally* bitwise-identical to the flat fold (DESIGN.md §14);
+# the f32 accumulator is what pins the difference to rounding-boundary
+# ulps instead of wire-precision drift.
+
+
+@dataclasses.dataclass(frozen=True)
+class Hierarchy:
+    """Static spec of a two-level collective schedule over the DP axes.
+
+    ``outer`` are the inter-node (expensive) mesh axes, ``inner`` the
+    intra-node (cheap) ones; the flat DP rank is the row-major
+    linearization ``w = outer_lin * inner_size + inner_lin`` — the same
+    order ``_dp_linear_index`` and a flat ``psum_scatter`` over the full
+    axis tuple use.
+    """
+
+    outer: Tuple[str, ...]
+    inner: Tuple[str, ...]
+    outer_size: int
+    inner_size: int
+
+    @property
+    def n_workers(self) -> int:
+        return self.outer_size * self.inner_size
+
+    def describe(self) -> str:
+        return (f"hier[{'x'.join(self.outer)}({self.outer_size}) | "
+                f"{'x'.join(self.inner)}({self.inner_size})]")
+
+
+def make_hierarchy(dp_axes: Sequence[str], mesh_shape,
+                   split: int) -> Hierarchy:
+    """Split ``dp_axes`` into outer ``dp_axes[:split]`` / inner
+    ``dp_axes[split:]``. ``mesh_shape`` maps axis name -> size (a
+    ``Mesh.shape`` mapping works as-is). Both factors must be real
+    (size >= 2): a size-1 stage is a flat collective wearing a costume —
+    callers should fall back to flat instead (comm_plan.py does)."""
+    dp_axes = tuple(dp_axes)
+    if not 1 <= split < len(dp_axes):
+        raise ValueError(
+            f"hier_split must be in [1, {len(dp_axes) - 1}] for dp_axes "
+            f"{dp_axes}, got {split}")
+    outer, inner = dp_axes[:split], dp_axes[split:]
+    outer_size = math.prod(int(mesh_shape[a]) for a in outer)
+    inner_size = math.prod(int(mesh_shape[a]) for a in inner)
+    if outer_size < 2 or inner_size < 2:
+        raise ValueError(
+            f"hierarchical schedule needs both stages >= 2 ranks, got "
+            f"outer={outer}:{outer_size} inner={inner}:{inner_size}; "
+            "use the flat schedule on this mesh")
+    return Hierarchy(outer=outer, inner=inner,
+                     outer_size=outer_size, inner_size=inner_size)
+
+
+def inner_major_perm(x, outer_size: int, inner_size: int):
+    """Reorder a flat stream so the hierarchical double reduce-scatter
+    (inner stage first) hands rank ``w = n*inner_size + d`` exactly the
+    chunk the flat ``psum_scatter`` would: viewing the stream as
+    ``n_workers`` chunks, chunk ``w = n*b + d`` must land in inner
+    position ``d``, outer position ``n`` — i.e. the stream is re-laid
+    inner-major. Works on numpy and jax arrays (pure reshape/transpose),
+    so the Hypothesis property tests reuse it verbatim."""
+    a, b = outer_size, inner_size
+    c = x.shape[0] // (a * b)
+    return x.reshape(a, b, c).transpose(1, 0, 2).reshape(-1)
+
+
+def inner_major_unperm(x, outer_size: int, inner_size: int):
+    """Inverse of ``inner_major_perm`` (used after the two-level
+    all-gather to restore stream order)."""
+    a, b = outer_size, inner_size
+    c = x.shape[0] // (a * b)
+    return x.reshape(b, a, c).transpose(1, 0, 2).reshape(-1)
+
+
+def hierarchical_psum(bucket: jax.Array, hier: Hierarchy) -> jax.Array:
+    """Two-level all-reduce of one packed bucket: f32 reduce-scatter over
+    the inner axes, f32 all-reduce over the outer axes on the
+    ``1/inner_size`` shard, one rounding to the bucket dtype, all-gather
+    back over the inner axes. The bucket length must be a multiple of
+    ``inner_size`` (a plan with ``align = hier.n_workers`` guarantees
+    it)."""
+    if bucket.shape[0] % hier.inner_size:
+        raise ValueError(
+            f"bucket of {bucket.shape[0]} elements does not split over "
+            f"{hier.inner_size} inner ranks; plan with "
+            f"align={hier.n_workers}")
+    wire_dt = bucket.dtype
+    shard = jax.lax.psum_scatter(bucket.astype(jnp.float32), hier.inner,
+                                 scatter_dimension=0, tiled=True)
+    shard = jax.lax.psum(shard, hier.outer)
+    return jax.lax.all_gather(shard.astype(wire_dt), hier.inner,
+                              axis=0, tiled=True)
+
+
+def hierarchical_psum_scatter(bucket: jax.Array,
+                              hier: Hierarchy) -> jax.Array:
+    """Two-level reduce-scatter of one packed bucket (ZeRO sync): after
+    the ``inner_major_perm`` pre-permutation, the inner then outer f32
+    reduce-scatters leave rank ``w = n*inner_size + d`` holding exactly
+    the flat ``psum_scatter`` chunk ``w`` — shard ownership, and with it
+    ``_dp_linear_index`` param slicing and the sharded optimizer-state
+    layout, are unchanged by the hierarchy. Rounds to the bucket dtype
+    once, after both reduction stages."""
+    if bucket.shape[0] % hier.n_workers:
+        raise ValueError(
+            f"bucket of {bucket.shape[0]} elements does not split over "
+            f"{hier.n_workers} ranks; plan with align={hier.n_workers}")
+    f = inner_major_perm(bucket.astype(jnp.float32),
+                         hier.outer_size, hier.inner_size)
+    s = jax.lax.psum_scatter(f, hier.inner, scatter_dimension=0,
+                             tiled=True)
+    s = jax.lax.psum_scatter(s, hier.outer, scatter_dimension=0,
+                             tiled=True)
+    return s.astype(bucket.dtype)
+
+
+def hierarchical_all_gather(shard: jax.Array,
+                            hier: Hierarchy) -> jax.Array:
+    """Two-level inverse of the flat ``all_gather`` over all DP axes:
+    gather over the outer axes, then the inner axes, then undo the
+    inner-major layout. Pure data movement (dtype-preserving), so it is
+    bitwise-identical to the flat gather for any input."""
+    g = jax.lax.all_gather(shard, hier.outer, axis=0, tiled=True)
+    g = jax.lax.all_gather(g, hier.inner, axis=0, tiled=True)
+    return inner_major_unperm(g, hier.outer_size, hier.inner_size)
 
 
 # ---------------------------------------------------------------------------

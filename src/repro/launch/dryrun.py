@@ -106,7 +106,8 @@ def lower_cell(arch: str, shape_name: str, mesh: Mesh, *,
                overlap_comm: bool = False,
                zero_dp: bool = False,
                fused_bn: bool = False,
-               optimizer_kind: str = "rmsprop_warmup"):
+               optimizer_kind: str = "rmsprop_warmup",
+               hier_split: Optional[int] = None):
     """Build + lower + compile one cell. Returns (record, compiled)."""
     cfg = get_config(arch)
     if fused_bn:
@@ -144,6 +145,16 @@ def lower_cell(arch: str, shape_name: str, mesh: Mesh, *,
                 "--zero reduce-scatters packed buckets: pass a bucketed "
                 f"--compression (got {parallel.compression!r})")
         parallel = dataclasses.replace(parallel, zero_dp=True)
+    if hier_split is not None:
+        from repro.core.compression import parse_compression
+        if dp_mode != "shardmap":
+            raise ValueError("--hier-split requires --dp-mode shardmap "
+                             "(DESIGN.md §14)")
+        if not parse_compression(parallel.compression)[1]:
+            raise ValueError(
+                "--hier-split reschedules packed buckets: pass a "
+                f"bucketed --compression (got {parallel.compression!r})")
+        parallel = dataclasses.replace(parallel, hier_split=hier_split)
     rules = make_rules(cfg, mesh, parallel)
     compute_dtype = jnp.bfloat16
 
@@ -449,7 +460,7 @@ def run_cells(archs, shapes, *, multi_pod=False, out_dir="results/dryrun",
               force=False, attention_impl="chunked", dp_mode="gspmd",
               compression="__default__", overlap_comm=False,
               zero_dp=False, fused_bn=False,
-              optimizer_kind="rmsprop_warmup"):
+              optimizer_kind="rmsprop_warmup", hier_split=None):
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
     if dp_mode != "gspmd":
@@ -460,6 +471,8 @@ def run_cells(archs, shapes, *, multi_pod=False, out_dir="results/dryrun",
         mesh_tag += "__overlap"
     if zero_dp:
         mesh_tag += "__zero"
+    if hier_split is not None:
+        mesh_tag += f"__hier{hier_split}"
     if fused_bn:
         mesh_tag += "__fusedbn"
     if optimizer_kind != "rmsprop_warmup":
@@ -488,7 +501,8 @@ def run_cells(archs, shapes, *, multi_pod=False, out_dir="results/dryrun",
                                            overlap_comm=overlap_comm,
                                            zero_dp=zero_dp,
                                            fused_bn=fused_bn,
-                                           optimizer_kind=optimizer_kind)
+                                           optimizer_kind=optimizer_kind,
+                                           hier_split=hier_split)
                 del compiled
             except Exception as e:
                 rec = {"arch": arch, "shape": shape_name, "status": "error",
@@ -555,6 +569,13 @@ def main():
                     help="optimizer kind for the shardmap train cells "
                          "(lars + bucketed compression lowers the "
                          "packed-stream LARS path, DESIGN.md §11)")
+    ap.add_argument("--hier-split", type=int, default=None,
+                    help="hierarchical collective schedule: split "
+                         "dp_axes at this index into intra-axis "
+                         "reduce-scatter -> inter-axis all-reduce -> "
+                         "intra-axis all-gather (needs --dp-mode "
+                         "shardmap + bucketed --compression, "
+                         "DESIGN.md §14)")
     args = ap.parse_args()
 
     if args.arch == "all":
@@ -569,7 +590,8 @@ def main():
                   dp_mode=args.dp_mode, compression=args.compression,
                   overlap_comm=args.overlap_comm, zero_dp=args.zero,
                   fused_bn=args.fused_bn,
-                  optimizer_kind=args.optimizer)
+                  optimizer_kind=args.optimizer,
+                  hier_split=args.hier_split)
 
 
 if __name__ == "__main__":

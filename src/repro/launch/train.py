@@ -63,7 +63,9 @@ def build_train_setup(cfg, *, global_batch: int, seq_len: int,
                       fused_bn: bool = False,
                       label_smoothing: float = 0.0,
                       data_noise: Optional[float] = None,
-                      sentinel: bool = False):
+                      sentinel: bool = False,
+                      dp_axes=("data",),
+                      hier_split: Optional[int] = None):
     """Returns (model, state, train_step, data, put_batch,
     state_shardings).
 
@@ -86,11 +88,21 @@ def build_train_setup(cfg, *, global_batch: int, seq_len: int,
                 f"DESIGN.md §10); arch family {cfg.family!r} has no BN")
         cfg = dataclasses.replace(cfg, fused_bn=True)
     shape = ShapeConfig("train", seq_len, global_batch, "train")
+    dp_axes = tuple(dp_axes)
+    if hier_split is not None and dp_mode != "shardmap":
+        raise ValueError(
+            "hier_split reschedules explicit per-bucket collectives, "
+            "which only exist in the shard_map DP mode "
+            "(dp_mode='shardmap', DESIGN.md §14)")
+    # pure DP spans every mesh axis under a hierarchical schedule (the
+    # paper's ResNet regime); otherwise "model" stays the TP axis
+    tp_axis = ("model" if mesh is not None and "model" not in dp_axes
+               else None)
     parallel = ParallelConfig(
-        dp_axes=("data",), tp_axis="model" if mesh is not None else None,
+        dp_axes=dp_axes, tp_axis=tp_axis,
         compression=compression, bucket_bytes=bucket_bytes,
         error_feedback=error_feedback, overlap_comm=overlap_comm,
-        zero_dp=zero_dp, zero_1=False)
+        zero_dp=zero_dp, zero_1=False, hier_split=hier_split)
     if overlap_comm and dp_mode != "shardmap":
         raise ValueError(
             "overlap_comm launches explicit per-bucket collectives inside "
@@ -298,6 +310,15 @@ def main():
                          "all-gather the updated params (shard_map DP + "
                          "bucketed compression, DESIGN.md §9; composes "
                          "with --overlap-comm)")
+    ap.add_argument("--comm-plan", default="flat",
+                    help="collective schedule: flat | hier[:k] | auto | "
+                         "<path>. 'hier:k' splits dp_axes at k into an "
+                         "intra-axis reduce-scatter -> inter-axis "
+                         "all-reduce -> intra-axis all-gather pipeline; "
+                         "'auto' loads the autotuner's persisted plan "
+                         "for this mesh (results/comm_plan_*.json, "
+                         "benchmarks/comm_bench.py) and applies its "
+                         "full wire config (DESIGN.md §14)")
     ap.add_argument("--use-fused-kernel", action="store_true")
     ap.add_argument("--fused-bn", action="store_true",
                     help="fused Pallas BN at every ResNet BN site: "
@@ -338,22 +359,55 @@ def main():
         mesh = jax.make_mesh((jax.device_count(), 1), ("data", "model"))
 
     opt_cfg = OptimizerConfig(kind=args.optimizer, schedule=args.schedule)
+    # --comm-plan: resolve the collective schedule (DESIGN.md §14).
+    # Grammar forms (flat / hier[:k]) only reschedule; a plan loaded
+    # from disk (auto / path) carries the autotuner's full wire config.
+    dp_axes = ("data",)
+    hier_split = None
+    compression = args.compression
+    bucket_bytes = args.bucket_mib * 1024 * 1024
+    overlap_comm, zero_dp = args.overlap_comm, args.zero
+    if args.comm_plan != "flat":
+        if mesh is None:
+            ap.error("--comm-plan needs a mesh (--mesh DxM, or "
+                     "--dp-mode shardmap's default pure-DP mesh)")
+        if args.dp_mode != "shardmap":
+            ap.error("--comm-plan reschedules explicit per-bucket "
+                     "collectives: pass --dp-mode shardmap")
+        from repro.distributed.comm_plan import resolve_comm_plan
+        mesh_shape = tuple(mesh.shape[a] for a in mesh.axis_names)
+        plan = resolve_comm_plan(args.comm_plan, arch=args.arch,
+                                 mesh_shape=mesh_shape,
+                                 dp_axes=tuple(mesh.axis_names))
+        if plan is not None:
+            hier_split = plan.hier_split
+            if hier_split is not None:
+                dp_axes = plan.dp_axes  # pure DP over the whole mesh
+            if plan.bucket_bytes:  # loaded plan: apply its wire config
+                compression = plan.compression
+                bucket_bytes = plan.bucket_bytes
+                overlap_comm = plan.sync_mode in ("overlap",
+                                                  "zero_overlap")
+                zero_dp = plan.sync_mode in ("zero", "zero_overlap")
+            print(f"comm plan: {plan.describe()}")
+
     model, state, train_step, data, put_batch, shardings = \
         build_train_setup(
             cfg, global_batch=args.global_batch, seq_len=args.seq_len,
             opt_cfg=opt_cfg, steps_per_epoch=args.steps_per_epoch,
             mesh=mesh, dp_mode=args.dp_mode, seed=args.seed,
             use_fused_kernel=args.use_fused_kernel,
-            compression=args.compression,
-            bucket_bytes=args.bucket_mib * 1024 * 1024,
+            compression=compression,
+            bucket_bytes=bucket_bytes,
             error_feedback=args.error_feedback,
-            overlap_comm=args.overlap_comm, zero_dp=args.zero,
+            overlap_comm=overlap_comm, zero_dp=zero_dp,
             fused_bn=args.fused_bn,
             label_smoothing=args.label_smoothing,
-            sentinel=args.sentinel)
+            sentinel=args.sentinel,
+            dp_axes=dp_axes, hier_split=hier_split)
 
     metadata = {"arch": args.arch, "optimizer": args.optimizer,
-                "opt_layout": "zero_stream" if args.zero else "tree"}
+                "opt_layout": "zero_stream" if zero_dp else "tree"}
     t0 = time.time()
     if args.epochs is not None:
         # ---- epoch-driven train/eval (the paper's actual protocol) ----

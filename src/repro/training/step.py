@@ -354,6 +354,23 @@ def _zero_checks(parallel, dp_axes, optimizer, bucketed: bool,
     return n
 
 
+def _hier_or_none(parallel, dp_axes, mesh: Mesh, bucketed: bool):
+    """Build the ``Hierarchy`` for ``parallel.hier_split``, or None for
+    the flat schedule. Hierarchical schedules reschedule packed buckets
+    (DESIGN.md §14), so they require bucketed compression; the axis
+    split itself is validated by ``make_hierarchy`` (multi-axis DP mesh,
+    both stages >= 2 ranks)."""
+    if parallel.hier_split is None:
+        return None
+    if not bucketed:
+        raise ValueError(
+            "hier_split reschedules packed buckets, which requires "
+            "bucketed compression (e.g. compression='bf16+bucketed', "
+            f"got {parallel.compression!r}; DESIGN.md §14)")
+    from repro.distributed.bucketing import make_hierarchy
+    return make_hierarchy(dp_axes, mesh.shape, parallel.hier_split)
+
+
 def _stream_checks(parallel, optimizer, bucketed: bool) -> None:
     """Validate a non-zero packed-stream step request (stream-LARS)."""
     if not bucketed:
@@ -439,7 +456,7 @@ def _dp_linear_index(dp_axes: Sequence[str], mesh: Mesh):
 
 def _zero_sharded_update(optimizer, plan, param_tree, g_shard, opt,
                          n: int, dp_axes: Sequence[str], mesh: Mesh,
-                         aux):
+                         aux, hier=None):
     """The rank-local half of the ZeRO step: cast+divide the scattered
     gradient shard exactly as ``unpack`` would (bitwise-equal elements),
     update the worker-owned param shard against the dp-sharded stream
@@ -453,12 +470,22 @@ def _zero_sharded_update(optimizer, plan, param_tree, g_shard, opt,
     axes (a leaf may span shard boundaries, DESIGN.md §11); the update
     itself stays on the worker-owned shard.
 
+    ``hier`` swaps the per-bucket param all-gather for the two-level
+    ``hierarchical_all_gather`` (bitwise-identical data movement, the
+    expensive link carries 1/inner_size; DESIGN.md §14) — shard
+    ownership itself is hierarchy-invariant, so nothing else changes.
+
     Returns ``(new_param_tree, new_opt, opt_metrics, local_sq)`` where
     ``local_sq`` is this worker's partial squared grad norm (the caller
     folds it into the stacked metrics pmean, DESIGN.md §8)."""
     import dataclasses as _dc
 
-    from repro.distributed.bucketing import pack, shard_chunks, unpack
+    from repro.distributed.bucketing import (
+        hierarchical_all_gather,
+        pack,
+        shard_chunks,
+        unpack,
+    )
 
     g_shard = _cast_divide_stream(g_shard, plan, n)
     local_sq = jnp.sum(jnp.square(g_shard))
@@ -492,8 +519,11 @@ def _zero_sharded_update(optimizer, plan, param_tree, g_shard, opt,
     off, gathered = 0, []
     for c in chunks:
         piece = jax.lax.slice(p_new, (off,), (off + c,))
-        gathered.append(jax.lax.all_gather(piece, tuple(dp_axes),
-                                           tiled=True))
+        if hier is not None:
+            gathered.append(hierarchical_all_gather(piece, hier))
+        else:
+            gathered.append(jax.lax.all_gather(piece, tuple(dp_axes),
+                                               tiled=True))
         off += c
     new_param_tree = unpack(gathered, p_plan)
     return new_param_tree, new_opt, opt_metrics, local_sq
@@ -585,6 +615,7 @@ def make_dp_shardmap_train_step(model, optimizer: Optimizer,
         # norms (DESIGN.md §11)
         return _make_dp_stream_train_step(model, optimizer, train_cfg,
                                           mesh, dp_axes, wire, bucketed)
+    hier = _hier_or_none(parallel, dp_axes, mesh, bucketed)
 
     def sync_grads(grads, residual):
         """One of the four (per-leaf|bucketed) x (plain|EF) sync paths.
@@ -596,14 +627,16 @@ def make_dp_shardmap_train_step(model, optimizer: Optimizer,
             if bucketed:
                 return bucketed_psum_ef(
                     grads, residual, dp_axes, wire=wire,
-                    bucket_bytes=parallel.bucket_bytes, with_sq_norm=True)
+                    bucket_bytes=parallel.bucket_bytes, with_sq_norm=True,
+                    hierarchy=hier)
             synced, new_residual = compressed_psum_ef(
                 grads, residual, dp_axes, wire)
             return synced, new_residual, None
         if bucketed:
             synced, sq = bucketed_psum(grads, dp_axes, wire=wire,
                                        bucket_bytes=parallel.bucket_bytes,
-                                       mean=True, with_sq_norm=True)
+                                       mean=True, with_sq_norm=True,
+                                       hierarchy=hier)
             return synced, None, sq
         return compressed_psum(grads, dp_axes, wire, mean=True), None, None
 
@@ -643,11 +676,16 @@ def _make_dp_zero_train_step(model, optimizer, train_cfg: TrainConfig,
     residuals (and everything downstream) bitwise-equal to the
     all-reduce path."""
     from repro.core.compression import apply_error_feedback
-    from repro.distributed.bucketing import pack, plan_buckets
+    from repro.distributed.bucketing import (
+        hierarchical_psum_scatter,
+        pack,
+        plan_buckets,
+    )
 
     parallel = train_cfg.parallel
     use_ef = parallel.error_feedback
     n = _zero_checks(parallel, dp_axes, optimizer, bucketed, mesh)
+    hier = _hier_or_none(parallel, dp_axes, mesh, bucketed)
 
     def local_step(params, mstate, opt, batch, *extra):
         residual = extra[0] if use_ef else None
@@ -664,12 +702,18 @@ def _make_dp_zero_train_step(model, optimizer, train_cfg: TrainConfig,
             quant, new_residual = grads, None
         # shard-aligned plan: every bucket splits evenly across the ranks
         plan = plan_buckets(quant, parallel.bucket_bytes, wire, align=n)
-        g_shard = jnp.concatenate(
-            [jax.lax.psum_scatter(b, tuple(dp_axes), scatter_dimension=0,
-                                  tiled=True)
-             for b in pack(quant, plan)])
+        if hier is not None:
+            g_shard = jnp.concatenate(
+                [hierarchical_psum_scatter(b, hier)
+                 for b in pack(quant, plan)])
+        else:
+            g_shard = jnp.concatenate(
+                [jax.lax.psum_scatter(b, tuple(dp_axes),
+                                      scatter_dimension=0, tiled=True)
+                 for b in pack(quant, plan)])
         new_params, new_opt, opt_metrics, local_sq = _zero_sharded_update(
-            optimizer, plan, params, g_shard, opt, n, dp_axes, mesh, aux)
+            optimizer, plan, params, g_shard, opt, n, dp_axes, mesh, aux,
+            hier=hier)
         metrics["grad_sq_local"] = local_sq
         metrics = _zero_grad_norm(_pmean_metrics(metrics, dp_axes), n)
         metrics.update(opt_metrics)
@@ -702,12 +746,17 @@ def _make_dp_stream_train_step(model, optimizer, train_cfg: TrainConfig,
     (tests/test_lars_stream.py). Error feedback stays rank-local and
     full-tree, applied before packing, as in ``bucketed_psum_ef``."""
     from repro.core.compression import apply_error_feedback
-    from repro.distributed.bucketing import pack, plan_buckets
+    from repro.distributed.bucketing import (
+        hierarchical_psum,
+        pack,
+        plan_buckets,
+    )
 
     parallel = train_cfg.parallel
     use_ef = parallel.error_feedback
     _stream_checks(parallel, optimizer, bucketed)
     n = _static_dp_size(dp_axes, mesh)
+    hier = _hier_or_none(parallel, dp_axes, mesh, bucketed)
 
     def local_step(params, mstate, opt, batch, *extra):
         residual = extra[0] if use_ef else None
@@ -726,8 +775,12 @@ def _make_dp_stream_train_step(model, optimizer, train_cfg: TrainConfig,
         # but it gives every rank the same 1/N norm slices as the ZeRO
         # reduce-scatter would — the bitwise-parity contract above
         plan = plan_buckets(quant, parallel.bucket_bytes, wire, align=n)
-        synced = [jax.lax.psum(b, tuple(dp_axes))
-                  for b in pack(quant, plan)]
+        if hier is not None:
+            synced = [hierarchical_psum(b, hier)
+                      for b in pack(quant, plan)]
+        else:
+            synced = [jax.lax.psum(b, tuple(dp_axes))
+                      for b in pack(quant, plan)]
         g_stream = _cast_divide_stream(jnp.concatenate(synced), plan, n)
         new_params, new_opt, opt_metrics, local_sq = _stream_full_update(
             optimizer, plan, params, g_stream, opt, n, dp_axes, mesh, aux)
@@ -770,6 +823,8 @@ def make_dp_overlap_train_step(model, optimizer: Optimizer,
     """
     from repro.core.compression import apply_error_feedback
     from repro.distributed.bucketing import (
+        hierarchical_psum,
+        hierarchical_psum_scatter,
         pack_bucket,
         plan_ready_buckets,
         unpack,
@@ -799,6 +854,12 @@ def make_dp_overlap_train_step(model, optimizer: Optimizer,
         n_static = _static_dp_size(dp_axes, mesh)
     else:
         n_static = 1
+    hier = _hier_or_none(parallel, dp_axes, mesh, _bucketed)
+    # ZeRO/stream plans shard-align for scatter/trust slicing; a
+    # hierarchical plain plan aligns too, so every bucket splits over
+    # the inner axis (hier.n_workers == the static DP size)
+    plan_align = n_static if n_static > 1 else (
+        hier.n_workers if hier is not None else 1)
 
     def local_step(params, mstate, opt, batch, *extra):
         residual = extra[0] if use_ef else None
@@ -815,7 +876,7 @@ def make_dp_overlap_train_step(model, optimizer: Optimizer,
         # psum_scatter splits it evenly across ranks (DESIGN.md §9).
         plan = plan_ready_buckets(list(reversed(staged.seg_params)),
                                   parallel.bucket_bytes, wire,
-                                  align=n_static)
+                                  align=plan_align)
         res_rev = None
         if use_ef:
             local_residual = jax.tree.map(lambda x: x[0], residual)
@@ -848,12 +909,20 @@ def make_dp_overlap_train_step(model, optimizer: Optimizer,
             ready, pack_carry = pack_bucket(plan, ridx, g_seg, pack_carry)
             launched = []
             for b, arr in ready:
+                # with a hierarchy the whole two-level schedule launches
+                # here; the barrier pipeline pins only its completion,
+                # exactly as for the flat collective (DESIGN.md §14)
                 if use_zero:
-                    synced[b] = jax.lax.psum_scatter(
-                        arr, tuple(dp_axes), scatter_dimension=0,
-                        tiled=True)
+                    synced[b] = (
+                        hierarchical_psum_scatter(arr, hier)
+                        if hier is not None else
+                        jax.lax.psum_scatter(arr, tuple(dp_axes),
+                                             scatter_dimension=0,
+                                             tiled=True))
                 else:
-                    synced[b] = jax.lax.psum(arr, dp_axes)
+                    synced[b] = (hierarchical_psum(arr, hier)
+                                 if hier is not None else
+                                 jax.lax.psum(arr, dp_axes))
                 launched.append(b)
             pending.append(launched)
         assert len(synced) == plan.n_buckets, (len(synced), plan.n_buckets)
@@ -868,7 +937,7 @@ def make_dp_overlap_train_step(model, optimizer: Optimizer,
             new_param_rev, new_opt, opt_metrics, local_sq = \
                 _zero_sharded_update(optimizer, plan.base, param_rev,
                                      g_shard, opt, n_static, dp_axes,
-                                     mesh, aux)
+                                     mesh, aux, hier=hier)
             new_params = staged.merge_grads(
                 list(reversed(list(new_param_rev))))
             metrics["grad_sq_local"] = local_sq
@@ -925,7 +994,7 @@ def make_dp_overlap_train_step(model, optimizer: Optimizer,
             train_cfg.label_smoothing)
         param_rev = tuple(reversed(staged.seg_params))
         plan = plan_ready_buckets(list(param_rev), parallel.bucket_bytes,
-                                  wire, align=n_static).base
+                                  wire, align=plan_align).base
         return _stream_aux(optimizer, plan, param_rev, n_static, dp_axes,
                            sharded=use_zero)
 

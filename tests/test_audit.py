@@ -39,10 +39,15 @@ INFO = {"total_param_elems": 32794, "n_workers": 8,
 
 def test_mode_table_covers_claimed_matrix():
     assert set(MODES) == {"gspmd", "perleaf", "bucketed", "overlap",
-                          "zero", "zero_overlap"}
+                          "zero", "zero_overlap", "hier", "hier_overlap",
+                          "hier_zero", "hier_zero_overlap"}
     assert set(OPTIMIZERS) == {"sgd", "lars"}
     for spec in MODES.values():
         assert spec["compression"].startswith("f16")  # CPU-surviving wire
+    # every hierarchical cell lowers on the 2-axis hier mesh with a
+    # valid split; flat cells carry no hierarchy
+    for mode, spec in MODES.items():
+        assert (spec.get("hier") is not None) == mode.startswith("hier")
 
 
 def test_cell_expectations_bucketed_drops_tiny_tail():

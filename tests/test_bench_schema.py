@@ -192,9 +192,13 @@ def test_audit_json_covers_full_mode_matrix():
     cells = {(c["mode"], c["optimizer"]) for c in data["cells"]}
     want = {(m, o)
             for m in ("gspmd", "perleaf", "bucketed", "overlap", "zero",
-                      "zero_overlap")
+                      "zero_overlap", "hier", "hier_overlap",
+                      "hier_zero", "hier_zero_overlap")
             for o in ("sgd", "lars")}
     assert cells == want, f"AUDIT.json lost cells: {want - cells}"
+    # the hierarchical cells lower on their own 2-axis mesh
+    assert len(data["hier_mesh"]) == 2
+    assert all(s >= 2 for s in data["hier_mesh"])
 
 
 def test_audit_json_cell_schema():
@@ -271,3 +275,72 @@ def test_bench_resilience_json_recovery_contracts():
     assert sc["ckpt_corrupt"]["rollbacks"] >= 1
     assert sc["data_crash"]["events"].get("data_restart", 0) >= 1
     assert sc["straggler"]["events"].get("chaos_injected", 0) >= 1
+
+
+# ---------------------------------------------------------------------------
+# BENCH_comm.json (benchmarks/comm_bench.py sweep artifact, DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+COMM_TOP_FIELDS = ("bench", "devices", "mesh", "mesh_axes", "wire",
+                   "bucket_bytes", "sweep", "plan_path", "plan", "rows")
+
+COMM_ROW_FIELDS = ("arch", "mode", "wire", "bucket_mib", "hier_split",
+                   "leaves", "collectives_per_step", "mib_per_collective",
+                   "wire_dtypes", "ms_per_sync")
+
+COMM_PLAN_FIELDS = ("mesh_shape", "dp_axes", "sync_mode", "wire",
+                    "bucket_bytes", "hier_split", "source", "version")
+
+
+def _load_comm():
+    path = os.path.join(REPO, "BENCH_comm.json")
+    if not os.path.exists(path):
+        import pytest
+        pytest.skip("BENCH_comm.json not present (CI writes it right "
+                    "before running this guard)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_bench_comm_json_schema():
+    data = _load_comm()
+    assert data["bench"] == "comm_bench"
+    for top in COMM_TOP_FIELDS:
+        assert top in data, f"BENCH_comm.json lost top-level field {top!r}"
+    import math
+    assert math.prod(data["mesh"]) == data["devices"]
+    assert len(data["mesh"]) == len(data["mesh_axes"])
+    assert data["rows"], "sweep produced no rows"
+    for row in data["rows"]:
+        for field in COMM_ROW_FIELDS:
+            assert field in row, (row.get("mode"), field)
+        assert row["ms_per_sync"] > 0, row
+        assert row["collectives_per_step"] >= 1, row
+        # hierarchical rows carry their split; flat rows carry None
+        if row["mode"].startswith("hier"):
+            assert row["hier_split"] is not None, row
+        else:
+            assert row["hier_split"] is None, row
+
+
+def test_bench_comm_json_sweep_persists_winning_plan():
+    """A --sweep run must leave a loadable CommPlan whose schedule is
+    one of the swept rows — the artifact `--comm-plan auto` consumes."""
+    data = _load_comm()
+    if not data["sweep"]:
+        import pytest
+        pytest.skip("not a sweep artifact: no plan to check")
+    plan = data["plan"]
+    assert plan is not None, "sweep artifact lost the embedded plan"
+    for field in COMM_PLAN_FIELDS:
+        assert field in plan, field
+    assert plan["source"] == "autotuner"
+    assert list(plan["mesh_shape"]) == list(data["mesh"])
+    assert plan["bucket_bytes"] > 0
+    from repro.distributed.comm_plan import PLAN_VERSION, load_plan
+    assert plan["version"] == PLAN_VERSION
+    loaded = load_plan(os.path.join(REPO, data["plan_path"])
+                       if not os.path.isabs(data["plan_path"])
+                       else data["plan_path"])
+    assert loaded.sync_mode == plan["sync_mode"]
+    assert loaded.hier_split == plan["hier_split"]

@@ -514,3 +514,153 @@ def test_hlo_multipliers_invariant_under_computation_order(trip, perm):
     assert mult["cond.2"] == float(trip + 1)
     assert mult["add.1"] == float(trip)  # to_apply inside the loop body
     assert trips == {"body.3": trip}
+
+
+# ---------------------------------------------------------------------------
+# hierarchical collective routing (distributed/bucketing.py, DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+from repro.distributed.bucketing import (  # noqa: E402
+    inner_major_perm,
+    inner_major_unperm,
+)
+
+
+@given(st.integers(2, 5), st.integers(2, 5), st.integers(1, 7),
+       st.integers(0, 2 ** 16))
+def test_inner_major_perm_roundtrip(a, b, c, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(a * b * c), jnp.float32)
+    y = inner_major_unperm(inner_major_perm(x, a, b), a, b)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+@st.composite
+def hier_route_case(draw):
+    """An (outer=a, inner=b) factorization + per-worker exact-integer
+    streams: every reassociated fold of integers in [-64, 64] is exact
+    in f32, so any correct routing must match the flat reference
+    BITWISE (DESIGN.md §11 precedent: exactness pinned with
+    power-of-two-safe data, fuzzy parity left to the e2e tests)."""
+    a = draw(st.integers(2, 4))
+    b = draw(st.integers(2, 4))
+    c = draw(st.integers(1, 6))
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 16)))
+    bufs = [rng.integers(-64, 65, size=a * b * c).astype(np.float32)
+            for _ in range(a * b)]
+    return a, b, bufs
+
+
+def _np_flat_scatter(bufs, n):
+    """Flat reduce-scatter reference: worker w owns chunk w of the sum."""
+    tot = np.sum(bufs, axis=0)
+    c = tot.size // n
+    return [tot[w * c:(w + 1) * c] for w in range(n)]
+
+
+def _np_hier_scatter(bufs, a, b):
+    """Mirror hierarchical_psum_scatter's routing in numpy: inner-major
+    pre-permutation, reduce-scatter over the inner axis (sum worker
+    (o, *)'s group, keep chunk i), then over the outer axis (sum worker
+    (*, i)'s group, keep chunk o). Returned in linear-rank order
+    w = o*b + i — the row-major ``_dp_linear_index`` order the ZeRO
+    param slicing uses (training/step.py)."""
+    permed = [np.asarray(inner_major_perm(jnp.asarray(x), a, b))
+              for x in bufs]
+    ci = permed[0].size // b
+    shard1 = {}
+    for o in range(a):
+        g = np.sum([permed[o * b + i2] for i2 in range(b)], axis=0)
+        for i in range(b):
+            shard1[(o, i)] = g[i * ci:(i + 1) * ci]
+    co = ci // a
+    final = []
+    for o in range(a):
+        for i in range(b):
+            g = np.sum([shard1[(o2, i)] for o2 in range(a)], axis=0)
+            final.append(g[o * co:(o + 1) * co])
+    return final
+
+
+def _np_hier_gather(final, a, b):
+    """Mirror hierarchical_all_gather: all-gather over the outer axis
+    (concat the column's shards), then the inner axis, then undo the
+    inner-major permutation."""
+    g1 = [np.concatenate([final[o2 * b + i] for o2 in range(a)])
+          for i in range(b)]
+    g2 = np.concatenate(g1)
+    return np.asarray(inner_major_unperm(jnp.asarray(g2), a, b))
+
+
+@given(hier_route_case())
+@settings(max_examples=40)
+def test_hier_double_scatter_owns_flat_chunks(case):
+    """ZeRO shard ownership is hierarchy-invariant: the inner-major
+    pre-permutation makes the double reduce-scatter hand worker
+    w = o*inner + i exactly the chunk the flat reduce-scatter would —
+    so param slicing, weight-decay masks, and optimizer-state layout
+    (all keyed on ``_dp_linear_index``) need no changes under a
+    hierarchical schedule."""
+    a, b, bufs = case
+    flat = _np_flat_scatter(bufs, a * b)
+    hier = _np_hier_scatter(bufs, a, b)
+    for w, (f, h) in enumerate(zip(flat, hier)):
+        np.testing.assert_array_equal(f, h, err_msg=f"worker {w}")
+
+
+@given(hier_route_case())
+@settings(max_examples=40)
+def test_hier_scatter_gather_roundtrip_is_psum(case):
+    """Double-scatter then double-gather+unperm reconstructs the flat
+    psum bitwise on exact data — the RS->AR->AG pipeline is a
+    permutation-consistent psum, for every (a, b) factorization."""
+    a, b, bufs = case
+    full = _np_hier_gather(_np_hier_scatter(bufs, a, b), a, b)
+    np.testing.assert_array_equal(full, np.sum(bufs, axis=0))
+
+
+@st.composite
+def hier_plan_case(draw):
+    """A random gradient tree packed through a real BucketPlan, plus an
+    (a, b) hierarchy whose n_workers is the plan alignment. Leaf values
+    are powers of two so wire casts and sums stay exact."""
+    a = draw(st.integers(2, 3))
+    b = draw(st.integers(2, 4))
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 16)))
+    n_leaves = draw(st.integers(1, 5))
+    tree = {f"l{i}": jnp.asarray(
+        2.0 ** rng.integers(-3, 4, size=draw(st.integers(1, 40))),
+        jnp.float32) for i in range(n_leaves)}
+    bucket_bytes = draw(st.integers(8, 256))
+    return a, b, tree, bucket_bytes
+
+
+@given(hier_plan_case())
+@settings(max_examples=30)
+def test_hier_schedule_over_packed_stream_matches_flat(case):
+    """End-to-end over the real codec: pack per-worker trees with the
+    shard-aligned plan (align = a*b, what the hierarchical paths use),
+    route every bucket through the simulated double scatter + double
+    gather, unpack — and every leaf equals the flat elementwise sum
+    bitwise, for arbitrary plans, alignments and factorizations."""
+    a, b, tree, bucket_bytes = case
+    n = a * b
+    plan = plan_buckets(tree, bucket_bytes, None, align=n)
+    # per-worker variants: worker w's tree is w * tree (exact ints)
+    worker_bufs = {}
+    for w in range(n):
+        wt = jax.tree.map(lambda x: x * float(w + 1), tree)
+        worker_bufs[w] = [np.asarray(bk)
+                          for bk in pack(wt, plan, use_kernel=False)]
+    synced = []
+    for bi in range(plan.n_buckets):
+        bufs = [worker_bufs[w][bi] for w in range(n)]
+        assert bufs[0].size % n == 0  # plan alignment guarantees this
+        synced.append(_np_hier_gather(_np_hier_scatter(bufs, a, b),
+                                      a, b))
+    out = unpack([jnp.asarray(s) for s in synced], plan,
+                 use_kernel=False)
+    scale = float(sum(w + 1 for w in range(n)))
+    for k in tree:
+        np.testing.assert_array_equal(
+            np.asarray(out[k]), np.asarray(tree[k]) * scale, err_msg=k)
