@@ -1,0 +1,194 @@
+"""Input-pipeline benchmark: host feed throughput and boundedness.
+
+Measures the production input pipeline (DESIGN.md §15) in isolation:
+
+  workers       batches/sec of the multi-worker host feed at 1..N
+                producer threads. The step-claiming pool is
+                embarrassingly parallel across steps, but the synthetic
+                generator's per-sample Python loop holds the GIL, so on
+                this source aggregate throughput stays ~flat; the pool's
+                real win — overlapping host feed with device compute,
+                which releases the GIL — is measured end-to-end by the
+                data_starved_frac attribution in BENCH_step.json
+  host_shard    per-host generation cost when each host produces only
+                its 1/N slice of the global batch — the sharded source
+                does ~1/N the work, which is what keeps host feed time
+                flat as the paper's cluster scales to 1024 workers
+  transform     host-side augment+normalize (AugmentedSource, numpy)
+                vs the fused on-device Pallas pass per batch
+
+and writes a top-level ``BENCH_input.json`` (CI uploads it as an
+artifact; its schema is pinned by tests/test_bench_schema.py).
+
+    PYTHONPATH=src python benchmarks/input_bench.py [--quick] \
+        [--out BENCH_input.json]
+
+Host caveat: on this container the fused kernel runs in Pallas
+interpret mode (Python-executed kernel body), so ``transform.fused_ms``
+measures dispatch structure, not TPU kernel time; the kernel's
+correctness against ref.input_forward is what the test suite pins.
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.data.pipeline import AugmentedSource, DataPipeline  # noqa: E402
+from repro.data.synthetic import SyntheticImageData  # noqa: E402
+from repro.kernels import ops  # noqa: E402
+
+MEAN = (0.0, 0.0, 0.0)
+STD = (1.0, 1.0, 1.0)
+
+
+def _drain(pipe, n):
+    for _ in range(n):
+        next(pipe)
+
+
+def bench_workers(batch, image_size, iters, worker_counts):
+    src = SyntheticImageData(10, image_size, batch, seed=0)
+    out = {}
+    for w in worker_counts:
+        pipe = DataPipeline(src, num_workers=w, depth=max(4, 2 * w))
+        try:
+            _drain(pipe, 4)  # warm threads; fill then re-drain the buffer
+            # so the timed window measures steady-state producer rate,
+            # not a one-time drain of the prefilled ring
+            t0 = time.perf_counter()
+            _drain(pipe, iters)
+            dt = (time.perf_counter() - t0) / iters
+        finally:
+            pipe.close()
+        out[str(w)] = {"ms_per_batch": round(dt * 1e3, 3),
+                       "batches_per_s": round(1.0 / dt, 3)}
+        print(f"workers={w:<2} {dt * 1e3:8.1f} ms/batch "
+              f"{1.0 / dt:7.2f} batches/s", flush=True)
+    out["note"] = ("synthetic generation is GIL-bound Python, so thread "
+                   "workers do not raise aggregate host throughput here; "
+                   "their benefit is overlap with device compute — see "
+                   "data_starved_frac in BENCH_step.json")
+    return out
+
+
+def bench_host_shard(batch, image_size, iters, num_hosts):
+    def time_source(b, offset):
+        src = SyntheticImageData(10, image_size, b, seed=0,
+                                 sample_offset=offset)
+        src.batch_at(0)  # warm (templates already built in __init__)
+        t0 = time.perf_counter()
+        for i in range(iters):
+            src.batch_at(i)
+        return (time.perf_counter() - t0) / iters
+
+    full = time_source(batch, 0)
+    shard = time_source(batch // num_hosts, batch // num_hosts)
+    print(f"host shard: full {full * 1e3:.1f} ms, 1/{num_hosts} shard "
+          f"{shard * 1e3:.1f} ms", flush=True)
+    return {"num_hosts": num_hosts,
+            "global_ms_per_batch": round(full * 1e3, 3),
+            "shard_ms_per_batch": round(shard * 1e3, 3),
+            "shard_speedup": round(full / shard, 3)}
+
+
+def bench_transform(batch, image_size, iters):
+    src = SyntheticImageData(10, image_size, batch, seed=0)
+    aug = AugmentedSource(src, seed=0, mean=MEAN, std=STD,
+                          global_batch=batch)
+    aug.batch_at(0)
+    t0 = time.perf_counter()
+    for i in range(iters):
+        aug.batch_at(i)
+    host_full = (time.perf_counter() - t0) / iters
+    t0 = time.perf_counter()
+    for i in range(iters):
+        src.batch_at(i)
+    raw = (time.perf_counter() - t0) / iters
+    host_ms = max(0.0, host_full - raw)  # transform cost net of generation
+
+    x = jnp.asarray(src.batch_at(0)["images"])
+    mean = jnp.asarray(MEAN, jnp.float32)
+    inv = 1.0 / jnp.asarray(STD, jnp.float32)
+    params = ops.input_augment_params(0, 0, batch)
+
+    def fused(step_x):
+        return ops.fused_input_train(step_x, params, mean, inv,
+                                     out_dtype=jnp.bfloat16)
+
+    jax.block_until_ready(fused(x))  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fused(x))
+    fused_ms = (time.perf_counter() - t0) / iters
+    note = ("Pallas interpret mode on CPU: fused_ms measures dispatch, "
+            "not TPU kernel time"
+            if jax.default_backend() != "tpu" else "compiled TPU kernel")
+    print(f"transform: host {host_ms * 1e3:.1f} ms, fused "
+          f"{fused_ms * 1e3:.1f} ms ({note})", flush=True)
+    return {"host_aug_ms": round(host_ms * 1e3, 3),
+            "fused_ms": round(fused_ms * 1e3, 3),
+            "note": note}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--image-size", type=int, default=128,
+                    help="128 by default: large enough per-sample numpy "
+                         "work that generation releases the GIL and "
+                         "worker threads overlap (at toy 32px sizes the "
+                         "per-sample Python loop serializes on the GIL)")
+    ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--num-hosts", type=int, default=4)
+    ap.add_argument("--max-workers", type=int, default=4)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke settings (fewer iterations)")
+    ap.add_argument("--out", default="BENCH_input.json")
+    args = ap.parse_args()
+    if args.quick:
+        args.iters = min(args.iters, 6)
+
+    counts = [1]
+    w = 2
+    while w <= args.max_workers:
+        counts.append(w)
+        w *= 2
+    print(f"backend={jax.default_backend()} batch={args.batch} "
+          f"image={args.image_size} iters={args.iters}")
+    workers = bench_workers(args.batch, args.image_size, args.iters,
+                            counts)
+    best = max(counts)
+    result = {
+        "bench": "input_bench",
+        "backend": jax.default_backend(),
+        "devices": jax.device_count(),
+        "batch": args.batch,
+        "image_size": args.image_size,
+        "iters": args.iters,
+        "workers": workers,
+        "multi_worker_speedup": round(
+            workers["1"]["ms_per_batch"]
+            / workers[str(best)]["ms_per_batch"], 3),
+        "host_shard": bench_host_shard(args.batch, args.image_size,
+                                       args.iters, args.num_hosts),
+        "transform": bench_transform(args.batch, args.image_size,
+                                     max(3, args.iters // 2)),
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"multi-worker speedup {result['multi_worker_speedup']:.2f}x "
+          f"({best} workers) -> wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -44,6 +44,7 @@ from repro.configs import (  # noqa: E402
     get_config,
     reduced_config,
 )
+from repro.data.pipeline import DataPipeline  # noqa: E402
 from repro.launch.train import build_train_setup  # noqa: E402
 
 MODES = {
@@ -63,7 +64,8 @@ MODES = {
 
 
 def bench_mode(name: str, kw: dict, *, arch: str, global_batch: int,
-               bucket_bytes: int, iters: int, warmup: int) -> dict:
+               bucket_bytes: int, iters: int, warmup: int,
+               data_workers: int) -> dict:
     cfg = reduced_config(get_config(arch))
     mesh = jax.make_mesh((jax.device_count(), 1), ("data", "model"))
     model, state, step, data, put, _ = build_train_setup(
@@ -81,11 +83,32 @@ def bench_mode(name: str, kw: dict, *, arch: str, global_batch: int,
         state, metrics = step(state, dict(batch))
     jax.block_until_ready(metrics["loss"])
     dt = (time.perf_counter() - t0) / iters
+    # ---- input-boundedness attribution (DESIGN.md §15): re-run with the
+    # live multi-worker feed, splitting each step into time blocked on
+    # the prefetch buffer (data-starved) vs everything else
+    # (compute-bound). Per-step block_until_ready keeps the attribution
+    # honest — async dispatch would hide compute under the next wait.
+    pipe = DataPipeline(data, start_step=0, depth=4,
+                        num_workers=data_workers, put=put)
+    try:
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            _, fed = next(pipe)
+            state, metrics = step(state, fed)
+            jax.block_until_ready(metrics["loss"])
+        fed_dt = (time.perf_counter() - t0) / iters
+        wait_s = pipe.wait_s_total / iters
+    finally:
+        pipe.close()
     row = {"ms_per_step": round(dt * 1e3, 3),
            "steps_per_sec": round(1.0 / dt, 3),
-           "warmup_s": round(compile_s, 2)}
+           "warmup_s": round(compile_s, 2),
+           "data_wait_ms": round(wait_s * 1e3, 3),
+           "compute_ms": round((fed_dt - wait_s) * 1e3, 3),
+           "data_starved_frac": round(wait_s / fed_dt, 4)}
     print(f"{name:<20} {row['ms_per_step']:>9.1f} ms/step "
-          f"{row['steps_per_sec']:>8.2f} steps/s", flush=True)
+          f"{row['steps_per_sec']:>8.2f} steps/s  "
+          f"starved {row['data_starved_frac']:.1%}", flush=True)
     return row
 
 
@@ -98,6 +121,8 @@ def main():
                          "gradient tree still spans several buckets")
     ap.add_argument("--iters", type=int, default=20)
     ap.add_argument("--warmup", type=int, default=3)
+    ap.add_argument("--data-workers", type=int, default=2,
+                    help="producer threads for the attribution pass")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke settings (fewer iterations)")
     ap.add_argument("--out", default="BENCH_step.json")
@@ -113,7 +138,7 @@ def main():
         modes[name] = bench_mode(
             name, kw, arch=args.arch, global_batch=args.global_batch,
             bucket_bytes=args.bucket_kib * 1024, iters=args.iters,
-            warmup=args.warmup)
+            warmup=args.warmup, data_workers=args.data_workers)
 
     overlap_speedup = (modes["shardmap_bucketed"]["ms_per_step"]
                        / modes["shardmap_overlap"]["ms_per_step"])
@@ -127,6 +152,7 @@ def main():
         "global_batch": args.global_batch,
         "bucket_bytes": args.bucket_kib * 1024,
         "iters": args.iters,
+        "data_workers": args.data_workers,
         "modes": modes,
         "overlap_vs_bucketed_speedup": round(overlap_speedup, 3),
         "zero_vs_bucketed_speedup": round(zero_speedup, 3),

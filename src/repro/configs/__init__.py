@@ -1,5 +1,6 @@
 """Arch config registry. Importing this package registers every config."""
 from repro.configs.base import (  # noqa: F401
+    InputConfig,
     ModelConfig,
     OptimizerConfig,
     ParallelConfig,

@@ -329,9 +329,34 @@ class ParallelConfig:
 
 
 @dataclass(frozen=True)
+class InputConfig:
+    """Production input-pipeline knobs (DESIGN.md §15).
+
+    ``fused`` moves augmentation + normalize + compute-dtype cast into a
+    single on-device Pallas pass (kernels/fused_input.py) applied inside
+    the shard_map step; off, the same transform runs on the host feed
+    workers (pipeline.AugmentedSource) — the two paths are parity-tested
+    (tests/test_fused_input.py)."""
+
+    augment: bool = True  # per-sample flip + shift (crop proxy) on train
+    fused: bool = False  # on-device Pallas augment+normalize+cast
+    num_workers: int = 1  # host producer threads (--data-workers)
+    depth: int = 4  # reorder-buffer bound, steps ahead of consumer
+    device_ahead: int = 1  # steps staged on device past the current one
+    num_hosts: int = 1  # per-host input sharding (--host-shard h/N)
+    host_id: int = 0
+    max_shift: int = 4  # translation-augmentation radius, pixels
+    # ImageNet-style per-channel normalization (unit scale for the
+    # synthetic task, whose pixels are already ~N(0, 1))
+    mean: Tuple[float, float, float] = (0.0, 0.0, 0.0)
+    std: Tuple[float, float, float] = (1.0, 1.0, 1.0)
+
+
+@dataclass(frozen=True)
 class TrainConfig:
     optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
     parallel: ParallelConfig = field(default_factory=ParallelConfig)
+    input: Optional[InputConfig] = None  # None = seed-era raw feed
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"
     steps_per_epoch: int = 40  # ImageNet@32k: 1.28M/32768 = 40 (paper)

@@ -1,3 +1,8 @@
+from repro.data.pipeline import (  # noqa: F401
+    AugmentedSource,
+    DataPipeline,
+    StepStampSource,
+)
 from repro.data.synthetic import (  # noqa: F401
     Prefetcher,
     SyntheticImageData,

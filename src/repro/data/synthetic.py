@@ -1,9 +1,19 @@
 """Deterministic synthetic data pipelines.
 
-Determinism contract: batch(step) depends only on (seed, split, step) —
-this is what makes straggler backup-steps and elastic restarts possible:
-any host can regenerate any step's shard without coordination
-(DESIGN.md §5).
+Determinism contract (DESIGN.md §5/§15): every *sample* depends only on
+``(seed, split, step, global_index)`` — the batch is just a stack of
+independently keyed samples. This is what makes straggler backup-steps,
+elastic restarts AND per-host input sharding possible: any host can
+regenerate any contiguous slice of any step's batch without
+coordination, and the concatenation of the per-host shards is bitwise
+identical to the batch a single host would generate
+(tests/test_properties.py pins the partition/union/bitwise contract).
+
+Counter-based keying: each sample draws from its own
+``np.random.Generator(Philox(key=(mix(seed, split, step), index)))`` —
+the production analog of keying an augmentation RNG by record id, and
+the host analog of the fused input kernel's seed-per-step derivation
+(kernels/fused_input.py).
 
 Held-out split (DESIGN.md §7): every pipeline takes ``split`` — the
 train split draws from seed-space indices ``{base + step}``, the val
@@ -26,54 +36,98 @@ from repro.configs.base import ModelConfig, ShapeConfig
 
 SPLITS = ("train", "val")
 
+_MASK64 = (1 << 64) - 1
+
 
 def _split_index(split: str, step: int) -> int:
     """Disjoint seed-space offsets: train >= 0, val < 0."""
     return step if split == "train" else -(step + 1)
 
 
+def _sample_rng(mix: int, seed: int, idx: int, index: int):
+    """Counter-based per-sample generator: Philox keyed by
+    ``(mix(seed, split, step), global sample index)``. Two key words,
+    so the (seed, step) stream and the sample index are independent
+    axes — regenerating sample ``i`` never requires drawing samples
+    ``0..i-1`` first (the per-host shard contract)."""
+    k = np.uint64((seed * mix + idx) & _MASK64)
+    return np.random.Generator(
+        np.random.Philox(key=np.array([k, index & _MASK64],
+                                      dtype=np.uint64)))
+
+
+def _check_shard(batch: int, sample_offset: int) -> None:
+    if batch <= 0:
+        raise ValueError(f"per-host batch must be positive, got {batch}")
+    if sample_offset < 0:
+        raise ValueError(f"sample_offset must be >= 0, got {sample_offset}")
+
+
 class SyntheticLMData:
     """Language-model token stream with learnable structure (a noisy
-    copy/induction task) so loss curves are meaningful, not flat."""
+    copy/induction task) so loss curves are meaningful, not flat.
+
+    ``sample_offset``: index of this pipeline's first sample in the
+    *global* batch — a per-host shard generates only rows
+    ``[sample_offset, sample_offset + batch)`` of the global batch
+    (bitwise equal to that slice of a single-host pipeline)."""
+
+    _MIX = 1_000_003
 
     def __init__(self, cfg: ModelConfig, batch: int, seq_len: int,
                  seed: int = 0, structured: bool = True,
-                 split: str = "train"):
+                 split: str = "train", sample_offset: int = 0):
         assert split in SPLITS, split
+        _check_shard(batch, sample_offset)
         self.cfg = cfg
         self.batch = batch
         self.seq_len = seq_len
         self.seed = seed
         self.structured = structured
         self.split = split
+        self.sample_offset = sample_offset
 
     def batch_at(self, step: int) -> Dict[str, np.ndarray]:
         idx = _split_index(self.split, step)
-        rng = np.random.RandomState((self.seed * 1_000_003 + idx) %
-                                    (2 ** 31 - 1))
         v = self.cfg.vocab_size
         b, s = self.batch, self.seq_len
-        if self.structured:
-            period = 8
-            base = rng.randint(0, v, size=(b, period))
-            reps = int(np.ceil((s + 1) / period))
-            toks = np.tile(base, (1, reps))[:, :s + 1]
-            noise = rng.rand(b, s + 1) < 0.05
-            toks = np.where(noise, rng.randint(0, v, size=(b, s + 1)), toks)
-        else:
-            toks = rng.randint(0, v, size=(b, s + 1))
-        out: Dict[str, Any] = {
-            "tokens": toks[:, :-1].astype(np.int32),
-            "targets": toks[:, 1:].astype(np.int32),
-        }
+        toks = np.empty((b, s + 1), np.int32)
+        patches = frames = None
         if self.cfg.vision is not None:
-            out["patches"] = rng.randn(
-                b, self.cfg.vision.num_patches,
-                self.cfg.vision.patch_dim).astype(np.float32)
+            vf = self.cfg.vision
+            patches = np.empty((b, vf.num_patches, vf.patch_dim),
+                               np.float32)
         if self.cfg.audio is not None:
-            out["frames"] = rng.randn(
-                b, self.cfg.audio.num_frames,
-                self.cfg.audio.frame_dim).astype(np.float32)
+            af = self.cfg.audio
+            frames = np.empty((b, af.num_frames, af.frame_dim), np.float32)
+        for j in range(b):
+            rng = _sample_rng(self._MIX, self.seed, idx,
+                              self.sample_offset + j)
+            if self.structured:
+                period = 8
+                base = rng.integers(0, v, size=(period,))
+                reps = int(np.ceil((s + 1) / period))
+                row = np.tile(base, reps)[:s + 1]
+                noise = rng.random(s + 1) < 0.05
+                row = np.where(noise, rng.integers(0, v, size=(s + 1,)),
+                               row)
+            else:
+                row = rng.integers(0, v, size=(s + 1,))
+            toks[j] = row
+            if patches is not None:
+                patches[j] = rng.standard_normal(patches.shape[1:],
+                                                 dtype=np.float32)
+            if frames is not None:
+                frames[j] = rng.standard_normal(frames.shape[1:],
+                                                dtype=np.float32)
+        out: Dict[str, Any] = {
+            "tokens": np.ascontiguousarray(toks[:, :-1]),
+            "targets": np.ascontiguousarray(toks[:, 1:]),
+        }
+        if patches is not None:
+            out["patches"] = patches
+        if frames is not None:
+            out["frames"] = frames
         return out
 
 
@@ -83,18 +137,30 @@ class SyntheticImageData:
     the substrate for the paper-claims proxy experiment. ``noise``
     controls difficulty (SNR): the quickstart default memorizes in a few
     steps; the recipe/ablation proxies raise it so training is still in
-    progress at the schedule-transition epochs, like real ImageNet."""
+    progress at the schedule-transition epochs, like real ImageNet.
+
+    Allocation contract (tests/test_pipeline.py): ``batch_at`` fills one
+    preallocated float32 batch buffer in place — noise is generated
+    directly in float32 (``Generator.standard_normal(dtype=...)``) and
+    scaled/added with ``out=`` ufuncs, so peak host memory stays ~1x the
+    batch (the seed-era path materialized a float64 noise tensor and
+    then ``astype``-copied the summed image a second time)."""
+
+    _MIX = 7_000_003
 
     def __init__(self, num_classes: int, image_size: int, batch: int,
                  seed: int = 0, noise: float = 0.5,
-                 template_rank: int = 8, split: str = "train"):
+                 template_rank: int = 8, split: str = "train",
+                 sample_offset: int = 0):
         assert split in SPLITS, split
+        _check_shard(batch, sample_offset)
         self.num_classes = num_classes
         self.image_size = image_size
         self.batch = batch
         self.seed = seed
         self.noise = noise
         self.split = split
+        self.sample_offset = sample_offset
         rng = np.random.RandomState(seed)
         # low-rank smooth class templates (seed-only: shared across splits)
         r = template_rank
@@ -106,36 +172,63 @@ class SyntheticImageData:
 
     def batch_at(self, step: int) -> Dict[str, np.ndarray]:
         idx = _split_index(self.split, step)
-        rng = np.random.RandomState((self.seed * 7_000_003 + idx) %
-                                    (2 ** 31 - 1))
-        labels = rng.randint(0, self.num_classes, size=(self.batch,))
-        imgs = self.templates[labels] + self.noise * rng.randn(
-            self.batch, self.image_size, self.image_size, 3).astype(
-            np.float32)
-        return {"images": imgs.astype(np.float32),
-                "labels": labels.astype(np.int32)}
+        b, s = self.batch, self.image_size
+        labels = np.empty((b,), np.int32)
+        imgs = np.empty((b, s, s, 3), np.float32)
+        scale = np.float32(self.noise)
+        for j in range(b):
+            rng = _sample_rng(self._MIX, self.seed, idx,
+                              self.sample_offset + j)
+            lab = int(rng.integers(0, self.num_classes))
+            labels[j] = lab
+            out = imgs[j]
+            out[...] = self.templates[lab]
+            noise = rng.standard_normal((s, s, 3), dtype=np.float32)
+            np.multiply(noise, scale, out=noise)
+            np.add(out, noise, out=out)
+        return {"images": imgs, "labels": labels}
 
 
 def make_data(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0,
-              split: str = "train", noise: Optional[float] = None):
+              split: str = "train", noise: Optional[float] = None,
+              num_hosts: int = 1, host_id: int = 0):
+    """Build the pipeline for this host's shard of the global batch.
+
+    ``num_hosts``/``host_id`` select a per-host shard: host ``h``
+    generates only rows ``[h * B/N, (h+1) * B/N)`` of the global batch
+    (DESIGN.md §15). ``num_hosts=1`` (the default) is the full batch."""
+    if not 0 <= host_id < num_hosts:
+        raise ValueError(f"host_id {host_id} not in [0, {num_hosts})")
+    if shape.global_batch % num_hosts:
+        raise ValueError(
+            f"global batch {shape.global_batch} must divide evenly over "
+            f"{num_hosts} hosts")
+    per_host = shape.global_batch // num_hosts
+    offset = host_id * per_host
     if cfg.family == "conv":
         kw = {} if noise is None else {"noise": noise}
         return SyntheticImageData(cfg.num_classes, cfg.image_size,
-                                  shape.global_batch, seed, split=split,
-                                  **kw)
-    return SyntheticLMData(cfg, shape.global_batch, shape.seq_len, seed,
-                           split=split)
+                                  per_host, seed, split=split,
+                                  sample_offset=offset, **kw)
+    return SyntheticLMData(cfg, per_host, shape.seq_len, seed,
+                           split=split, sample_offset=offset)
 
 
 class Prefetcher:
-    """Double-buffered background prefetch of batch_at(step) results.
+    """Single-worker double-buffered prefetch of batch_at(step) results.
+
+    Legacy path — the production multi-worker pipeline is
+    ``repro.data.pipeline.DataPipeline`` (same contract, DESIGN.md §15).
 
     Failure contract: if ``batch_at`` or ``transform`` raises, the
     exception is captured and re-raised from the *consumer's* ``next()``
-    call (the daemon never dies silently, so ``__next__`` can't block
-    forever). ``close()`` is race-free against a concurrently blocked
-    ``next()``: consumers poll with a timeout and observe the closed
-    flag instead of parking indefinitely on ``Queue.get()``.
+    call exactly once (the daemon never dies silently, so ``__next__``
+    can't block forever); every subsequent ``next()`` raises
+    ``StopIteration`` — re-raising the same exception object repeatedly
+    would append a new traceback frame chain on every raise.
+    ``close()`` is race-free against a concurrently blocked ``next()``:
+    consumers poll with a timeout and observe the closed flag instead of
+    parking indefinitely on ``Queue.get()``.
     """
 
     _POLL_S = 0.1
@@ -147,6 +240,7 @@ class Prefetcher:
         self._q: "queue.Queue" = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
         self._error: Optional[BaseException] = None
+        self._raised = False
         self._step = start_step
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
@@ -177,8 +271,10 @@ class Prefetcher:
                 return self._q.get(timeout=self._POLL_S)
             except queue.Empty:
                 if self._error is not None:
-                    err = self._error
-                    raise err
+                    if self._raised:  # raise once, then StopIteration
+                        raise StopIteration
+                    self._raised = True
+                    raise self._error
                 if self._stop.is_set():
                     raise StopIteration
                 # daemon alive and healthy: keep waiting

@@ -1,0 +1,99 @@
+"""Fused input kernel: augment + normalize + cast in one device pass.
+
+DESIGN.md §15. The host feed ships raw uint8/f32 pixels; this kernel
+performs the whole per-sample input transform on device in a single
+VMEM-resident pass per image:
+
+  train: horizontal flip (Bernoulli) -> cyclic translation by
+         (dy, dx) in [-max_shift, max_shift] (the crop proxy: synthetic
+         templates are translation-structured, so a cyclic shift plays
+         the role random-resized-crop plays on real JPEGs)
+         -> per-channel ``(x - mean) * inv_std`` -> cast to compute dtype
+  eval:  normalize + cast only (no augmentation), matching the
+         deterministic center-crop eval convention.
+
+Unfused, these are three+ HBM round-trips (flip, roll, normalize/cast)
+over the largest tensor a ResNet step touches (B*224*224*3); fused they
+are one read + one write at the *compute* dtype, which also halves the
+H2D-adjacent HBM traffic when compute_dtype is bf16.
+
+Determinism: augmentation parameters are NOT drawn inside the kernel.
+They are derived from ``(seed, step)`` via the counter-based threefry
+stream in ops.input_augment_params — identical whether evaluated eagerly
+on host (the AugmentedSource reference path) or traced on device, so the
+fused and host paths consume bitwise-identical parameters and the
+transform itself is the only difference under test. Grid is one program
+per sample; each program reads its (4,) parameter row.
+
+CPU caveat: on this container the kernel runs in Pallas interpret mode
+(ops._interpret()); on TPU it compiles. Parity vs ref.input_forward is
+pinned in tests/test_fused_input.py for {f32, bf16} x {train, eval}.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _train_kernel(params_ref, mean_ref, inv_ref, x_ref, o_ref):
+    x = x_ref[0].astype(jnp.float32)  # (H, W, C)
+    p = params_ref[0]  # (4,) int32: [flip, dy, dx, reserved]
+    flipped = jnp.where(p[0] > 0, x[:, ::-1, :], x)
+    shifted = jnp.roll(flipped, (p[1], p[2]), axis=(0, 1))
+    y = (shifted - mean_ref[0]) * inv_ref[0]
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+def _eval_kernel(mean_ref, inv_ref, x_ref, o_ref):
+    x = x_ref[0].astype(jnp.float32)
+    y = (x - mean_ref[0]) * inv_ref[0]
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
+def fused_input_train(x, params, mean, inv_std, *, out_dtype,
+                      interpret=False):
+    """(B, H, W, C) raw pixels -> augmented/normalized ``out_dtype``.
+
+    ``params`` is (B, 4) int32 from ops.input_augment_params; ``mean``
+    and ``inv_std`` are (C,) f32 (inv_std precomputed so the kernel is
+    multiply-only on the hot path)."""
+    b, h, w, c = x.shape
+    mean = jnp.broadcast_to(mean.astype(jnp.float32), (1, c))
+    inv_std = jnp.broadcast_to(inv_std.astype(jnp.float32), (1, c))
+    return pl.pallas_call(
+        _train_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, 4), lambda i: (i, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+            pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, w, c), out_dtype),
+        interpret=interpret,
+    )(params.astype(jnp.int32), mean, inv_std, x)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
+def fused_input_eval(x, mean, inv_std, *, out_dtype, interpret=False):
+    """Eval variant: per-channel normalize + cast, no augmentation."""
+    b, h, w, c = x.shape
+    mean = jnp.broadcast_to(mean.astype(jnp.float32), (1, c))
+    inv_std = jnp.broadcast_to(inv_std.astype(jnp.float32), (1, c))
+    return pl.pallas_call(
+        _eval_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+            pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, w, c), out_dtype),
+        interpret=interpret,
+    )(mean, inv_std, x)

@@ -170,6 +170,46 @@ def fused_bn_apply(x, mean, var, scale, bias, *, residual=None,
 
 
 # ---------------------------------------------------------------------------
+# fused input (augment + normalize + cast, DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+
+def input_augment_params(seed, step, total, *, max_shift: int = 4):
+    """(total, 4) int32 per-sample augmentation parameters
+    ``[flip, dy, dx, reserved]`` for ``step``, derived from the
+    counter-based threefry stream keyed ``fold_in(PRNGKey(seed), step)``.
+
+    threefry is backend- and trace-invariant, so the host feed workers
+    (eager, pipeline.AugmentedSource) and the on-device fused path
+    (traced ``step`` inside the train step) draw bitwise-identical
+    parameters — but NOT prefix-stable across draw sizes, so ``total``
+    must always be the *global* batch; shards slice their rows.
+    ``step`` may be a traced scalar."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    kf, ks = jax.random.split(key)
+    flip = jax.random.bernoulli(kf, 0.5, (total,)).astype(jnp.int32)
+    shifts = jax.random.randint(ks, (total, 2), -max_shift, max_shift + 1,
+                                dtype=jnp.int32)
+    zeros = jnp.zeros((total, 1), jnp.int32)
+    return jnp.concatenate([flip[:, None], shifts, zeros], axis=1)
+
+
+def fused_input_train(x, params, mean, inv_std, *, out_dtype):
+    """One-pass augment+normalize+cast (train). See ref.input_forward."""
+    from repro.kernels import fused_input as _fi
+    return _fi.fused_input_train(x, params, mean, inv_std,
+                                 out_dtype=out_dtype,
+                                 interpret=_interpret())
+
+
+def fused_input_eval(x, mean, inv_std, *, out_dtype):
+    """Normalize+cast only (eval variant)."""
+    from repro.kernels import fused_input as _fi
+    return _fi.fused_input_eval(x, mean, inv_std, out_dtype=out_dtype,
+                                interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
 

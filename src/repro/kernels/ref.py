@@ -85,6 +85,23 @@ def bn_backward(x, y, mean, var, scale, dy, *, relu=False, eps=1e-5):
         dy32.astype(x.dtype)
 
 
+def input_forward(x, params, mean, std, *, train, out_dtype):
+    """Reference for the fused input kernel (kernels/fused_input.py):
+    per-sample flip + cyclic translation (train only) + per-channel
+    ``(x - mean) * (1/std)`` + cast, vmapped over the batch. Uses the
+    same op order as the kernel (subtract-then-multiply by the
+    precomputed reciprocal) so f32 parity is exact."""
+    x32 = x.astype(jnp.float32)
+    if train:
+        def one(img, p):
+            img = jnp.where(p[0] > 0, img[:, ::-1, :], img)
+            return jnp.roll(img, (p[1], p[2]), axis=(0, 1))
+        x32 = jax.vmap(one)(x32, params.astype(jnp.int32))
+    mean = jnp.asarray(mean, jnp.float32)
+    inv_std = 1.0 / jnp.asarray(std, jnp.float32)
+    return ((x32 - mean) * inv_std).astype(out_dtype)
+
+
 def hybrid_update(g, p, d, m, *, eta, alpha_sgd, mu1=0.9, mu2=0.99,
                   eps=1e-8, eta_rmsprop=3e-4, weight_decay=0.0):
     """Paper A.1 update, fp32 (the fused kernel's oracle)."""

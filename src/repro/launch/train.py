@@ -23,6 +23,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import (
+    InputConfig,
     OptimizerConfig,
     ParallelConfig,
     ShapeConfig,
@@ -30,7 +31,7 @@ from repro.configs import (
     get_config,
     reduced_config,
 )
-from repro.data import make_data
+from repro.data import AugmentedSource, StepStampSource, make_data
 from repro.distributed.sharding import make_rules, tree_shardings
 from repro.models import build_model, init_model_state
 from repro.models.common import unbox
@@ -65,13 +66,21 @@ def build_train_setup(cfg, *, global_batch: int, seq_len: int,
                       data_noise: Optional[float] = None,
                       sentinel: bool = False,
                       dp_axes=("data",),
-                      hier_split: Optional[int] = None):
+                      hier_split: Optional[int] = None,
+                      input_cfg: Optional[InputConfig] = None):
     """Returns (model, state, train_step, data, put_batch,
     state_shardings).
 
     ``data_noise``: difficulty of the synthetic image task (None = the
     pipeline default); the recipe/ablation proxies raise it so training
     is still in progress at the schedule-transition epochs.
+
+    ``input_cfg``: production input pipeline (DESIGN.md §15). Selects
+    this host's shard of the global batch (``num_hosts``/``host_id``),
+    turns on per-sample augmentation, and with ``fused=True`` moves
+    augment+normalize+cast onto the device as one Pallas pass inside
+    the shard_map local step (shard_map DP + conv only; the host
+    AugmentedSource path covers every other mode).
 
     ``sentinel``: wrap the train step with the divergence sentinel
     (resilience/sentinel.py, DESIGN.md §13) — the jitted step becomes
@@ -122,8 +131,22 @@ def build_train_setup(cfg, *, global_batch: int, seq_len: int,
         model = build_model(cfg, compute_dtype=compute_dtype,
                             attention_impl=attention_impl,
                             remat=cfg.n_layers > 8)
+    if input_cfg is not None and input_cfg.fused:
+        if cfg.family != "conv":
+            raise ValueError(
+                "fused input (Pallas augment+normalize+cast) transforms "
+                f"image batches; arch family {cfg.family!r} has none "
+                "(DESIGN.md §15)")
+        if dp_mode != "shardmap" or mesh is None:
+            raise ValueError(
+                "fused input slices per-worker augmentation parameters "
+                "with lax.axis_index, which only exists inside the "
+                "shard_map DP step (dp_mode='shardmap', DESIGN.md §15); "
+                "use the host AugmentedSource path (fused=False) "
+                "elsewhere")
     train_cfg = TrainConfig(optimizer=opt_cfg, parallel=parallel,
                             label_smoothing=label_smoothing,
+                            input=input_cfg,
                             # sentinel needs grad_norm as its whole-
                             # gradient health flag; GSPMD is the only
                             # mode where it is not already free
@@ -204,13 +227,18 @@ def build_train_setup(cfg, *, global_batch: int, seq_len: int,
                     for k, v in batch.items()}
 
         if dp_mode == "shardmap":
+            from repro.training.step import make_batch_input_transform
+            input_transform = make_batch_input_transform(
+                input_cfg, seed, model, mesh, parallel.dp_axes)
             if overlap_comm:
                 from repro.training.step import make_dp_overlap_train_step
                 step = make_dp_overlap_train_step(
-                    model, optimizer, train_cfg, mesh, parallel.dp_axes)
+                    model, optimizer, train_cfg, mesh, parallel.dp_axes,
+                    input_transform=input_transform)
             else:
                 step = make_dp_shardmap_train_step(
-                    model, optimizer, train_cfg, mesh, parallel.dp_axes)
+                    model, optimizer, train_cfg, mesh, parallel.dp_axes,
+                    input_transform=input_transform)
             train_step = _finalize_step(step)
         else:
             p_shard = tree_shardings(axes, mesh, rules)
@@ -228,13 +256,37 @@ def build_train_setup(cfg, *, global_batch: int, seq_len: int,
         step = make_train_step(model, optimizer, train_cfg)
         train_step = _finalize_step(step)
 
-    data = make_data(cfg, shape, seed=seed, noise=data_noise)
+    data = _wrap_train_source(
+        make_data(cfg, shape, seed=seed, noise=data_noise,
+                  num_hosts=input_cfg.num_hosts if input_cfg else 1,
+                  host_id=input_cfg.host_id if input_cfg else 0),
+        input_cfg, seed=seed, global_batch=global_batch,
+        is_conv=cfg.family == "conv")
     return model, state, train_step, data, put_batch, state_shardings
+
+
+def _wrap_train_source(data, input_cfg, *, seed, global_batch, is_conv):
+    """Apply the input pipeline's host-side wrappers (DESIGN.md §15):
+    fused -> stamp each batch with its step (the kernel's seed material);
+    host augmentation -> numpy mirror of the fused transform."""
+    if input_cfg is None or not is_conv:
+        return data
+    if input_cfg.fused:
+        return StepStampSource(data)
+    if input_cfg.augment:
+        return AugmentedSource(data, seed=seed, mean=input_cfg.mean,
+                               std=input_cfg.std,
+                               max_shift=input_cfg.max_shift, train=True,
+                               global_batch=global_batch)
+    return AugmentedSource(data, seed=seed, mean=input_cfg.mean,
+                           std=input_cfg.std, train=False,
+                           global_batch=global_batch)
 
 
 def build_eval_setup(model, cfg, *, global_batch: int, seq_len: int,
                      dp_mode: str = "gspmd", mesh=None, seed: int = 0,
-                     data_noise: Optional[float] = None):
+                     data_noise: Optional[float] = None,
+                     input_cfg: Optional[InputConfig] = None):
     """Validation pieces for ``Trainer``: (eval_step, val_data, finalize).
 
     The eval step is one plain-jit program for both execution modes
@@ -243,10 +295,20 @@ def build_eval_setup(model, cfg, *, global_batch: int, seq_len: int,
     paper's pre-validation all-reduce first, and either way the step
     sees worker-free statistics. ``val_data`` is the deterministic
     held-out split (seed-space disjoint from train by construction).
+
+    With ``input_cfg``, validation applies the eval input variant
+    (normalize+cast, no augmentation — DESIGN.md §15): on device via the
+    fused Pallas kernel when ``fused=True``, else on the host feed.
     """
     shape = ShapeConfig("val", seq_len, global_batch, "train")
     val_data = make_data(cfg, shape, seed=seed, split="val",
                          noise=data_noise)
+    fused_input = (input_cfg is not None and input_cfg.fused
+                   and cfg.family == "conv")
+    if input_cfg is not None and cfg.family == "conv" and not fused_input:
+        val_data = AugmentedSource(val_data, seed=seed,
+                                   mean=input_cfg.mean, std=input_cfg.std,
+                                   train=False, global_batch=global_batch)
     rules = None
     eval_mesh = None
     finalize = None
@@ -261,7 +323,22 @@ def build_eval_setup(model, cfg, *, global_batch: int, seq_len: int,
                                       zero_1=False)
             rules = make_rules(cfg, mesh, parallel)
             eval_mesh = mesh
-    eval_step = jax.jit(make_eval_step(model, mesh=eval_mesh, rules=rules))
+    base_eval = make_eval_step(model, mesh=eval_mesh, rules=rules)
+    if fused_input:
+        from repro.kernels import ops
+        mean = jnp.asarray(input_cfg.mean, jnp.float32)
+        inv_std = 1.0 / jnp.asarray(input_cfg.std, jnp.float32)
+        out_dtype = getattr(model, "compute_dtype", jnp.bfloat16)
+
+        def eval_with_input(params, model_state, batch):
+            batch = dict(batch)
+            batch["images"] = ops.fused_input_eval(
+                batch["images"], mean, inv_std, out_dtype=out_dtype)
+            return base_eval(params, model_state, batch)
+
+        eval_step = jax.jit(eval_with_input)
+    else:
+        eval_step = jax.jit(base_eval)
     return eval_step, val_data, finalize
 
 
@@ -325,6 +402,20 @@ def main():
                          "one-pass stats + normalize/ReLU/residual "
                          "epilogue + fused custom-VJP backward "
                          "(kernels/fused_bn.py, DESIGN.md §10)")
+    ap.add_argument("--data-workers", type=int, default=1,
+                    help="host input-producer threads feeding the "
+                         "step-ordered prefetch buffer (data/pipeline.py,"
+                         " DESIGN.md §15)")
+    ap.add_argument("--fused-input", action="store_true",
+                    help="one-pass Pallas augment+normalize+cast on "
+                         "device instead of the host feed "
+                         "(kernels/fused_input.py; shard_map DP + conv "
+                         "archs, DESIGN.md §15)")
+    ap.add_argument("--host-shard", default=None, metavar="H/N",
+                    help="per-host input sharding: this host generates "
+                         "only shard H of N of every global batch, e.g. "
+                         "0/4 (deterministic slice of the (seed, split, "
+                         "step) contract, DESIGN.md §15)")
     ap.add_argument("--sentinel", action="store_true",
                     help="divergence sentinel + recovery state machine: "
                          "skip non-finite/spiking steps in-jit, roll "
@@ -359,6 +450,18 @@ def main():
         mesh = jax.make_mesh((jax.device_count(), 1), ("data", "model"))
 
     opt_cfg = OptimizerConfig(kind=args.optimizer, schedule=args.schedule)
+    input_cfg = None
+    if args.fused_input or args.host_shard:
+        num_hosts, host_id = 1, 0
+        if args.host_shard:
+            try:
+                host_id, num_hosts = (int(x)
+                                      for x in args.host_shard.split("/"))
+            except ValueError:
+                ap.error("--host-shard expects H/N, e.g. 0/4")
+        input_cfg = InputConfig(fused=args.fused_input,
+                                num_workers=args.data_workers,
+                                num_hosts=num_hosts, host_id=host_id)
     # --comm-plan: resolve the collective schedule (DESIGN.md §14).
     # Grammar forms (flat / hier[:k]) only reschedule; a plan loaded
     # from disk (auto / path) carries the autotuner's full wire config.
@@ -404,7 +507,8 @@ def main():
             fused_bn=args.fused_bn,
             label_smoothing=args.label_smoothing,
             sentinel=args.sentinel,
-            dp_axes=dp_axes, hier_split=hier_split)
+            dp_axes=dp_axes, hier_split=hier_split,
+            input_cfg=input_cfg)
 
     metadata = {"arch": args.arch, "optimizer": args.optimizer,
                 "opt_layout": "zero_stream" if zero_dp else "tree"}
@@ -414,7 +518,7 @@ def main():
         eval_step, val_data, finalize = build_eval_setup(
             model, cfg, global_batch=args.global_batch,
             seq_len=args.seq_len, dp_mode=args.dp_mode, mesh=mesh,
-            seed=args.seed)
+            seed=args.seed, input_cfg=input_cfg)
         total_steps = args.epochs * args.steps_per_epoch
         tcfg = TrainerConfig(
             epochs=args.epochs, steps_per_epoch=args.steps_per_epoch,
@@ -422,6 +526,7 @@ def main():
             val_batches=args.val_batches,
             checkpoint_every=args.ckpt_every if args.ckpt_dir else 0,
             checkpoint_dir=args.ckpt_dir,
+            data_workers=args.data_workers,
             log_every=max(1, total_steps // 20))
         resilience = chaos = None
         if args.sentinel:
@@ -466,6 +571,7 @@ def main():
     loop_cfg = LoopConfig(total_steps=args.steps,
                           checkpoint_every=args.ckpt_every,
                           checkpoint_dir=args.ckpt_dir,
+                          data_workers=args.data_workers,
                           log_every=max(1, args.steps // 20))
     result = run_training(train_step, state, data, loop_cfg,
                           put_batch=put_batch, metadata=metadata,

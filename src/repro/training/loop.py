@@ -31,7 +31,7 @@ import numpy as np
 
 from repro.checkpoint import AsyncCheckpointer, list_checkpoints, restore
 from repro.checkpoint.checkpointer import BEST_DIR
-from repro.data.synthetic import Prefetcher
+from repro.data.pipeline import DataPipeline
 from repro.resilience.events import EventLog
 from repro.resilience.recovery import (Action, RecoveryManager,
                                        ResilienceConfig)
@@ -57,6 +57,12 @@ class TrainerConfig:
     # step time, it is logged as a straggler event; at cluster scale the
     # launcher uses this to trigger backup-step execution (DESIGN.md §5).
     deadline_factor: float = 3.0
+    # input pipeline (DESIGN.md §15): host producer threads, reorder-
+    # buffer bound, and how many steps to stage on device ahead of
+    # consumption (device staging needs put_batch)
+    data_workers: int = 1
+    prefetch_depth: int = 4
+    device_ahead: int = 1
 
 
 @dataclasses.dataclass
@@ -70,6 +76,10 @@ class TrainResult:
     # resilience event records (DESIGN.md §13): skipped steps, rollbacks,
     # chaos injections, corrupt checkpoints skipped on restore
     events: list = dataclasses.field(default_factory=list)
+    # input-boundedness attribution (DESIGN.md §15): total wall time,
+    # total time blocked on the input pipeline, and their ratio —
+    # ~0 means compute-bound, ~1 means data-starved
+    input_stats: Dict = dataclasses.field(default_factory=dict)
 
 
 class Trainer:
@@ -203,11 +213,22 @@ class Trainer:
                 "eval_history", []))
             best = manifest["metadata"].get("best")
 
-        prefetch = Prefetcher(train_source, start_step=start_step,
-                              transform=self.put_batch)
+        def make_pipeline(at_step):
+            # device staging rides the `put` stage (H2D one step ahead);
+            # host transforms (augmentation, chaos) live in the source
+            return DataPipeline(
+                train_source, start_step=at_step,
+                depth=cfg.prefetch_depth,
+                num_workers=cfg.data_workers,
+                put=self.put_batch,
+                device_ahead=cfg.device_ahead)
+
+        prefetch = make_pipeline(start_step)
         history = []
         straggler_events = []
         step_times = []
+        data_wait_total = 0.0
+        wall_total = 0.0
         last_saved = start_step if resumed_from is not None else -1
         try:
             # anchor checkpoint: rollback must always have a target, even
@@ -228,8 +249,8 @@ class Trainer:
                 try:                      # a straggling host looks like
                     got_step, batch = next(prefetch)
                 except Exception as exc:
-                    # a dead input worker (Prefetcher re-raises from the
-                    # consumer). With resilience: bounded pipeline
+                    # a dead input worker (the pipeline re-raises from
+                    # the consumer). With resilience: bounded pipeline
                     # restarts at the current step; without: propagate
                     # (the pre-existing error contract).
                     if manager is None or data_retries_left <= 0:
@@ -239,9 +260,9 @@ class Trainer:
                                 error=str(exc),
                                 retries_left=data_retries_left)
                     prefetch.close()
-                    prefetch = Prefetcher(train_source, start_step=step,
-                                          transform=self.put_batch)
+                    prefetch = make_pipeline(step)
                     continue
+                data_wait = getattr(prefetch, "last_wait_s", 0.0)
                 if got_step != step:
                     # a real error, not an assert: data/step misalignment
                     # silently trains on wrong batches under `python -O`
@@ -259,6 +280,8 @@ class Trainer:
                 if loss is not None:
                     loss = float(jax.device_get(loss))  # sync point
                 dt = time.perf_counter() - t0
+                data_wait_total += data_wait
+                wall_total += dt
                 step_times.append(dt)
                 med = float(np.median(step_times[-50:]))
                 if len(step_times) > 5 and dt > cfg.deadline_factor * med:
@@ -300,9 +323,7 @@ class Trainer:
                         history = [r for r in history
                                    if r["step"] < restored]
                         prefetch.close()
-                        prefetch = Prefetcher(train_source,
-                                              start_step=restored,
-                                              transform=self.put_batch)
+                        prefetch = make_pipeline(restored)
                         manager.on_rollback(from_step=step,
                                             to_step=restored)
                         last_saved = restored
@@ -320,7 +341,8 @@ class Trainer:
                                  and manager.consecutive_bad > 0)
 
                 if step % cfg.log_every == 0 or step == total_steps - 1:
-                    history.append({"step": step, "loss": loss, "time": dt})
+                    history.append({"step": step, "loss": loss,
+                                    "time": dt, "data_wait": data_wait})
 
                 done = step + 1
                 # ---- epoch boundary: the paper's eval path ----
@@ -370,11 +392,18 @@ class Trainer:
                 ckpt.wait()
             if events is not None:
                 events.close()
+        input_stats = {
+            "wall_s": wall_total,
+            "data_wait_s": data_wait_total,
+            "data_starved_frac": (data_wait_total / wall_total
+                                  if wall_total > 0 else 0.0),
+        }
         return TrainResult(state=state, history=history,
                            epoch_history=eval_history,
                            straggler_events=straggler_events,
                            resumed_from=resumed_from, best=best,
-                           events=list(events.records) if events else [])
+                           events=list(events.records) if events else [],
+                           input_stats=input_stats)
 
 
 # ---------------------------------------------------------------------------
@@ -390,6 +419,7 @@ class LoopConfig:
     keep_checkpoints: int = 3
     log_every: int = 10
     deadline_factor: float = 3.0
+    data_workers: int = 1
 
 
 @dataclasses.dataclass
@@ -417,7 +447,8 @@ def run_training(
         checkpoint_dir=loop_cfg.checkpoint_dir,
         keep_checkpoints=loop_cfg.keep_checkpoints,
         log_every=loop_cfg.log_every,
-        deadline_factor=loop_cfg.deadline_factor)
+        deadline_factor=loop_cfg.deadline_factor,
+        data_workers=loop_cfg.data_workers)
     result = Trainer(train_step, state, data, cfg, put_batch=put_batch,
                      metadata=metadata,
                      state_shardings=state_shardings).run()

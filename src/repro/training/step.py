@@ -289,7 +289,10 @@ def _wrap_dp_step(local_step, mesh: Mesh, dp_axes: Sequence[str],
             jax.tree.map(lambda _: P(), state["params"]),
             jax.tree.map(lambda _: state_spec, state["model_state"]),
             opt_spec_tree,
-            jax.tree.map(lambda _: batch_spec, batch),
+            # scalar batch leaves (the fused-input ``input_step`` stamp,
+            # DESIGN.md §15) have no batch dim to shard: replicate them
+            jax.tree.map(lambda x: batch_spec if jnp.ndim(x) else P(),
+                         batch),
         )
         out_specs = (
             jax.tree.map(lambda _: P(), state["params"]),
@@ -579,9 +582,59 @@ def _zero_grad_norm(metrics: Dict, n: int) -> Dict:
     return metrics
 
 
+def make_batch_input_transform(input_cfg, seed: int, model, mesh: Mesh,
+                               dp_axes: Sequence[str]):
+    """Per-worker fused input transform for the shard_map local steps
+    (DESIGN.md §15), or None when the fused path is off.
+
+    The returned callable runs *inside* shard_map on each worker's local
+    batch slice: it pops the ``input_step`` stamp (StepStampSource),
+    derives the global (B, 4) augmentation-parameter table from
+    ``(seed, step)`` — bitwise-identical to the host AugmentedSource
+    draw — takes this worker's row block by its DP linear rank (the same
+    rank order ``P(dp_axes)`` used to place the batch rows), and applies
+    the one-pass Pallas augment+normalize+cast kernel. It must hook the
+    local steps rather than the model because parameter slicing needs
+    ``lax.axis_index``, which only exists under shard_map (the overlap
+    mode's aux_builder calls ``loss_segments`` outside it)."""
+    if input_cfg is None or not input_cfg.fused:
+        return None
+    from repro.kernels import ops
+
+    compute_dtype = getattr(model, "compute_dtype", jnp.bfloat16)
+    n = _static_dp_size(dp_axes, mesh)
+    mean = jnp.asarray(input_cfg.mean, jnp.float32)
+    inv_std = 1.0 / jnp.asarray(input_cfg.std, jnp.float32)
+    augment = input_cfg.augment
+    max_shift = input_cfg.max_shift
+
+    def transform(batch):
+        batch = dict(batch)
+        step_no = batch.pop("input_step")
+        x = batch["images"]
+        b_local = x.shape[0]
+        if augment:
+            # total must be the *global* batch: threefry draws are not
+            # prefix-stable across sizes (ops.input_augment_params)
+            params = ops.input_augment_params(
+                seed, step_no, b_local * n, max_shift=max_shift)
+            w = _dp_linear_index(dp_axes, mesh)
+            mine = jax.lax.dynamic_slice(
+                params, (w * b_local, 0), (b_local, 4))
+            batch["images"] = ops.fused_input_train(
+                x, mine, mean, inv_std, out_dtype=compute_dtype)
+        else:
+            batch["images"] = ops.fused_input_eval(
+                x, mean, inv_std, out_dtype=compute_dtype)
+        return batch
+
+    return transform
+
+
 def make_dp_shardmap_train_step(model, optimizer: Optimizer,
                                 train_cfg: TrainConfig, mesh: Mesh,
-                                dp_axes: Sequence[str]):
+                                dp_axes: Sequence[str],
+                                input_transform=None):
     """Synchronous data-parallel step exactly as the paper's system:
     per-worker forward/backward, **half-precision all-reduce of
     gradients**, replicated optimizer update. Model must be pure-DP
@@ -608,13 +661,15 @@ def make_dp_shardmap_train_step(model, optimizer: Optimizer,
 
     if parallel.zero_dp:
         return _make_dp_zero_train_step(model, optimizer, train_cfg, mesh,
-                                        dp_axes, wire, bucketed)
+                                        dp_axes, wire, bucketed,
+                                        input_transform=input_transform)
     if hasattr(optimizer, "update_shard"):
         # non-zero packed-stream optimizer (stream-LARS): replicated
         # update over the full synced stream, shard-decomposed trust
         # norms (DESIGN.md §11)
         return _make_dp_stream_train_step(model, optimizer, train_cfg,
-                                          mesh, dp_axes, wire, bucketed)
+                                          mesh, dp_axes, wire, bucketed,
+                                          input_transform=input_transform)
     hier = _hier_or_none(parallel, dp_axes, mesh, bucketed)
 
     def sync_grads(grads, residual):
@@ -641,6 +696,8 @@ def make_dp_shardmap_train_step(model, optimizer: Optimizer,
         return compressed_psum(grads, dp_axes, wire, mean=True), None, None
 
     def local_step(params, mstate, opt, batch, residual=None):
+        if input_transform is not None:
+            batch = input_transform(batch)
         # mstate leaves carry a leading per-worker dim (1, ...) locally
         local_mstate = jax.tree.map(lambda x: x[0], mstate)
         (loss, (new_mstate, metrics)), grads = jax.value_and_grad(
@@ -667,7 +724,7 @@ def make_dp_shardmap_train_step(model, optimizer: Optimizer,
 
 def _make_dp_zero_train_step(model, optimizer, train_cfg: TrainConfig,
                              mesh: Mesh, dp_axes: Sequence[str],
-                             wire, bucketed: bool):
+                             wire, bucketed: bool, input_transform=None):
     """ZeRO variant of the plain bucketed DP step (DESIGN.md §9):
     pack -> psum_scatter per bucket -> sharded optimizer update on the
     owned stream shard -> all-gather the updated param slices -> unpack.
@@ -690,6 +747,8 @@ def _make_dp_zero_train_step(model, optimizer, train_cfg: TrainConfig,
     def local_step(params, mstate, opt, batch, *extra):
         residual = extra[0] if use_ef else None
         aux = extra[-1]
+        if input_transform is not None:
+            batch = input_transform(batch)
         local_mstate = jax.tree.map(lambda x: x[0], mstate)
         (loss, (new_mstate, metrics)), grads = jax.value_and_grad(
             model.loss_fn, has_aux=True)(params, local_mstate, batch,
@@ -737,7 +796,7 @@ def _make_dp_zero_train_step(model, optimizer, train_cfg: TrainConfig,
 
 def _make_dp_stream_train_step(model, optimizer, train_cfg: TrainConfig,
                                mesh: Mesh, dp_axes: Sequence[str],
-                               wire, bucketed: bool):
+                               wire, bucketed: bool, input_transform=None):
     """Non-zero packed-stream variant of the plain bucketed DP step
     (stream-LARS, DESIGN.md §11): pack -> psum per bucket -> replicated
     update over the full fp32 stream, with the LARS trust norms reduced
@@ -761,6 +820,8 @@ def _make_dp_stream_train_step(model, optimizer, train_cfg: TrainConfig,
     def local_step(params, mstate, opt, batch, *extra):
         residual = extra[0] if use_ef else None
         aux = extra[-1]
+        if input_transform is not None:
+            batch = input_transform(batch)
         local_mstate = jax.tree.map(lambda x: x[0], mstate)
         (loss, (new_mstate, metrics)), grads = jax.value_and_grad(
             model.loss_fn, has_aux=True)(params, local_mstate, batch,
@@ -805,7 +866,8 @@ def _make_dp_stream_train_step(model, optimizer, train_cfg: TrainConfig,
 
 def make_dp_overlap_train_step(model, optimizer: Optimizer,
                                train_cfg: TrainConfig, mesh: Mesh,
-                               dp_axes: Sequence[str]):
+                               dp_axes: Sequence[str],
+                               input_transform=None):
     """Backward-overlapped bucketed DP step (DESIGN.md §8).
 
     Same contract and bitwise-identical numerics as
@@ -864,6 +926,8 @@ def make_dp_overlap_train_step(model, optimizer: Optimizer,
     def local_step(params, mstate, opt, batch, *extra):
         residual = extra[0] if use_ef else None
         aux = extra[-1] if use_stream else None
+        if input_transform is not None:
+            batch = input_transform(batch)
         local_mstate = jax.tree.map(lambda x: x[0], mstate)
         staged = model.loss_segments(params, local_mstate, batch,
                                      train_cfg.label_smoothing)

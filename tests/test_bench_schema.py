@@ -20,10 +20,14 @@ EXPECTED_MODES = (
     "shardmap_zero_overlap",
 )
 
-MODE_FIELDS = ("ms_per_step", "steps_per_sec", "warmup_s")
+MODE_FIELDS = ("ms_per_step", "steps_per_sec", "warmup_s", "compute_ms")
+
+# input-boundedness attribution (DESIGN.md §15): legitimately 0.0 when
+# the feed never starves the step, so guarded as >= 0 rather than > 0
+MODE_WAIT_FIELDS = ("data_wait_ms", "data_starved_frac")
 
 TOP_FIELDS = ("bench", "devices", "backend", "arch", "global_batch",
-              "bucket_bytes", "iters", "modes",
+              "bucket_bytes", "iters", "data_workers", "modes",
               "overlap_vs_bucketed_speedup", "zero_vs_bucketed_speedup")
 
 
@@ -48,7 +52,13 @@ def test_bench_step_json_mode_fields_and_types():
             assert field in row, (mode, field)
             assert isinstance(row[field], (int, float)), (mode, field)
             assert row[field] > 0, (mode, field, row[field])
+        for field in MODE_WAIT_FIELDS:
+            assert field in row, (mode, field)
+            assert isinstance(row[field], (int, float)), (mode, field)
+            assert row[field] >= 0, (mode, field, row[field])
+        assert row["data_starved_frac"] <= 1.0, mode
     assert isinstance(data["devices"], int) and data["devices"] >= 1
+    assert isinstance(data["data_workers"], int) and data["data_workers"] >= 1
 
 
 def test_bench_step_json_speedups_consistent_with_modes():
@@ -60,6 +70,63 @@ def test_bench_step_json_speedups_consistent_with_modes():
     want = round(modes["shardmap_bucketed"]["ms_per_step"]
                  / modes["shardmap_overlap"]["ms_per_step"], 3)
     assert abs(data["overlap_vs_bucketed_speedup"] - want) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# BENCH_input.json (benchmarks/input_bench.py, DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+INPUT_TOP_FIELDS = ("bench", "backend", "devices", "batch", "image_size",
+                    "iters", "workers", "multi_worker_speedup",
+                    "host_shard", "transform")
+
+INPUT_WORKER_FIELDS = ("ms_per_batch", "batches_per_s")
+
+INPUT_SHARD_FIELDS = ("num_hosts", "global_ms_per_batch",
+                      "shard_ms_per_batch", "shard_speedup")
+
+
+def _load_input():
+    with open(os.path.join(REPO, "BENCH_input.json")) as f:
+        return json.load(f)
+
+
+def test_bench_input_json_schema():
+    data = _load_input()
+    assert data["bench"] == "input_bench"
+    for top in INPUT_TOP_FIELDS:
+        assert top in data, f"BENCH_input.json lost top-level field {top!r}"
+    counts = [k for k in data["workers"] if k != "note"]
+    assert "1" in counts, "single-thread baseline row missing"
+    assert len(counts) >= 2, "need at least one multi-worker row"
+    for k in counts:
+        row = data["workers"][k]
+        for field in INPUT_WORKER_FIELDS:
+            assert field in row, (k, field)
+            assert row[field] > 0, (k, field, row[field])
+    assert data["workers"]["note"], \
+        "GIL-bound-source caveat must stay documented"
+    assert data["multi_worker_speedup"] > 0
+
+
+def test_bench_input_json_host_shard_does_fractional_work():
+    """The per-host sharded source must actually generate ~1/N the
+    batch — the property that keeps host feed time flat at scale."""
+    shard = _load_input()["host_shard"]
+    for field in INPUT_SHARD_FIELDS:
+        assert field in shard, field
+    assert shard["num_hosts"] >= 2
+    assert shard["shard_ms_per_batch"] < shard["global_ms_per_batch"]
+    assert shard["shard_speedup"] > 1.5
+
+
+def test_bench_input_json_transform_rows():
+    tr = _load_input()["transform"]
+    for field in ("host_aug_ms", "fused_ms", "note"):
+        assert field in tr, field
+    assert tr["host_aug_ms"] >= 0
+    assert tr["fused_ms"] > 0
+    assert tr["note"], "interpret-mode caveat must stay documented"
 
 
 # ---------------------------------------------------------------------------

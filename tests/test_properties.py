@@ -664,3 +664,79 @@ def test_hier_schedule_over_packed_stream_matches_flat(case):
     for k in tree:
         np.testing.assert_array_equal(
             np.asarray(out[k]), np.asarray(tree[k]) * scale, err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# per-host input sharding (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+from repro.data.pipeline import DataPipeline  # noqa: E402
+from repro.data.synthetic import (  # noqa: E402
+    SyntheticImageData,
+    SyntheticLMData,
+)
+from repro.configs import get_config, reduced_config  # noqa: E402
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(0, 200),
+       st.sampled_from([2, 4, 8]), st.sampled_from(["train", "val"]))
+@settings(max_examples=15)
+def test_image_host_shards_partition_global_batch(seed, step, hosts,
+                                                  split):
+    """The concatenation of per-host shard batches is bitwise equal to
+    the single-host global batch — every sample is generated, exactly
+    once, by exactly one host, for any (seed, step, split)."""
+    batch, size, classes = 8, 8, 4
+    full = SyntheticImageData(classes, size, batch, seed=seed,
+                              split=split).batch_at(step)
+    per = batch // hosts
+    shards = [SyntheticImageData(classes, size, per, seed=seed,
+                                 split=split,
+                                 sample_offset=h * per).batch_at(step)
+              for h in range(hosts)]
+    np.testing.assert_array_equal(
+        np.concatenate([s["images"] for s in shards]), full["images"])
+    np.testing.assert_array_equal(
+        np.concatenate([s["labels"] for s in shards]), full["labels"])
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(0, 200),
+       st.sampled_from([2, 4]), st.sampled_from(["train", "val"]))
+@settings(max_examples=10)
+def test_lm_host_shards_partition_global_batch(seed, step, hosts, split):
+    cfg = reduced_config(get_config("llama3.2-1b"))
+    batch, seq = 4, 8
+    full = SyntheticLMData(cfg, batch, seq, seed=seed,
+                           split=split).batch_at(step)
+    per = batch // hosts
+    shards = [SyntheticLMData(cfg, per, seq, seed=seed, split=split,
+                              sample_offset=h * per).batch_at(step)
+              for h in range(hosts)]
+    for k in full:
+        np.testing.assert_array_equal(
+            np.concatenate([s[k] for s in shards]), full[k], err_msg=k)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(0, 50),
+       st.integers(1, 3))
+@settings(max_examples=10)
+def test_pipeline_restart_regenerates_bitwise(seed, start, workers):
+    """(seed, split, step, host) fully determines the stream: a
+    pipeline torn down and rebuilt at an arbitrary start step delivers
+    bitwise-identical batches — the contract rollback recovery and
+    elastic restarts lean on."""
+    src = SyntheticImageData(4, 8, 4, seed=seed)
+    p1 = DataPipeline(src, start_step=start, num_workers=workers)
+    try:
+        first = [next(p1) for _ in range(3)]
+    finally:
+        p1.close()
+    p2 = DataPipeline(src, start_step=start, num_workers=1)
+    try:
+        again = [next(p2) for _ in range(3)]
+    finally:
+        p2.close()
+    for (s1, b1), (s2, b2) in zip(first, again):
+        assert s1 == s2
+        for k in b1:
+            np.testing.assert_array_equal(b1[k], b2[k], err_msg=str(s1))

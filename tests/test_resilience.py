@@ -516,8 +516,10 @@ def test_step_misalignment_raises_runtime_error(sent, monkeypatch):
     import repro.training.loop as loop_mod
 
     class _Skewed:
-        def __init__(self, source, start_step=0, depth=2, transform=None):
+        def __init__(self, source, start_step=0, depth=2, transform=None,
+                     num_workers=1, put=None, device_ahead=1):
             self._step = start_step
+            self.last_wait_s = 0.0
 
         def __next__(self):
             return self._step + 1, None  # off by one
@@ -525,7 +527,7 @@ def test_step_misalignment_raises_runtime_error(sent, monkeypatch):
         def close(self):
             pass
 
-    monkeypatch.setattr(loop_mod, "Prefetcher", _Skewed)
+    monkeypatch.setattr(loop_mod, "DataPipeline", _Skewed)
     tcfg = TrainerConfig(epochs=1, steps_per_epoch=4,
                          eval_every_epochs=0, val_batches=0,
                          checkpoint_every=0, log_every=1)
